@@ -1,0 +1,61 @@
+"""Server aggregation throughput: RBLA vs zero-padding vs FedAvg, pure-jnp
+core vs the Pallas kernel (interpret mode on CPU -- relative numbers
+document the harness; absolute TPU numbers require hardware).
+
+The paper motivates RBLA partly by zero-padding's wasted compute on
+structural zeros; this bench quantifies server-side aggregation cost per
+round as adapter stacks grow.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregate, stacked_rank_masks
+from repro.kernels import rbla_agg
+
+CASES = [
+    # (n_clients, r_max, fan_in, n_tensors)
+    (10, 64, 1024, 8),
+    (10, 128, 4096, 8),
+    (32, 64, 1024, 8),
+]
+
+
+def bench(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def main():
+    rng = np.random.default_rng(0)
+    for n, r, d, nt in CASES:
+        ranks = jnp.asarray(rng.integers(1, r + 1, n), jnp.int32)
+        masks = stacked_rank_masks(r, ranks)[:, :, None]
+        tree = {f"t{i}": jnp.asarray(
+            rng.normal(size=(n, r, d)), jnp.float32) * masks
+            for i in range(nt)}
+        mtree = {f"t{i}": masks for i in range(nt)}
+        w = jnp.ones(n)
+
+        for method in ("rbla", "zeropad", "fedavg"):
+            f = jax.jit(lambda t, m, w, meth=method: aggregate(
+                t, m, w, method=meth))
+            us = bench(f, tree, mtree, w)
+            print(f"agg/{method}/n{n}_r{r}_d{d}x{nt},{us:.0f},core-jnp")
+
+        x0 = tree["t0"]
+        us = bench(lambda x: rbla_agg(x, ranks, w, interpret=True), x0)
+        print(f"agg/rbla_kernel/n{n}_r{r}_d{d}x1,{us:.0f},"
+              "pallas-interpret")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md SSRoofline).
+
+Reads benchmarks/artifacts/dryrun/*.json and renders the per-(arch x shape)
+three-term roofline with the dominant bottleneck and useful-FLOPs ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load(mesh: str = "pod1", tag: str = "") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*_{mesh}*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("tag", "") != tag or r["mesh"] != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_row(r: dict) -> str:
+    if "skipped" in r:
+        return (f"| {r['arch']} | {r['shape']} | - | - | - | - | skipped |"
+                f" {r['skipped'][:40]}... |")
+    rf = r["roofline"]
+    dom = rf["dominant"]
+    return ("| {arch} | {shape} | {c:.3f} | {m:.3f} | {x:.3f} | {dom} | "
+            "{ratio:.3f} | {mem:.1f} GB |".format(
+                arch=r["arch"], shape=r["shape"], c=rf["compute_s"],
+                m=rf["memory_s"], x=rf["collective_s"], dom=dom,
+                ratio=rf["useful_flops_ratio"],
+                mem=(r.get("memory_analysis", {}).get(
+                    "argument_size_in_bytes", 0) +
+                    r.get("memory_analysis", {}).get(
+                        "temp_size_in_bytes", 0)) / 1e9))
+
+
+def main(mesh: str = "pod1", tag: str = "") -> None:
+    recs = load(mesh, tag)
+    print(f"# Roofline ({mesh}, {len(recs)} combos"
+          + (f", tag={tag}" if tag else "") + ")")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant"
+          " | useful_ratio | dev mem |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        print(fmt_row(r))
+    # CSV for run.py harness: name,us_per_call,derived
+    for r in recs:
+        if "skipped" in r:
+            continue
+        rf = r["roofline"]
+        step = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        print(f"roofline/{r['arch']}/{r['shape']}/{mesh},"
+              f"{step * 1e6:.1f},dominant={rf['dominant']}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(*(sys.argv[1:] or ["pod1"]))

@@ -1,0 +1,86 @@
+"""Paper Table 1: rounds-to-target-accuracy per aggregation method.
+
+Synthetic analogues of the paper's six dataset x model columns, full
+participation, seed 42.  Targets are chosen per dataset (see
+EXPERIMENTS.md SSRepro for the mapping to the paper's targets).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.fl import FLConfig, run_simulation
+
+# lr 0.05: full fine-tune diverges at 0.1 under the staircase non-IID
+# (the paper used 0.01 with more rounds; 0.05 is the stable compromise at
+# our reduced round budget)
+COLUMNS = [
+    # (dataset, model, optimizer, lr, target_acc)
+    ("mnist", "mlp", "sgd", 0.05, 0.90),
+    ("fmnist", "mlp", "sgd", 0.05, 0.70),
+    ("mnist", "cnn_mnist", "sgd", 0.05, 0.90),
+    ("fmnist", "cnn_mnist", "sgd", 0.05, 0.75),
+    ("cifar", "cnn_cifar", "adam", 1e-3, 0.50),
+    ("cinic", "cnn_cifar", "adam", 1e-3, 0.40),
+]
+
+METHODS = ["zeropad", "fft", "rbla"]
+EXTRA_METHODS = ["rbla_ranked", "rbla_norm"]          # beyond-paper
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def run(columns, methods, rounds, n_per_class, participation=1.0,
+        verbose=False, out_path=None):
+    results = {}
+    for dataset, model, opt, lr, target in columns:
+        for method in methods:
+            cfg = FLConfig(dataset=dataset, model=model, method=method,
+                           optimizer=opt, lr=lr, rounds=rounds,
+                           n_per_class=n_per_class,
+                           n_test_per_class=max(50, n_per_class // 4),
+                           local_epochs=2, participation=participation,
+                           seed=42)
+            t0 = time.time()
+            hist = run_simulation(cfg, verbose=verbose)
+            r2t = hist.rounds_to_target(target)
+            best = max(hist.test_acc)
+            key = f"{dataset}/{model}/{method}"
+            results[key] = {
+                "rounds_to_target": r2t, "target": target,
+                "best_acc": best, "final_acc": hist.test_acc[-1],
+                "curve": hist.test_acc, "wall_s": time.time() - t0,
+            }
+            if out_path:           # incremental write (long CPU runs)
+                with open(out_path, "w") as f:
+                    json.dump(results, f, indent=1)
+            print(f"table1/{key},{(time.time()-t0)*1e6/max(rounds,1):.0f},"
+                  f"rounds_to_{target:.0%}="
+                  f"{r2t if r2t else f'N/A(best={best:.4f})'}")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=25)
+    ap.add_argument("--n-per-class", type=int, default=300)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale: 50 rounds, all six columns")
+    ap.add_argument("--columns", type=int, default=2,
+                    help="how many dataset columns (CNNs are slow on CPU)")
+    ap.add_argument("--extra", action="store_true",
+                    help="include beyond-paper aggregation variants")
+    args = ap.parse_args()
+
+    columns = COLUMNS if args.full else COLUMNS[: args.columns]
+    rounds = 50 if args.full else args.rounds
+    methods = METHODS + (EXTRA_METHODS if args.extra else [])
+    os.makedirs(ART, exist_ok=True)
+    run(columns, methods, rounds, args.n_per_class,
+        out_path=os.path.join(ART, "table1.json"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Heterogeneous ranks under the hood: Alg. 2 slicing, delta masks, and the
+difference between zero-padding and RBLA on a single adapter -- then the
+same aggregation as a distributed shard_map psum on 8 simulated devices.
+
+    PYTHONPATH=src python examples/heterogeneous_ranks.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import (aggregate, rbla_leaf, stacked_rank_masks,
+                        zeropad_leaf)
+from repro.core.distributed import make_distributed_aggregator
+from repro.lora import init_pair, set_ranks, pair_masks
+
+R_MAX, FAN_IN, FAN_OUT = 8, 16, 12
+N_CLIENTS = 8
+
+print("== Alg. 2: clients slice the server adapter to their rank ==")
+server_pair = init_pair(jax.random.PRNGKey(0), FAN_OUT, FAN_IN, R_MAX,
+                        R_MAX)
+for rank in (2, 5, 8):
+    client = set_ranks(server_pair, rank)
+    live_rows = int((np.abs(np.asarray(client["A"])).sum(-1) > 0).sum())
+    print(f"  client rank {rank}: live A rows = {live_rows}/{R_MAX}")
+
+print("\n== zero-padding dilution vs RBLA preservation (paper Sec. 3) ==")
+rng = np.random.default_rng(42)
+ranks = jnp.asarray(rng.integers(1, R_MAX + 1, N_CLIENTS), jnp.int32)
+masks = stacked_rank_masks(R_MAX, ranks)[:, :, None]
+stacked = jnp.asarray(rng.normal(size=(N_CLIENTS, R_MAX, FAN_IN)),
+                      jnp.float32) * masks + masks  # mean ~1 on live rows
+w = jnp.ones(N_CLIENTS)
+zp = zeropad_leaf(stacked, masks, w)
+rb = rbla_leaf(stacked, masks, w)
+owners = np.asarray(masks[:, :, 0]).sum(0)
+for row in range(R_MAX):
+    print(f"  row {row}: owners={int(owners[row])}  "
+          f"|zp|={float(jnp.abs(zp[row]).mean()):.3f}  "
+          f"|rbla|={float(jnp.abs(rb[row]).mean()):.3f}")
+print("  (zero-padding shrinks scarce rows by owners/n; RBLA does not)")
+
+print("\n== the same aggregation as a pod-level collective ==")
+mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(8), ("clients",))
+agg = make_distributed_aggregator(mesh, client_axis="clients")
+sh = NamedSharding(mesh, P("clients"))
+out = agg(jax.device_put(stacked, sh),
+          jax.device_put(jnp.broadcast_to(masks, stacked.shape), sh),
+          jax.device_put(w, sh))
+np.testing.assert_allclose(np.asarray(out), np.asarray(rb), rtol=1e-5,
+                           atol=1e-6)
+print(f"  masked-psum over {len(jax.devices())} devices matches the "
+      "host result (max |diff| = "
+      f"{float(jnp.abs(out - rb).max()):.2e})")

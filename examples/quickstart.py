@@ -1,0 +1,21 @@
+"""Quickstart: 6 rounds of heterogeneous-rank LoRA federated learning with
+RBLA aggregation on a synthetic MNIST analogue.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.fl import FLConfig, run_simulation
+
+cfg = FLConfig(
+    dataset="mnist", model="mlp",
+    method="rbla",              # try: "zeropad", "fft", "rbla_norm"
+    rounds=6, n_clients=10,
+    n_per_class=200, n_test_per_class=50,
+    local_epochs=2, lr=0.05,
+    r_max=64,                   # client i gets rank ~ r_max * 0.1 * |labels|
+    seed=42,
+)
+
+if __name__ == "__main__":
+    hist = run_simulation(cfg, verbose=True)
+    print("\nper-round test accuracy:",
+          " ".join(f"{a:.3f}" for a in hist.test_acc))

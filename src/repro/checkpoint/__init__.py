@@ -1,0 +1,3 @@
+from .io import restore, save
+
+__all__ = ["restore", "save"]

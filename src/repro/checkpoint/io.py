@@ -1,0 +1,72 @@
+"""Pytree checkpointing: msgpack index + raw .npy payloads.
+
+No orbax in the container; this is a compact, dependency-light format that
+round-trips nested dicts/tuples/lists of jax/numpy arrays and python
+scalars, with optional sharding-aware restore (arrays are placed with
+``jax.device_put`` against a provided sharding tree).
+"""
+from __future__ import annotations
+
+import io
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+_KIND_ARRAY = 0
+_KIND_SCALAR = 1
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(path: str, tree: PyTree) -> None:
+    os.makedirs(path, exist_ok=True)
+    paths, leaves, _ = _flatten_with_paths(tree)
+    index = []
+    with open(os.path.join(path, "data.bin"), "wb") as f:
+        for p, leaf in zip(paths, leaves):
+            arr = np.asarray(leaf)
+            buf = io.BytesIO()
+            np.save(buf, arr, allow_pickle=False)
+            raw = buf.getvalue()
+            index.append({"path": p, "offset": f.tell(), "size": len(raw),
+                          "kind": _KIND_ARRAY})
+            f.write(raw)
+    with open(os.path.join(path, "index.msgpack"), "wb") as f:
+        f.write(msgpack.packb({"leaves": index}))
+
+
+def restore(path: str, like: PyTree, shardings: PyTree | None = None
+            ) -> PyTree:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    with open(os.path.join(path, "index.msgpack"), "rb") as f:
+        index = msgpack.unpackb(f.read())["leaves"]
+    by_path = {e["path"]: e for e in index}
+    paths, leaves, treedef = _flatten_with_paths(like)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    with open(os.path.join(path, "data.bin"), "rb") as f:
+        for p, leaf, shard in zip(paths, leaves, shard_leaves):
+            e = by_path[p]
+            f.seek(e["offset"])
+            arr = np.load(io.BytesIO(f.read(e["size"])),
+                          allow_pickle=False)
+            want = np.asarray(leaf)
+            if arr.shape != want.shape:
+                raise ValueError(f"{p}: shape {arr.shape} != {want.shape}")
+            arr = arr.astype(want.dtype)
+            out.append(jax.device_put(arr, shard) if shard is not None
+                       else jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,122 @@
+"""Server-side aggregation strategies (the paper's core contribution).
+
+Three strategies from the paper:
+
+* ``rbla``      -- Rank-Based LoRA Aggregation (Eq. 7 / Alg. 1): per
+                   rank-row weighted average over the clients that *own*
+                   the row; unique high-rank rows are preserved verbatim.
+* ``zeropad``   -- the HetLoRA-style baseline (paper Eq. 1-5): pad to
+                   r_max, plain weighted average; missing rows dilute
+                   toward zero.
+* ``fedavg``    -- plain weighted mean, used for non-LoRA leaves and for
+                   the FFT (full fine-tune) baseline.
+
+All functions are pure, jit-able, and operate either on a single stacked
+leaf ``(n_clients, *leaf_shape)`` or on whole pytrees of stacked leaves.
+Masks carry the delta_{i,r} indicator (see ``masks.py``); a mask of ``None``
+means "fully shared leaf" (bias, norm scale, full weight).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+_EPS = 1e-12
+
+
+def _bcast_weights(weights: Array, ndim: int) -> Array:
+    """Reshape (n,) client weights to broadcast against (n, *leaf)."""
+    return weights.reshape(weights.shape + (1,) * (ndim - 1))
+
+
+def fedavg_leaf(stacked: Array, weights: Array) -> Array:
+    """Plain weighted mean over the client axis (axis 0)."""
+    w = _bcast_weights(weights.astype(jnp.float32), stacked.ndim)
+    num = jnp.sum(w * stacked.astype(jnp.float32), axis=0)
+    den = jnp.sum(weights.astype(jnp.float32))
+    return (num / (den + _EPS)).astype(stacked.dtype)
+
+
+def zeropad_leaf(stacked: Array, mask: Array | None, weights: Array) -> Array:
+    """Zero-padding baseline: mask the values (zeros beyond each client's
+    rank) but normalize by the *total* weight mass -- this is exactly the
+    dilution the paper criticizes (Eq. 3/5)."""
+    x = stacked.astype(jnp.float32)
+    if mask is not None:
+        x = x * mask.astype(jnp.float32)
+    w = _bcast_weights(weights.astype(jnp.float32), stacked.ndim)
+    num = jnp.sum(w * x, axis=0)
+    den = jnp.sum(weights.astype(jnp.float32))
+    return (num / (den + _EPS)).astype(stacked.dtype)
+
+
+def rbla_leaf(stacked: Array, mask: Array | None, weights: Array,
+              prev: Array | None = None) -> Array:
+    """RBLA (paper Eq. 7): per-element masked weighted average.
+
+        C_r = sum_i delta_ir w_i A_ir / sum_i delta_ir w_i
+
+    Where no participating client owns a row (denominator 0) the output is
+    ``prev`` (the current server value) when given, else 0.  Retaining the
+    previous value matters under partial participation: a round whose
+    sampled clients are all low-rank must not wipe the high-rank rows the
+    server already holds -- the paper's "preserve unique layers" principle
+    extended to the random-selection setting (paper Figs. 5-10 right).
+    """
+    x = stacked.astype(jnp.float32)
+    w = _bcast_weights(weights.astype(jnp.float32), stacked.ndim)
+    if mask is None:
+        m = jnp.ones_like(x)
+    else:
+        m = jnp.broadcast_to(mask.astype(jnp.float32), x.shape)
+    num = jnp.sum(w * m * x, axis=0)
+    den = jnp.sum(w * m, axis=0)
+    fallback = (jnp.zeros_like(num) if prev is None
+                else prev.astype(jnp.float32))
+    return jnp.where(den > 0, num / (den + _EPS),
+                     fallback).astype(stacked.dtype)
+
+
+AGGREGATORS: dict[str, Callable[..., Array]] = {
+    "rbla": rbla_leaf,
+    "zeropad": zeropad_leaf,
+}
+
+
+def aggregate(stacked_tree: PyTree, mask_tree: PyTree, weights: Array,
+              method: str = "rbla", prev_tree: PyTree | None = None
+              ) -> PyTree:
+    """Aggregate a pytree of stacked client leaves.
+
+    ``stacked_tree`` leaves are ``(n_clients, *shape)``; ``mask_tree`` has
+    the same structure with leaves that broadcast against them (or ``None``
+    for fully-shared leaves -- encode None as a 0-d ones array if the tree
+    library would prune it).  ``prev_tree`` (rbla only): the server's
+    current values, retained for rows no participant owns.
+    """
+    if method == "fedavg":
+        return jax.tree.map(lambda x: fedavg_leaf(x, weights), stacked_tree)
+    try:
+        fn = AGGREGATORS[method]
+    except KeyError:
+        raise ValueError(f"unknown aggregation method {method!r}; "
+                         f"options: {sorted(AGGREGATORS)} + ['fedavg']")
+    if method == "rbla" and prev_tree is not None:
+        return jax.tree.map(
+            lambda x, m, p: fn(
+                x, None if (m is not None and m.ndim == 0) else m,
+                weights, p),
+            stacked_tree, mask_tree, prev_tree,
+            is_leaf=lambda v: v is None,
+        )
+    return jax.tree.map(
+        lambda x, m: fn(x, None if (m is not None and m.ndim == 0) else m,
+                        weights),
+        stacked_tree, mask_tree,
+        is_leaf=lambda v: v is None,
+    )

@@ -1,0 +1,65 @@
+"""Rank-row indicator masks (the paper's delta function, Eq. 6).
+
+The paper carries heterogeneous-rank LoRA adapters as ragged matrices and
+defines, for every "layer" (rank-row) ``r`` of the padded adapter,
+
+    delta_{i,r} = 1  if client i's adapter contains row r  (r < rank_i)
+                  0  otherwise.
+
+On TPU we need static shapes, so adapters are always stored padded to
+``r_max`` and the raggedness lives in these masks.  Masks are computed with
+``lax.broadcasted_iota`` so they trace cleanly under jit/pjit with traced
+``rank`` scalars.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+
+def rank_mask(r_max: int, rank: Array | int, dtype=jnp.float32) -> Array:
+    """``(r_max,)`` vector: 1.0 for rows < rank, 0.0 beyond (delta_{i,r})."""
+    iota = lax.iota(jnp.int32, r_max)
+    return (iota < jnp.asarray(rank, jnp.int32)).astype(dtype)
+
+
+def axis_mask(shape: tuple[int, ...], axis: int, rank: Array | int,
+              dtype=jnp.float32) -> Array:
+    """Broadcastable mask of ``shape`` that is 1 where ``index[axis] < rank``.
+
+    Used to mask a padded adapter along its rank axis: for LoRA ``A`` of
+    shape ``(r_max, fan_in)`` the rank axis is 0, for ``B`` of shape
+    ``(fan_out, r_max)`` it is 1 (or -1).
+    """
+    axis = axis % len(shape)
+    iota = lax.broadcasted_iota(jnp.int32, shape, axis)
+    return (iota < jnp.asarray(rank, jnp.int32)).astype(dtype)
+
+
+def stacked_rank_masks(r_max: int, ranks: Array, dtype=jnp.float32) -> Array:
+    """``(n_clients, r_max)`` matrix of delta_{i,r} for stacked clients."""
+    ranks = jnp.asarray(ranks, jnp.int32)
+    iota = lax.iota(jnp.int32, r_max)[None, :]
+    return (iota < ranks[:, None]).astype(dtype)
+
+
+def pad_to_rank(x: Array, axis: int, r_max: int) -> Array:
+    """Zero-pad ``x`` along ``axis`` up to size ``r_max`` (static shapes)."""
+    axis = axis % x.ndim
+    cur = x.shape[axis]
+    if cur > r_max:
+        raise ValueError(f"cannot pad axis of size {cur} down to {r_max}")
+    if cur == r_max:
+        return x
+    pads = [(0, 0, 0)] * x.ndim
+    pads[axis] = (0, r_max - cur, 0)
+    return lax.pad(x, jnp.zeros((), x.dtype), pads)
+
+
+def slice_to_rank(x: Array, axis: int, rank: int) -> Array:
+    """Client-side Alg. 2: extract the leading ``rank`` rows along ``axis``."""
+    axis = axis % x.ndim
+    return lax.slice_in_dim(x, 0, rank, axis=axis)

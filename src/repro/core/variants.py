@@ -1,0 +1,90 @@
+"""Beyond-paper aggregation variants.
+
+The paper's RBLA is the baseline we reproduce faithfully in
+``aggregation.py``.  These variants push further; each is benchmarked
+against RBLA in ``benchmarks/bench_table1.py`` and reported separately in
+EXPERIMENTS.md (paper-faithful vs beyond-paper).
+
+* ``rbla_ranked``   -- RBLA with rank-proportional client weights
+                       (HetLoRA-flavoured: clients that trained more rows
+                       carry more mass on the rows everyone shares).
+* ``rbla_norm``     -- RBLA + per-row update-norm preservation: after the
+                       masked mean, rescale each rank-row so its L2 norm
+                       equals the weighted mean of the contributing rows'
+                       norms (counters the norm shrinkage of averaging
+                       near-orthogonal client updates).
+* ``svd_project``   -- product-space aggregation: average the full updates
+                       Delta_i = B_i @ A_i (no dilution: products are
+                       already dense), then truncated-SVD back to rank
+                       r_max factors.  Mathematically the strongest, but
+                       O(m n min(m,n)) server cost -- the cost/quality
+                       trade-off vs RBLA is part of the evaluation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .aggregation import rbla_leaf, _EPS
+
+Array = jax.Array
+
+
+def rank_proportional_weights(weights: Array, ranks: Array,
+                              alpha: float = 1.0) -> Array:
+    """w_i <- w_i * (rank_i / r_max)^alpha, renormalized."""
+    ranks = ranks.astype(jnp.float32)
+    scaled = weights.astype(jnp.float32) * (ranks / jnp.max(ranks)) ** alpha
+    return scaled * (jnp.sum(weights) / (jnp.sum(scaled) + _EPS))
+
+
+def rbla_norm_leaf(stacked: Array, mask: Array | None, weights: Array,
+                   row_axis: int = 0) -> Array:
+    """RBLA then per-row norm restoration along ``row_axis``.
+
+    Averaging K near-orthogonal unit rows shrinks the result's norm by
+    ~1/sqrt(K); this variant undoes that shrinkage so the aggregated
+    adapter keeps the clients' update magnitude.
+    """
+    agg = rbla_leaf(stacked, mask, weights).astype(jnp.float32)
+    x = stacked.astype(jnp.float32)
+    m = jnp.ones_like(x) if mask is None else jnp.broadcast_to(
+        mask.astype(jnp.float32), x.shape)
+    leaf_row_axis = row_axis % agg.ndim           # row axis within the leaf
+    # axes of `stacked` to reduce when computing a row norm
+    reduce_axes = tuple(a for a in range(1, x.ndim) if a != leaf_row_axis + 1)
+    row_norms = jnp.sqrt(jnp.sum((m * x) ** 2, axis=reduce_axes))  # (n, rows)
+    # per-(client,row) participation: does client i own row r at all?
+    owns = (jnp.max(m, axis=reduce_axes) > 0).astype(jnp.float32)  # (n, rows)
+    w_rows = owns * weights.astype(jnp.float32)[:, None]
+    target = jnp.sum(w_rows * row_norms, axis=0) / (
+        jnp.sum(w_rows, axis=0) + _EPS)                            # (rows,)
+    agg_norms = jnp.sqrt(jnp.sum(
+        agg ** 2, axis=tuple(a - 1 for a in reduce_axes)))         # (rows,)
+    scale = jnp.where(agg_norms > _EPS, target / (agg_norms + _EPS), 1.0)
+    shape = [1] * agg.ndim
+    shape[leaf_row_axis] = agg.shape[leaf_row_axis]
+    return (agg * scale.reshape(shape)).astype(stacked.dtype)
+
+
+def svd_project_pair(stacked_B: Array, stacked_A: Array, ranks: Array,
+                     weights: Array, r_out: int,
+                     scales: Array | None = None) -> tuple[Array, Array]:
+    """Aggregate LoRA pairs in product space, refactor via truncated SVD.
+
+    stacked_B: (n, out, r_max); stacked_A: (n, r_max, in).  Row-masking is
+    implicit: padded rows are zero so they contribute nothing to B_i @ A_i.
+    Returns (B, A) with inner dimension ``r_out``.
+    """
+    w = weights.astype(jnp.float32)
+    if scales is not None:
+        w = w * scales.astype(jnp.float32)
+    delta = jnp.einsum("nor,nri->oi", stacked_B.astype(jnp.float32) *
+                       w[:, None, None] / (jnp.sum(weights) + _EPS),
+                       stacked_A.astype(jnp.float32))
+    u, s, vt = jnp.linalg.svd(delta, full_matrices=False)
+    u, s, vt = u[:, :r_out], s[:r_out], vt[:r_out, :]
+    sq = jnp.sqrt(s)
+    B = (u * sq[None, :]).astype(stacked_B.dtype)
+    A = (sq[:, None] * vt).astype(stacked_A.dtype)
+    return B, A

@@ -1,0 +1,32 @@
+"""Batching pipeline: deterministic, jit-friendly batch index sampling.
+
+Client datasets are padded to a common length (see ``partition``); batches
+are drawn by sampling indices < n_true with a folded-in PRNG key, so one
+compiled ``local_fit`` serves every client regardless of dataset size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sample_batch_indices(key: jax.Array, n_true: jax.Array, batch: int,
+                         n_steps: int) -> jax.Array:
+    """(n_steps, batch) int32 indices uniform in [0, n_true)."""
+    u = jax.random.uniform(key, (n_steps, batch))
+    return (u * jnp.maximum(n_true, 1).astype(jnp.float32)).astype(jnp.int32)
+
+
+def epoch_batches(n: int, batch: int, seed: int) -> np.ndarray:
+    """Host-side shuffled epoch index matrix (n_batches, batch)."""
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n)
+    n_batches = n // batch
+    return idx[: n_batches * batch].reshape(n_batches, batch)
+
+
+def device_batches(x: np.ndarray, y: np.ndarray, batch: int, seed: int):
+    """Simple epoch iterator used by examples and eval loops."""
+    for ix in epoch_batches(len(x), batch, seed):
+        yield jnp.asarray(x[ix]), jnp.asarray(y[ix])

@@ -1,0 +1,111 @@
+"""Client-side local fine-tuning (paper Alg. 2).
+
+One jitted ``local_fit`` is compiled per (model, optimizer, shapes) and
+reused across every client and round: client datasets are padded to a
+common length and batches are index-sampled below the true count, so rank
+and data size are *values*, not shapes.
+
+Two modes:
+* ``lora`` -- base dense kernels frozen; trainable = LoRA adapters + all
+  non-LoRA'd base params (biases, convs, norms).  This is the paper's
+  ZP/RBLA client.
+* ``fft``  -- full fine-tune of every parameter (the FFT baseline).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import sample_batch_indices
+from repro.lora import attach_ranks, mask_adapters, strip_ranks
+from repro.optim import Optimizer, apply_updates
+
+Array = jax.Array
+PyTree = Any
+
+
+def split_base_params(params: dict, lora_specs) -> tuple[dict, dict]:
+    """-> (frozen, trainable).  Freeze the 'w' of every LoRA'd dense."""
+    frozen, trainable = {}, {}
+    for k, v in params.items():
+        if k in lora_specs:
+            frozen[k] = {"w": v["w"]}
+            rest = {kk: vv for kk, vv in v.items() if kk != "w"}
+            if rest:
+                trainable[k] = rest
+        else:
+            trainable[k] = v
+    return frozen, trainable
+
+
+def merge_base_params(frozen: dict, trainable: dict) -> dict:
+    out = {}
+    for k in set(frozen) | set(trainable):
+        sub = {}
+        sub.update(frozen.get(k, {}))
+        sub.update(trainable.get(k, {}))
+        out[k] = sub
+    return out
+
+
+def softmax_xent(logits: Array, labels: Array) -> Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None],
+                                         axis=-1))
+
+
+class LocalFitResult(NamedTuple):
+    adapters: PyTree           # updated adapters (lora mode) or None-like
+    base_trainable: PyTree     # updated trainable base params
+    loss: Array                # mean loss over local steps
+
+
+def make_local_fit(model, optimizer: Optimizer, batch_size: int,
+                   n_steps: int, mode: str = "lora",
+                   alpha: float = 16.0) -> Callable[..., LocalFitResult]:
+    """Compile the client update. Signature of the returned fn:
+
+        local_fit(frozen_base, base_trainable, adapters, x, y, n_true, key)
+    """
+    if mode not in ("lora", "fft"):
+        raise ValueError(mode)
+
+    def loss_fn(trainable, ranks, frozen_base, xb, yb, rng):
+        base_tr, factors = trainable
+        params = merge_base_params(frozen_base, base_tr)
+        adapters = attach_ranks(factors, ranks) if mode == "lora" else None
+        logits = model.apply(params, adapters, xb, train=True, rng=rng)
+        return softmax_xent(logits, yb)
+
+    @jax.jit
+    def local_fit(frozen_base, base_trainable, adapters, x, y, n_true, key):
+        idx_key, step_key = jax.random.split(key)
+        idx = sample_batch_indices(idx_key, n_true, batch_size, n_steps)
+        factors, ranks = strip_ranks(adapters)
+        opt_state = optimizer.init((base_trainable, factors))
+
+        def step(carry, batch_ix):
+            trainable, opt_state, rng = carry
+            rng, sub = jax.random.split(rng)
+            xb, yb = x[batch_ix], y[batch_ix]
+            loss, grads = jax.value_and_grad(loss_fn)(
+                trainable, ranks, frozen_base, xb, yb, sub)
+            updates, opt_state = optimizer.update(grads, opt_state,
+                                                  trainable)
+            trainable = apply_updates(trainable, updates)
+            if mode == "lora":
+                base_tr, fac = trainable
+                fac, _ = strip_ranks(mask_adapters(attach_ranks(fac, ranks)))
+                trainable = (base_tr, fac)
+            return (trainable, opt_state, rng), loss
+
+        (trainable, _, _), losses = jax.lax.scan(
+            step, ((base_trainable, factors), opt_state, step_key), idx)
+        base_tr, fac = trainable
+        ad = attach_ranks(fac, ranks) if mode == "lora" else adapters
+        return LocalFitResult(ad, base_tr, jnp.mean(losses))
+
+    return local_fit

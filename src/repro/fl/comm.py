@@ -1,0 +1,71 @@
+"""Communication-cost accounting for FL rounds (paper motivation: LoRA
+cuts per-round bytes; RBLA keeps that benefit while fixing aggregation).
+
+Counts the bytes a client uploads per round (and the server broadcast),
+per aggregation method:
+
+* lora methods (rbla / zeropad / variants): the padded adapter tree --
+  but a client of rank r only needs to ship its live rows, so the honest
+  per-client cost is the rank-sliced adapter (+ the non-LoRA trainables);
+  we report both padded and sliced numbers.
+* fft: the full parameter tree.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+import numpy as np
+
+from repro.lora import is_pair, tree_map_pairs
+
+PyTree = Any
+
+
+def _leaf_bytes(x) -> int:
+    return int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(_leaf_bytes(x) for x in jax.tree.leaves(tree))
+
+
+def adapter_upload_bytes(adapters: PyTree, rank: int | None = None) -> int:
+    """Bytes a client ships for its adapters.
+
+    ``rank=None``: padded r_max layout (what zero-padding FLaaS ships).
+    ``rank=r``: rank-sliced (what a rank-r client actually needs to send
+    under RBLA -- the server re-pads; Alg. 2 slicing in reverse).
+    """
+    total = 0
+
+    def per_pair(pair):
+        nonlocal total
+        a, b = pair["A"], pair["B"]
+        r_max = a.shape[-2]
+        r = r_max if rank is None else min(rank, r_max)
+        frac = r / r_max
+        total += int(_leaf_bytes(a) * frac) + int(_leaf_bytes(b) * frac)
+        total += _leaf_bytes(pair["rank"])
+        return pair
+
+    tree_map_pairs(per_pair, adapters)
+    return total
+
+
+def round_cost_report(params: PyTree, adapters: PyTree,
+                      base_trainable: PyTree,
+                      client_ranks) -> dict:
+    """Per-round communication summary across methods."""
+    full = tree_bytes(params)
+    base_tr = tree_bytes(base_trainable)
+    padded = adapter_upload_bytes(adapters)
+    sliced = [adapter_upload_bytes(adapters, int(r)) for r in client_ranks]
+    return {
+        "fft_upload_bytes_per_client": full,
+        "lora_padded_upload_bytes": padded + base_tr,
+        "lora_sliced_upload_bytes_mean": int(np.mean(sliced)) + base_tr,
+        "lora_sliced_upload_bytes": [s + base_tr for s in sliced],
+        "broadcast_bytes": padded + base_tr,
+        "reduction_vs_fft": full / max(int(np.mean(sliced)) + base_tr, 1),
+    }

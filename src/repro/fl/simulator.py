@@ -1,0 +1,146 @@
+"""In-process FLaaS simulator: the paper's experiment loop, end to end.
+
+One simulation = (dataset, model, aggregation method, participation) ->
+per-round global-model test accuracy.  Seeded (42, like the paper) and
+deterministic.  The same simulator backs the unit tests, the paper-repro
+benchmarks (Table 1, Figs. 5-10) and the examples.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import ClientData, make_dataset, staircase_partition
+from repro.fl.client import (make_local_fit, merge_base_params,
+                             split_base_params)
+from repro.fl.selection import select_clients
+from repro.fl.server import aggregate_adapters, aggregate_base
+from repro.lora import init_adapters, set_ranks
+from repro.models.paper_nets import PAPER_MODELS
+from repro.optim import adam, sgd
+
+PyTree = Any
+
+
+@dataclass
+class FLConfig:
+    dataset: str = "mnist"
+    model: str = "mlp"
+    method: str = "rbla"           # rbla | zeropad | fft | rbla_ranked |
+                                   # rbla_norm | svd  (svd via server hook)
+    n_clients: int = 10
+    rounds: int = 50
+    local_epochs: int = 1
+    batch_size: int = 64
+    lr: float = 0.01
+    optimizer: str = "sgd"         # sgd (mnist/fmnist) | adam (cifar/cinic)
+    r_max: int = 64
+    ratio_step: float = 0.1
+    alpha: float = 16.0
+    participation: float = 1.0     # 1.0 = full, 0.2 = paper's random 20%
+    n_per_class: int = 400
+    n_test_per_class: int = 100
+    seed: int = 42
+    eval_batch: int = 256
+
+
+@dataclass
+class FLHistory:
+    test_acc: list[float] = field(default_factory=list)
+    train_loss: list[float] = field(default_factory=list)
+    round_time_s: list[float] = field(default_factory=list)
+
+    def rounds_to_target(self, target: float) -> int | None:
+        for i, a in enumerate(self.test_acc):
+            if a >= target:
+                return i + 1
+        return None
+
+
+def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
+    key = jax.random.PRNGKey(cfg.seed)
+    model = PAPER_MODELS[cfg.model]() if cfg.model != "cnn_cifar" else \
+        PAPER_MODELS[cfg.model](n_dense=2 if cfg.dataset == "cifar" else 4)
+
+    train = make_dataset(cfg.dataset, cfg.n_per_class, cfg.seed, "train")
+    test = make_dataset(cfg.dataset, cfg.n_test_per_class, cfg.seed, "test")
+    clients = staircase_partition(train, cfg.n_clients, cfg.r_max,
+                                  cfg.ratio_step, cfg.seed)
+
+    key, pkey, akey = jax.random.split(key, 3)
+    params = model.init(pkey)
+    mode = "fft" if cfg.method == "fft" else "lora"
+    if mode == "lora":
+        frozen_base, base_trainable = split_base_params(params,
+                                                        model.lora_specs)
+    else:                       # FFT trains every parameter
+        frozen_base, base_trainable = {}, params
+    global_adapters = init_adapters(akey, model.lora_specs, cfg.r_max,
+                                    cfg.r_max)
+
+    opt = (sgd(cfg.lr) if cfg.optimizer == "sgd" else adam(cfg.lr))
+    max_n = max(len(c.x) for c in clients)
+    steps = max(1, (max_n * cfg.local_epochs) // cfg.batch_size)
+    local_fit = make_local_fit(model, opt, cfg.batch_size, steps, mode,
+                               cfg.alpha)
+
+    client_x = [jnp.asarray(c.x) for c in clients]
+    client_y = [jnp.asarray(c.y.astype(np.int32)) for c in clients]
+
+    @jax.jit
+    def eval_logits(frozen_b, base_tr, adapters, xb):
+        p = merge_base_params(frozen_b, base_tr)
+        return model.apply(p, adapters if mode == "lora" else None, xb,
+                           train=False)
+
+    test_x, test_y = jnp.asarray(test.x), jnp.asarray(test.y)
+
+    def evaluate():
+        correct = 0
+        for i in range(0, len(test_x), cfg.eval_batch):
+            logits = eval_logits(frozen_base, base_trainable,
+                                 global_adapters, test_x[i:i + cfg.eval_batch])
+            correct += int(jnp.sum(jnp.argmax(logits, -1) ==
+                                   test_y[i:i + cfg.eval_batch]))
+        return correct / len(test_x)
+
+    hist = FLHistory()
+    rng = np.random.default_rng(cfg.seed)
+    for rnd in range(cfg.rounds):
+        t0 = time.time()
+        part = select_clients(cfg.n_clients, rnd, cfg.participation,
+                              cfg.seed)
+        sent_adapters, sent_base, weights, losses = [], [], [], []
+        for ci in part:
+            c = clients[ci]
+            fit_key = jax.random.PRNGKey(
+                int(rng.integers(0, 2 ** 31)) )
+            local_ad = set_ranks(global_adapters, c.rank)
+            res = local_fit(frozen_base, base_trainable, local_ad,
+                            client_x[ci], client_y[ci],
+                            jnp.asarray(c.n, jnp.int32), fit_key)
+            sent_adapters.append(res.adapters)
+            sent_base.append(res.base_trainable)
+            weights.append(float(max(c.n, 1)))
+            losses.append(float(res.loss))
+        w = jnp.asarray(weights, jnp.float32)
+
+        base_trainable = aggregate_base(sent_base, w)
+        if mode == "lora":
+            ranks = jnp.asarray([clients[ci].rank for ci in part])
+            global_adapters = aggregate_adapters(
+                sent_adapters, w, method=cfg.method, r_max=cfg.r_max,
+                client_ranks=ranks, prev_global=global_adapters)
+        acc = evaluate()
+        hist.test_acc.append(acc)
+        hist.train_loss.append(float(np.mean(losses)))
+        hist.round_time_s.append(time.time() - t0)
+        if verbose:
+            print(f"[{cfg.method:>11s}] round {rnd + 1:3d} "
+                  f"acc={acc:.4f} loss={hist.train_loss[-1]:.4f}")
+    return hist

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the LoRA-FL hot spots.
+
+Validated in interpret=True mode on CPU against ref.py oracles; pass
+interpret=False on real TPU.
+"""
+from .lora_matmul.ops import lora_dense_apply, lora_matmul
+from .lora_matmul.ref import lora_matmul_ref
+from .rbla_agg.ops import rbla_agg
+from .rbla_agg.ref import rbla_agg_ref
+from .ssd_scan.ops import ssd_scan
+from .ssd_scan.ref import ssd_scan_ref
+
+__all__ = ["lora_dense_apply", "lora_matmul", "lora_matmul_ref",
+           "rbla_agg", "rbla_agg_ref", "ssd_scan", "ssd_scan_ref"]

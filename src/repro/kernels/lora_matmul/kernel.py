@@ -1,0 +1,88 @@
+"""Fused LoRA matmul Pallas TPU kernel.
+
+Computes  y = x @ W + scale * (x @ A^T) @ B^T  in ONE pass over x:
+the low-rank path shares x's VMEM residency with the frozen-weight matmul
+instead of streaming x from HBM twice (the usual two-matmul lowering).
+
+Grid (i, j, k) over (M/bm, N/bn, K/bk); k innermost.  Accumulators live in
+VMEM scratch:
+  acc (bm, bn) f32 -- frozen-path partial sums
+  axr (bm, r)  f32 -- x @ A^T partial sums (r <= 128 fits VMEM)
+At the last k step the low-rank correction axr @ B_j^T is added and the
+tile is written out.  Matmul dims should be multiples of 128 for MXU
+alignment (ops.py pads otherwise).  VMEM working set per step:
+bm*bk + bk*bn + r*bk + bn*r + bm*bn + bm*r floats -- defaults (256, 256,
+512) with r<=128 stay under ~2 MB, well inside the ~16 MB v5e VMEM budget
+with double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 512
+
+
+def _kernel(x_ref, w_ref, a_ref, b_ref, scale_ref, o_ref, acc_ref, axr_ref,
+            *, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        axr_ref[...] = jnp.zeros_like(axr_ref)
+
+    x = x_ref[...]
+    acc_ref[...] += jax.lax.dot_general(
+        x, w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    axr_ref[...] += jax.lax.dot_general(
+        x, a_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        lora = jax.lax.dot_general(
+            axr_ref[...], b_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        y = acc_ref[...] + scale_ref[0, 0] * lora
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def lora_matmul_pallas(x, w, a, b, scale, *, bm=DEFAULT_BM, bn=DEFAULT_BN,
+                       bk=DEFAULT_BK, interpret=True):
+    """x (M,K) @ w (K,N) + scale * ((x @ a^T) @ b^T).  a: (r,K), b: (N,r).
+
+    scale: (1,1) f32.  Shapes must tile evenly (ops.py pads).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    r = a.shape[0]
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    n_k = pl.cdiv(k, bk)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), n_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((r, bk), lambda i, j, kk: (0, kk)),
+            pl.BlockSpec((bn, r), lambda i, j, kk: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, a, b, scale)

@@ -1,0 +1,60 @@
+"""jit'd public wrapper for the fused LoRA matmul kernel.
+
+Handles: leading batch dims, non-aligned shape padding (to 128 multiples),
+LoRA-pair plumbing (alpha/rank scale), and the interpret switch (True on
+CPU -- the container validates kernels in interpret mode; on TPU pass
+interpret=False).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import lora_matmul_pallas
+from .ref import lora_matmul_ref
+
+
+def _pad_to(v: int, mult: int) -> int:
+    return (v + mult - 1) // mult * mult
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bm", "bn", "bk"))
+def lora_matmul(x, w, a, b, scale, *, interpret=True, bm=256, bn=256,
+                bk=512):
+    """x (..., K) @ w (K, N) + scale * (x @ a^T) @ b^T  via the Pallas
+    kernel.  a: (r, K), b: (N, r), scale scalar."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    r = a.shape[0]
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+
+    mp, np_, kp = _pad_to(m, 128), _pad_to(n, 128), _pad_to(k, 128)
+    rp = _pad_to(r, 128)
+    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    ap = jnp.pad(a, ((0, rp - r), (0, kp - k)))
+    bp = jnp.pad(b, ((0, np_ - n), (0, rp - r)))
+    sc = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+
+    y = lora_matmul_pallas(x2, wp, ap, bp, sc,
+                           bm=min(bm, mp), bn=min(bn, np_),
+                           bk=min(bk, kp), interpret=interpret)
+    return y[:m, :n].reshape(lead + (n,))
+
+
+def lora_dense_apply(p, x, pair, alpha: float = 16.0, interpret=True):
+    """Drop-in replacement for models.common.dense on 2-D kernels with a
+    LoRA pair: uses the fused kernel for the matmul + low-rank path."""
+    scale = alpha / jnp.maximum(pair["rank"].astype(jnp.float32), 1.0)
+    y = lora_matmul(x, p["w"], pair["A"], pair["B"], scale,
+                    interpret=interpret)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+__all__ = ["lora_matmul", "lora_dense_apply", "lora_matmul_ref"]

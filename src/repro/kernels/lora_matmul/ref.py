@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused LoRA matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w, a, b, scale):
+    """y = x @ w + scale * (x @ a^T) @ b^T, f32 accumulation."""
+    xf = x.astype(jnp.float32)
+    base = xf @ w.astype(jnp.float32)
+    lora = (xf @ a.astype(jnp.float32).T) @ b.astype(jnp.float32).T
+    return (base + jnp.asarray(scale, jnp.float32).reshape(()) *
+            lora).astype(x.dtype)

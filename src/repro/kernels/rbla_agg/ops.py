@@ -1,0 +1,38 @@
+"""jit'd wrapper: pad to tile alignment, flatten trailing dims, dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rbla_agg_pallas
+from .ref import rbla_agg_ref
+
+
+def _pad_to(v: int, mult: int) -> int:
+    return (v + mult - 1) // mult * mult
+
+
+@functools.partial(jax.jit, static_argnames=("method", "interpret"))
+def rbla_agg(x, ranks, weights, *, method: str = "rbla", interpret=True):
+    """Aggregate stacked client tensors (N, R, *dims) with rank-row masks.
+
+    Trailing dims are flattened into D; padding rows/cols are masked out of
+    the result.  Matches ``repro.core.rbla_leaf`` semantics.
+    """
+    n, r = x.shape[:2]
+    lead = x.shape[2:]
+    d = 1
+    for v in lead:
+        d *= v
+    x2 = x.reshape(n, r, d)
+    rp, dp = _pad_to(r, 8), _pad_to(d, 128)
+    x2 = jnp.pad(x2, ((0, 0), (0, rp - r), (0, dp - d)))
+    out = rbla_agg_pallas(x2, jnp.asarray(ranks, jnp.int32),
+                          jnp.asarray(weights, jnp.float32),
+                          method=method, interpret=interpret)
+    return out[:r, :d].reshape((r,) + lead)
+
+
+__all__ = ["rbla_agg", "rbla_agg_ref"]

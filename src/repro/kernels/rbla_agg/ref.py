@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the RBLA aggregation kernel (reuses the core
+implementation -- the kernel must agree with the paper's Eq. 7 exactly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rbla_leaf, stacked_rank_masks, zeropad_leaf
+
+
+def rbla_agg_ref(x, ranks, weights, method: str = "rbla"):
+    """x: (N, R, D); ranks: (N,); weights: (N,) -> (R, D)."""
+    masks = stacked_rank_masks(x.shape[1], ranks)[:, :, None]
+    if method == "rbla":
+        return rbla_leaf(x, masks, weights)
+    return zeropad_leaf(x, masks, weights)

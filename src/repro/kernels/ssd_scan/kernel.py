@@ -1,0 +1,120 @@
+"""Chunked SSD (Mamba2 state-space duality) Pallas TPU kernel.
+
+One grid step processes one (batch, head, chunk) tile:
+
+  intra-chunk:  Y_diag = (C B^T  *  L) @ (dt*x)       -- MXU matmuls
+  inter-chunk:  Y_off  = (C h_prev^T) * exp(A_cs)
+  state update: h      = h_prev * exp(A_tot) + (B * decay)^T (dt*x)
+
+The chunk axis is the LAST grid dimension, which Pallas TPU executes
+sequentially per (b, h) tile -- the running state h lives in VMEM scratch
+and persists across chunk iterations (the standard sequential-grid carry
+trick), so the recurrence never round-trips HBM.
+
+Cumulative sums are computed as lower-triangular matmuls (MXU-friendly;
+avoids 1-D scan lowering inside the kernel).
+
+VMEM working set per step (Q=chunk, N=state, P=head_dim, f32):
+Q*P + 2*Q*N + 3*Q*Q + P*N + Q  floats -- for (256, 128, 64):
+~0.9 MB, comfortably double-bufferable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xdt_ref, dta_ref, b_ref, c_ref, o_ref, hout_ref, h_ref, *,
+            n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    q = xdt_ref.shape[2]
+    xdt = xdt_ref[0, 0].astype(jnp.float32)         # (Q, P)
+    a = dta_ref[0, 0].astype(jnp.float32)           # (Q, 1)
+    bm = b_ref[0].astype(jnp.float32)               # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)               # (Q, N)
+
+    # cumulative sum via lower-triangular (inclusive) matmul
+    rows = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    tril_inc = (cols <= rows).astype(jnp.float32)   # (Q, Q)
+    a_cs = jax.lax.dot_general(tril_inc, a, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (Q,1)
+
+    # L[i, j] = exp(a_cs[i] - a_cs[j]) for j <= i (segment sums include
+    # steps j+1..i: subtract a[j] back out of the exclusive form)
+    seg = a_cs - a_cs.T                              # (Q, Q) inclusive diff
+    L = jnp.where(cols <= rows, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_diag = jax.lax.dot_general(scores * L, xdt,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    h_prev = h_ref[...]                              # (P, N)
+    y_off = jax.lax.dot_general(cm, h_prev, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_off = y_off * jnp.exp(a_cs)                    # (Q, P)
+
+    a_tot = a_cs[q - 1, 0]
+    decay = jnp.exp(a_tot - a_cs)                    # (Q, 1)
+    state_c = jax.lax.dot_general(xdt, bm * decay,
+                                  (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    h_new = h_prev * jnp.exp(a_tot) + state_c        # (P, N)
+    h_ref[...] = h_new
+
+    o_ref[0, 0] = (y_diag + y_off).astype(o_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        hout_ref[0, 0] = h_new.astype(hout_ref.dtype)
+
+
+def ssd_scan_pallas(xdt, dta, bm, cm, chunk: int, *, interpret=True):
+    """xdt: (B, L, H, P) pre-scaled inputs; dta: (B, L, H); bm/cm: (B, L, N).
+
+    Returns (y (B, L, H, P), h_final (B, H, P, N)).
+    """
+    b, l, h, p = xdt.shape
+    n = bm.shape[-1]
+    q = min(chunk, l)
+    while l % q:
+        q -= 1
+    nc = l // q
+    grid = (b, h, nc)
+
+    # layouts: chunk-major so each grid step sees contiguous (Q, *) blocks
+    xdt_r = xdt.transpose(0, 2, 1, 3)                # (B, H, L, P)
+    dta_r = dta.transpose(0, 2, 1)[..., None]        # (B, H, L, 1)
+
+    y, h_out = pl.pallas_call(
+        functools.partial(_kernel, n_chunks=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, q, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, q, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, l, p), xdt.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), xdt.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xdt_r, dta_r, bm, cm)
+    return y.transpose(0, 2, 1, 3), h_out

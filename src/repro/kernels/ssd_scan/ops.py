@@ -1,0 +1,19 @@
+"""jit'd wrapper for the SSD scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_scan_pallas
+from .ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xdt, dta, bm, cm, chunk: int = 256, *, interpret=True):
+    """Chunked SSD: xdt (B,L,H,P) pre-scaled by dt; dta (B,L,H);
+    bm/cm (B,L,N).  Returns (y, h_final)."""
+    return ssd_scan_pallas(xdt, dta, bm, cm, chunk, interpret=interpret)
+
+
+__all__ = ["ssd_scan", "ssd_scan_ref"]

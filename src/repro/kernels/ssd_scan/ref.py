@@ -1,0 +1,11 @@
+"""Oracle for the SSD scan kernel: the model-zoo chunked implementation
+(itself property-tested against the sequential recurrence in
+tests/test_model_properties.py)."""
+from __future__ import annotations
+
+from repro.models.mamba import ssd_chunked
+
+
+def ssd_scan_ref(xdt, dta, bm, cm, chunk: int):
+    """Returns (y (B,L,H,P), h_final (B,H,P,N))."""
+    return ssd_chunked(xdt, dta, bm, cm, chunk)

@@ -1,0 +1,191 @@
+"""Mamba2 (SSD, state-space duality) block -- jnp chunked implementation.
+
+Hardware adaptation (see DESIGN.md): the chunked SSD form turns the
+selective-scan recurrence into block matmuls (intra-chunk quadratic term +
+inter-chunk state recurrence), which is exactly the MXU-friendly layout;
+a sequential Mamba-1 scan would leave the systolic array idle.  Jamba's
+mamba layers reuse this block (G=1 groups).
+
+Shapes (n_groups fixed to 1):
+  d_inner = expand * d_model;  H = d_inner // ssm_head_dim;  N = ssm_state
+  in_proj : d_model -> 2*d_inner + 2*N + H      (z, x, B, C, dt)
+  conv    : depthwise causal width-4 over [x, B, C]
+  out_proj: d_inner -> d_model
+
+Decode carries (conv_state (B, conv_w-1, d_conv_ch), ssm_state
+(B, H, P, N)) -- O(1) in context length, which is what makes long_500k
+decode run for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import dense, dense_init, norm_init, rmsnorm
+
+Array = jax.Array
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = d_in // cfg.ssm_head_dim
+    return d_in, h, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def mamba_init(key, cfg) -> dict:
+    d = cfg.d_model
+    d_in, h, n, p_dim = _dims(cfg)
+    conv_ch = d_in + 2 * n
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": norm_init(cfg),
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * n + h, dt),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), dt)
+        * (1.0 / cfg.ssm_conv) ** 0.5,
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gn": {"scale": jnp.ones((d_in,), jnp.float32)},
+        "out_proj": dense_init(ks[2], d_in, d, dt),
+    }
+
+
+MAMBA_LORA_TARGETS = ("in_proj", "out_proj")
+
+
+def _segsum(x: Array) -> Array:
+    """x: (..., T) -> (..., T, T) lower-triangular segment sums."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv.  x: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # unfold: sum_j w[j] * x[t-k+1+j]
+    out = sum(xp[:, j:j + x.shape[1], :] * w[j][None, None, :]
+              for j in range(k))
+    return out + b[None, None, :]
+
+
+def ssd_chunked(xdt: Array, dtA: Array, Bm: Array, Cm: Array, chunk: int,
+                h_init: Array | None = None):
+    """Chunked SSD.  xdt: (B,L,H,P) (inputs pre-scaled by dt);
+    dtA: (B,L,H); Bm/Cm: (B,L,N).  Returns (y (B,L,H,P), h_final
+    (B,H,P,N))."""
+    b, l, h, p = xdt.shape
+    n = Bm.shape[-1]
+    q = min(chunk, l)
+    while l % q:
+        q -= 1
+    nc = l // q
+    xc = xdt.reshape(b, nc, q, h, p)
+    Bc = Bm.reshape(b, nc, q, n)
+    Cc = Cm.reshape(b, nc, q, n)
+    Ac = jnp.moveaxis(dtA.reshape(b, nc, q, h), -1, 1)     # (B,H,NC,Q)
+    A_cs = jnp.cumsum(Ac, -1)                              # (B,H,NC,Q)
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(Ac))                               # (B,H,NC,Q,Q)
+    scores = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)         # (B,NC,Q,Q)
+    y_diag = jnp.einsum("bcqs,bhcqs,bcshp->bcqhp", scores,
+                        L.astype(scores.dtype),
+                        xc)
+
+    # 2) per-chunk output states
+    decay_states = jnp.exp(A_cs[..., -1:] - A_cs)          # (B,H,NC,Q)
+    states = jnp.einsum("bcqn,bhcq,bcqhp->bchpn", Bc,
+                        decay_states.astype(Bc.dtype), xc)  # (B,NC,H,P,N)
+
+    # 3) inter-chunk recurrence (carry h across chunks)
+    A_tot = A_cs[..., -1]                                  # (B,H,NC)
+
+    def step(hprev, inp):
+        st, at = inp                                       # (B,H,P,N),(B,H)
+        hnew = hprev * jnp.exp(at)[..., None, None].astype(hprev.dtype) + st
+        return hnew, hprev
+
+    h0 = (jnp.zeros((b, h, p, n), xdt.dtype) if h_init is None else h_init)
+    h_last, h_prevs = lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(A_tot, -1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                  # (B,NC,H,P,N)
+
+    # 4) inter-chunk contribution to outputs
+    state_decay = jnp.exp(A_cs)                            # (B,H,NC,Q)
+    y_off = jnp.einsum("bcqn,bchpn,bhcq->bcqhp", Cc, h_prevs,
+                       state_decay.astype(Cc.dtype))
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, h_last
+
+
+def mamba_forward(p: Mapping, lora: Mapping | None, x: Array, cfg, *,
+                  mode: str, cache: Mapping | None = None,
+                  pos: Array | None = None, alpha: float = 16.0):
+    """Returns (y, new_cache or None).  x: (B, S, d)."""
+    lora = lora or {}
+    d_in, h, n, pd = _dims(cfg)
+    hx = rmsnorm(p["ln"], x, cfg.norm_eps)
+    zxbcdt = dense(p["in_proj"], hx, lora.get("in_proj"), alpha)
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                     # (H,)
+
+    if mode in ("full", "prefill"):
+        conv_in = jnp.concatenate([xin, Bm, Cm], -1)
+        conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"],
+                                            p["conv_b"]))
+        xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+        xh = xc.reshape(xc.shape[:2] + (h, pd))
+        xdt = xh * dt[..., None].astype(xh.dtype)
+        dtA = dt * A[None, None, :]
+        y, h_last = ssd_chunked(xdt, dtA, Bc, Cc, cfg.ssm_chunk)
+        y = y + p["D"][None, None, :, None].astype(y.dtype) * xh
+        y = y.reshape(x.shape[:2] + (d_in,))
+        y = rmsnorm(p["gn"], y * jax.nn.silu(z), cfg.norm_eps)
+        out = dense(p["out_proj"], y, lora.get("out_proj"), alpha)
+        new_cache = None
+        if mode == "prefill":
+            k = cfg.ssm_conv
+            tail = jnp.concatenate([xin, Bm, Cm], -1)[:, -(k - 1):, :]
+            new_cache = {"conv": tail, "ssm": h_last}
+        return out, new_cache
+
+    # ------------------------------ decode ------------------------------
+    # x: (B,1,d); cache: conv (B,K-1,C), ssm (B,H,P,N)
+    k = cfg.ssm_conv
+    conv_in = jnp.concatenate([xin, Bm, Cm], -1)             # (B,1,C)
+    hist = jnp.concatenate([cache["conv"], conv_in], 1)      # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]             # (B,1,C)
+    xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    xh = xc.reshape(xc.shape[0], h, pd)                      # (B,H,P)
+    dt1 = dt[:, 0]                                           # (B,H)
+    dA = jnp.exp(dt1 * A[None, :])                           # (B,H)
+    Bv = Bc[:, 0]                                            # (B,N)
+    Cv = Cc[:, 0]                                            # (B,N)
+    dBx = jnp.einsum("bhp,bn->bhpn", xh * dt1[..., None].astype(xh.dtype),
+                     Bv)
+    h_new = cache["ssm"] * dA[..., None, None].astype(xh.dtype) + dBx
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cv)
+    y = y + p["D"][None, :, None].astype(y.dtype) * xh
+    y = y.reshape(x.shape[0], 1, d_in)
+    y = rmsnorm(p["gn"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(p["out_proj"], y, lora.get("out_proj"), alpha)
+    return out, {"conv": hist[:, 1:], "ssm": h_new}
+
+
+def mamba_init_cache(cfg, batch: int, dtype) -> dict:
+    d_in, h, n, pd = _dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in + 2 * n),
+                              dtype),
+            "ssm": jnp.zeros((batch, h, pd, n), dtype)}

@@ -1,0 +1,58 @@
+"""Dense MLP blocks: SwiGLU (llama/yi/etc.), GeGLU (gemma2), and plain
+GELU fc1/fc2 (whisper)."""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense, dense_init, norm, norm_init
+
+Array = jax.Array
+
+
+def mlp_init(key, cfg, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    p = {"ln": norm_init(cfg)}
+    if cfg.mlp_act == "gelu_plain":
+        p["fc1"] = dense_init(ks[0], d, f, dt, bias=True)
+        p["fc2"] = dense_init(ks[1], f, d, dt, bias=True)
+    else:
+        p["gate"] = dense_init(ks[0], d, f, dt)
+        p["up"] = dense_init(ks[1], d, f, dt)
+        p["down"] = dense_init(ks[2], f, d, dt)
+    if cfg.post_block_norm:
+        p["post_ln"] = norm_init(cfg)
+    return p
+
+
+def mlp_lora_targets(cfg) -> tuple[str, ...]:
+    return (("fc1", "fc2") if cfg.mlp_act == "gelu_plain"
+            else ("gate", "up", "down"))
+
+
+def _act(cfg, x: Array) -> Array:
+    if cfg.mlp_act == "silu":
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def mlp_forward(p: Mapping, lora: Mapping | None, x: Array, cfg,
+                alpha: float = 16.0) -> Array:
+    lora = lora or {}
+    h = norm(p["ln"], x, cfg.norm_eps)
+    if cfg.mlp_act == "gelu_plain":
+        y = dense(p["fc2"], jax.nn.gelu(
+            dense(p["fc1"], h, lora.get("fc1"), alpha), approximate=True),
+            lora.get("fc2"), alpha)
+    else:
+        y = dense(p["down"],
+                  _act(cfg, dense(p["gate"], h, lora.get("gate"), alpha)) *
+                  dense(p["up"], h, lora.get("up"), alpha),
+                  lora.get("down"), alpha)
+    if cfg.post_block_norm:
+        y = norm(p["post_ln"], y, cfg.norm_eps)
+    return y

@@ -1,0 +1,169 @@
+"""Mixture-of-Experts FFN with two dispatch strategies.
+
+* ``sort``   -- capacity-based sort/scatter routing under plain pjit
+             (global semantics; XLA SPMD inserts the collectives).  The
+             baseline for every MoE arch.
+* ``ep_a2a`` -- explicit expert-parallel all-to-all dispatch inside
+             shard_map (tokens sharded on the data axis, experts on the
+             model axis).  The SSPerf hillclimb variant for deepseek-v3;
+             see ``repro/models/moe_ep.py``.
+
+Per-expert LoRA: each expert's gate/up/down kernels (E, d, f) carry an
+adapter with a leading expert axis -- A (E, r, d), B (E, f, r).  RBLA
+masks broadcast over the expert axis unchanged.
+"""
+from __future__ import annotations
+
+import math
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense, dense_init, norm, norm_init
+
+Array = jax.Array
+
+
+def moe_init(key, cfg) -> dict:
+    d, f = cfg.d_model, cfg.moe_d_ff or cfg.d_ff
+    # physical expert count may be padded so it divides the model axis
+    # (padded experts are never routed to -- dead weights, EP-shardable)
+    e = cfg.n_experts + cfg.moe_pad_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    s = (1.0 / d) ** 0.5
+    p = {
+        "ln": norm_init(cfg),
+        "router": {"w": jax.random.normal(ks[0], (d, e), jnp.float32) * s},
+        "experts": {
+            "gate": {"w": jax.random.normal(ks[1], (e, d, f), dt) * s},
+            "up": {"w": jax.random.normal(ks[2], (e, d, f), dt) * s},
+            "down": {"w": jax.random.normal(ks[3], (e, f, d), dt) *
+                     (1.0 / f) ** 0.5},
+        },
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared"] = {
+            "gate": dense_init(ks[4], d, fs, dt),
+            "up": dense_init(ks[5], d, fs, dt),
+            "down": dense_init(ks[4], fs, d, dt),
+        }
+    if cfg.post_block_norm:
+        p["post_ln"] = norm_init(cfg)
+    return p
+
+
+MOE_LORA_TARGETS = ("experts/gate", "experts/up", "experts/down")
+
+
+def expert_dense(w: Array, x: Array, lora_pair: Mapping | None = None,
+                 alpha: float = 16.0) -> Array:
+    """x: (G, E, C, in), w: (E, in, out) -> (G, E, C, out) with per-expert
+    LoRA (A (E, r, in), B (E, out, r))."""
+    y = jnp.einsum("geci,eio->geco", x, w)
+    if lora_pair is not None:
+        scale = alpha / jnp.maximum(lora_pair["rank"].astype(jnp.float32),
+                                    1.0)
+        ax = jnp.einsum("geci,eri->gecr", x, lora_pair["A"].astype(x.dtype))
+        y = y + jnp.einsum("gecr,eor->geco", ax,
+                           lora_pair["B"].astype(x.dtype)) * scale.astype(
+                               x.dtype)
+    return y
+
+
+def _route(cfg, logits: Array):
+    """Top-k routing. Returns (weights (N,K), experts (N,K)) over flat
+    tokens."""
+    k = cfg.experts_per_token
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, ix = jax.lax.top_k(probs, k)
+    w = w / (jnp.sum(w, -1, keepdims=True) + 1e-9)   # renormalize over top-k
+    return w, ix
+
+
+def moe_forward(p: Mapping, lora: Mapping | None, x: Array, cfg,
+                alpha: float = 16.0, n_groups: int = 32) -> Array:
+    """Capacity-based sort routing with group-local dispatch.
+
+    Tokens are split into ``n_groups`` routing groups (GShard-style); each
+    group routes/scatters independently, so under pjit the scatter stays
+    local to the data shard holding the group -- the (g, E, C, d) dispatch
+    tensor is sharded on g (data axes) and sliced on E (model axis) by the
+    expert matmul.  x: (B, S, d).
+    """
+    lora = lora or {}
+    b, s, d = x.shape
+    e, k = cfg.n_experts + cfg.moe_pad_experts, cfg.experts_per_token
+    n = b * s
+    g = max(1, min(n_groups, n))
+    while n % g:
+        g -= 1
+    ng = n // g
+    cap = int(math.ceil(ng * k / e * cfg.capacity_factor))
+
+    h = norm(p["ln"], x, cfg.norm_eps)
+    flat = h.reshape(g, ng, d)
+    logits = jnp.einsum("gnd,de->gne", flat.astype(jnp.float32),
+                        p["router"]["w"])
+    w, ix = _route(cfg, logits)                       # (g,ng,K)
+
+    def dispatch(flat_g, ix_g):
+        """One group's scatter into (E, C, d) expert slots."""
+        ae = ix_g.reshape(-1)                         # (ng*K,)
+        order = jnp.argsort(ae)
+        ae_sorted = ae[order]
+        pos_in_expert = jnp.arange(ng * k) - jnp.searchsorted(
+            ae_sorted, ae_sorted, side="left")
+        keep = pos_in_expert < cap
+        token_of = order // k
+        rows = jnp.where(keep, ae_sorted, e - 1)
+        cols = jnp.where(keep, pos_in_expert, cap - 1)
+        vals = flat_g[token_of] * keep[:, None].astype(flat_g.dtype)
+        einp = jnp.zeros((e, cap, d), flat_g.dtype).at[rows, cols].add(vals)
+        return einp, rows, cols, keep, token_of, order
+
+    einp, rows, cols, keep, token_of, order = jax.vmap(dispatch)(flat, ix)
+
+    if cfg.moe_mode == "ep_hint":
+        # expert-parallel hint: pin the dispatch tensor's expert axis to
+        # the 'model' mesh axis.  XLA SPMD then moves slots to their
+        # expert owners with all-to-all instead of all-gathering the
+        # whole (g, E, C, d) tensor (SSPerf iteration A6).
+        from jax.sharding import PartitionSpec as P
+        U = P.UNCONSTRAINED
+        einp = jax.lax.with_sharding_constraint(
+            einp, P(U, "model", U, U))
+
+    # expert computation (SwiGLU) over (g, E, C, *)
+    eg = expert_dense(p["experts"]["gate"]["w"], einp,
+                      lora.get("experts/gate"), alpha)
+    eu = expert_dense(p["experts"]["up"]["w"], einp,
+                      lora.get("experts/up"), alpha)
+    eh = jax.nn.silu(eg) * eu
+    eo = expert_dense(p["experts"]["down"]["w"], eh,
+                      lora.get("experts/down"), alpha)   # (g,E,C,d)
+
+    def combine(eo_g, rows_g, cols_g, keep_g, token_of_g, w_g, order_g):
+        gathered = eo_g[rows_g, cols_g] * keep_g[:, None].astype(eo_g.dtype)
+        wflat = w_g.reshape(-1)[order_g]
+        contrib = gathered * wflat[:, None].astype(eo_g.dtype)
+        return jnp.zeros((ng, d), eo_g.dtype).at[token_of_g].add(contrib)
+
+    y = jax.vmap(combine)(eo, rows, cols, keep, token_of, w, order)
+
+    flat = flat.reshape(n, d)
+    y = y.reshape(n, d)
+    if "shared" in p:
+        sh = p["shared"]
+        y = y + dense(sh["down"],
+                      jax.nn.silu(dense(sh["gate"], flat,
+                                        lora.get("shared/gate"), alpha)) *
+                      dense(sh["up"], flat, lora.get("shared/up"), alpha),
+                      lora.get("shared/down"), alpha)
+
+    y = y.reshape(b, s, d)
+    if cfg.post_block_norm:
+        y = norm(p["post_ln"], y, cfg.norm_eps)
+    return y

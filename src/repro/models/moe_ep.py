@@ -1,0 +1,150 @@
+"""Expert-parallel MoE dispatch with explicit all-to-all (mode 'ep_a2a').
+
+The pjit 'sort' baseline leaves collective choice to XLA, which tends to
+all-gather the (g, E, C, d) dispatch tensor across the model axis.  This
+module instead expresses the GShard-style expert parallelism explicitly
+inside ``shard_map``:
+
+  1. each data shard routes its tokens locally into per-expert capacity
+     slots (E experts, C_local capacity each),
+  2. ``all_to_all`` over the model axis swaps the expert dimension for the
+     shard dimension: each model shard receives the slots destined for
+     ITS E/ep experts from every data peer,
+  3. local expert matmuls,
+  4. the inverse all_to_all returns outputs to token owners.
+
+Per-device a2a volume = 2 * C_local * E * d * bytes -- independent of the
+expert count replication that the all-gather pays.  Used as the SSPerf
+iteration A6 for deepseek-v3 (``ArchConfig.moe_mode = 'ep_a2a'``).
+
+Restrictions (asserted): n_experts divisible by the model-axis size,
+tokens divisible by the data sharding; LoRA per-expert adapters must be
+sharded over 'model' (rules.adapter_specs does this).
+"""
+from __future__ import annotations
+
+import math
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import dense, norm
+from .moe import _route, expert_dense
+
+Array = jax.Array
+
+
+def moe_forward_ep_wrapped(p: Mapping, lora: Mapping | None, x: Array,
+                           cfg, alpha: float = 16.0) -> Array:
+    """pjit-callable wrapper: nests a shard_map over the ambient mesh.
+
+    Tokens are resharded over (data..., model) for the dispatch (that
+    reshard is part of the measured cost), expert weights stay on their
+    'model' shards, everything else is replicated inside the region.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.sharding.get_abstract_mesh()
+    axes = tuple(mesh.axis_names)
+    da = tuple(a for a in axes if a != "model")
+    tok_axes = da + ("model",)
+
+    def spec_for(path_leaf):
+        return P()
+
+    pspec = jax.tree.map(lambda _: P(), p)
+    pspec["experts"] = {k: {"w": P("model", None, None)}
+                        for k in ("gate", "up", "down")}
+    lspec = None
+    if lora:
+        lspec = {}
+        for k, v in lora.items():
+            if k.startswith("experts/"):
+                lspec[k] = {"A": P("model", None, None),
+                            "B": P("model", None, None), "rank": P()}
+            else:
+                lspec[k] = jax.tree.map(lambda _: P(), v)
+
+    def body(p_l, lora_l, x_l):
+        return moe_forward_ep(p_l, lora_l, x_l, cfg, model_axis="model",
+                              alpha=alpha)
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(pspec, lspec, P(tok_axes, None, None)),
+                       out_specs=P(tok_axes, None, None),
+                       check_vma=False)
+    return fn(p, lora, x)
+
+
+def moe_forward_ep(p: Mapping, lora: Mapping | None, x: Array, cfg, *,
+                   model_axis: str = "model", alpha: float = 16.0) -> Array:
+    """shard_map body: x is the LOCAL shard (b_local, s, d); expert weights
+    in ``p`` are the LOCAL expert slice (E/ep, d, f).  Must run inside a
+    shard_map over (data..., model) with tokens sharded on data and
+    experts on model."""
+    lora = lora or {}
+    ep = lax.axis_size(model_axis)
+    e = cfg.n_experts + cfg.moe_pad_experts
+    e_local = e // ep
+    k = cfg.experts_per_token
+    b, s, d = x.shape
+    n = b * s
+    cap = int(math.ceil(n * k / e * cfg.capacity_factor))
+
+    h = norm(p["ln"], x, cfg.norm_eps)
+    flat = h.reshape(n, d)
+    # router weights are replicated; logits over ALL experts
+    logits = jnp.einsum("nd,de->ne", flat.astype(jnp.float32),
+                        p["router"]["w"])
+    w, ix = _route(cfg, logits)                       # (n, k)
+
+    # local capacity dispatch (same sort trick as the pjit path)
+    ae = ix.reshape(-1)
+    order = jnp.argsort(ae)
+    ae_sorted = ae[order]
+    pos_in_expert = jnp.arange(n * k) - jnp.searchsorted(
+        ae_sorted, ae_sorted, side="left")
+    keep = pos_in_expert < cap
+    token_of = order // k
+    rows = jnp.where(keep, ae_sorted, e - 1)
+    cols = jnp.where(keep, pos_in_expert, cap - 1)
+    vals = flat[token_of] * keep[:, None].astype(flat.dtype)
+    einp = jnp.zeros((e, cap, d), flat.dtype).at[rows, cols].add(vals)
+
+    # a2a over the model axis: each peer receives the slots destined for
+    # ITS local experts from every peer.  tiled semantics:
+    # (e, cap, d) --split ax0 / concat ax1--> (e_local, ep*cap, d)
+    einp = lax.all_to_all(einp, model_axis, split_axis=0, concat_axis=1,
+                          tiled=True)
+    einp = einp[None]                                 # group dim of 1
+
+    eg = expert_dense(p["experts"]["gate"]["w"], einp,
+                      lora.get("experts/gate"), alpha)
+    eu = expert_dense(p["experts"]["up"]["w"], einp,
+                      lora.get("experts/up"), alpha)
+    eh = jax.nn.silu(eg) * eu
+    eo = expert_dense(p["experts"]["down"]["w"], eh,
+                      lora.get("experts/down"), alpha)  # (1,e_local,ep*cap,d)
+
+    # inverse a2a back to token owners:
+    # (e_local, ep*cap, d) --split ax1 / concat ax0--> (e, cap, d)
+    eo = lax.all_to_all(eo[0], model_axis, split_axis=1, concat_axis=0,
+                        tiled=True)
+    gathered = eo[rows, cols] * keep[:, None].astype(eo.dtype)
+    wflat = w.reshape(-1)[order]
+    y = jnp.zeros((n, d), eo.dtype).at[token_of].add(
+        gathered * wflat[:, None].astype(eo.dtype))
+
+    if "shared" in p:
+        sh = p["shared"]
+        y = y + dense(sh["down"],
+                      jax.nn.silu(dense(sh["gate"], flat,
+                                        lora.get("shared/gate"), alpha)) *
+                      dense(sh["up"], flat, lora.get("shared/up"), alpha),
+                      lora.get("shared/down"), alpha)
+    y = y.reshape(b, s, d)
+    if cfg.post_block_norm:
+        y = norm(p["post_ln"], y, cfg.norm_eps)
+    return y

@@ -1,0 +1,189 @@
+"""The paper's experiment models (Section 5.1) in functional JAX.
+
+* ``mlp``       -- 784-200-200-10 ReLU MLP (MNIST/FMNIST).
+* ``cnn_mnist`` -- conv32-pool-conv64-pool-fc512-fc10 (MNIST/FMNIST).
+* ``cnn_cifar`` -- 2x(conv-conv-pool-drop) + n_dense x fc512 + fc10
+                   (CIFAR: n_dense=2, CINIC: n_dense=4 per the paper).
+
+LoRA attaches to dense ("fc*", "out") layers only, matching the paper
+("LoRA is applied only to dense layers"); conv kernels, biases and norms
+remain fully trainable and are aggregated with plain FedAvg in every method.
+
+Deviation noted in DESIGN.md: the paper's CIFAR net uses BatchNorm with
+running statistics; we use batch-statistics normalization (no running
+state), the common choice in FL research where client BN state is
+problematic to aggregate.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.lora import apply_pair
+
+Array = jax.Array
+PyTree = Any
+
+
+# ------------------------------------------------------------ layer ops ----
+def dense_init(key, fan_out: int, fan_in: int, dtype=jnp.float32) -> dict:
+    wkey, _ = jax.random.split(key)
+    scale = jnp.sqrt(2.0 / fan_in)
+    return {"w": jax.random.normal(wkey, (fan_out, fan_in), dtype) * scale,
+            "b": jnp.zeros((fan_out,), dtype)}
+
+
+def dense_apply(p: dict, x: Array, lora_pair=None, alpha: float = 16.0):
+    y = jnp.einsum("...i,oi->...o", x, p["w"]) + p["b"]
+    if lora_pair is not None:
+        y = y + apply_pair(x, lora_pair, alpha)
+    return y
+
+
+def conv_init(key, out_c: int, in_c: int, k: int = 3, dtype=jnp.float32):
+    scale = jnp.sqrt(2.0 / (in_c * k * k))
+    return {"w": jax.random.normal(key, (k, k, in_c, out_c), dtype) * scale,
+            "b": jnp.zeros((out_c,), dtype)}
+
+
+def conv_apply(p: dict, x: Array) -> Array:
+    """NHWC conv, SAME padding, stride 1."""
+    y = lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def maxpool2(x: Array) -> Array:
+    return lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
+                             (1, 2, 2, 1), "VALID")
+
+
+def batch_stat_norm(x: Array, scale: Array, bias: Array,
+                    eps: float = 1e-5) -> Array:
+    mean = jnp.mean(x, axis=tuple(range(x.ndim - 1)), keepdims=True)
+    var = jnp.var(x, axis=tuple(range(x.ndim - 1)), keepdims=True)
+    return (x - mean) * lax.rsqrt(var + eps) * scale + bias
+
+
+def dropout(key, x: Array, rate: float, train: bool) -> Array:
+    if not train or rate <= 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+# ---------------------------------------------------------------- models ----
+class PaperModel(NamedTuple):
+    name: str
+    init: Callable[[Array], PyTree]
+    apply: Callable[..., Array]        # (params, lora, x, train, rng)
+    lora_specs: dict[str, tuple[int, int]]
+
+
+def mlp(input_dim: int = 784, hidden: int = 200,
+        n_classes: int = 10) -> PaperModel:
+    specs = {"fc1": (hidden, input_dim), "fc2": (hidden, hidden),
+             "out": (n_classes, hidden)}
+
+    def init(key):
+        ks = jax.random.split(key, 3)
+        return {"fc1": dense_init(ks[0], hidden, input_dim),
+                "fc2": dense_init(ks[1], hidden, hidden),
+                "out": dense_init(ks[2], n_classes, hidden)}
+
+    def apply(params, lora, x, train: bool = False, rng=None):
+        del train, rng
+        lora = lora or {}
+        h = x.reshape(x.shape[0], -1)
+        h = jax.nn.relu(dense_apply(params["fc1"], h, lora.get("fc1")))
+        h = jax.nn.relu(dense_apply(params["fc2"], h, lora.get("fc2")))
+        return dense_apply(params["out"], h, lora.get("out"))
+
+    return PaperModel("mlp", init, apply, specs)
+
+
+def cnn_mnist(n_classes: int = 10) -> PaperModel:
+    fc_in = 7 * 7 * 64
+    specs = {"fc1": (512, fc_in), "out": (n_classes, 512)}
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        return {"conv1": conv_init(ks[0], 32, 1),
+                "conv2": conv_init(ks[1], 64, 32),
+                "fc1": dense_init(ks[2], 512, fc_in),
+                "out": dense_init(ks[3], n_classes, 512)}
+
+    def apply(params, lora, x, train: bool = False, rng=None):
+        del train, rng
+        lora = lora or {}
+        h = jax.nn.relu(conv_apply(params["conv1"], x))
+        h = maxpool2(h)
+        h = jax.nn.relu(conv_apply(params["conv2"], h))
+        h = maxpool2(h)
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(dense_apply(params["fc1"], h, lora.get("fc1")))
+        return dense_apply(params["out"], h, lora.get("out"))
+
+    return PaperModel("cnn_mnist", init, apply, specs)
+
+
+def cnn_cifar(n_classes: int = 10, n_dense: int = 2,
+              in_hw: int = 32, in_c: int = 3,
+              drop: float = 0.25) -> PaperModel:
+    fc_in = (in_hw // 4) * (in_hw // 4) * 64
+    specs = {}
+    dims = [fc_in] + [512] * n_dense
+    for i in range(n_dense):
+        specs[f"fc{i + 1}"] = (512, dims[i])
+    specs["out"] = (n_classes, 512)
+
+    def init(key):
+        ks = jax.random.split(key, 8 + n_dense)
+        params = {
+            "conv1a": conv_init(ks[0], 32, in_c),
+            "conv1b": conv_init(ks[1], 32, 32),
+            "norm1": {"scale": jnp.ones((32,)), "bias": jnp.zeros((32,))},
+            "conv2a": conv_init(ks[2], 64, 32),
+            "conv2b": conv_init(ks[3], 64, 64),
+            "norm2": {"scale": jnp.ones((64,)), "bias": jnp.zeros((64,))},
+        }
+        for i in range(n_dense):
+            params[f"fc{i + 1}"] = dense_init(ks[4 + i], 512, dims[i])
+        params["out"] = dense_init(ks[4 + n_dense], n_classes, 512)
+        return params
+
+    def apply(params, lora, x, train: bool = False, rng=None):
+        lora = lora or {}
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        r = jax.random.split(rng, 2 + n_dense)
+        h = jax.nn.relu(conv_apply(params["conv1a"], x))
+        h = jax.nn.relu(conv_apply(params["conv1b"], h))
+        h = batch_stat_norm(h, params["norm1"]["scale"],
+                            params["norm1"]["bias"])
+        h = maxpool2(h)
+        h = dropout(r[0], h, drop, train)
+        h = jax.nn.relu(conv_apply(params["conv2a"], h))
+        h = jax.nn.relu(conv_apply(params["conv2b"], h))
+        h = batch_stat_norm(h, params["norm2"]["scale"],
+                            params["norm2"]["bias"])
+        h = maxpool2(h)
+        h = dropout(r[1], h, drop, train)
+        h = h.reshape(h.shape[0], -1)
+        for i in range(n_dense):
+            h = jax.nn.relu(dense_apply(params[f"fc{i + 1}"], h,
+                                        lora.get(f"fc{i + 1}")))
+            h = dropout(r[2 + i], h, drop, train)
+        return dense_apply(params["out"], h, lora.get("out"))
+
+    return PaperModel("cnn_cifar", init, apply, specs)
+
+
+PAPER_MODELS = {
+    "mlp": mlp,
+    "cnn_mnist": cnn_mnist,
+    "cnn_cifar": cnn_cifar,
+}

@@ -1,0 +1,221 @@
+"""Model assembly: embedding -> scanned stages of blocks -> head.
+
+Every repeating unit is a ``jax.lax.scan`` over stacked block params (and
+stacked LoRA adapters, and stacked KV caches), keeping the HLO size
+independent of depth.  Heterogeneous units (jamba 7:1, gemma2
+local/global) are a static python loop *inside* the scanned body.
+
+Entry points (all pure):
+  forward_train(params, adapters, batch)          -> logits
+  loss(params, adapters, batch)                   -> scalar CE (+ MTP term)
+  prefill(params, adapters, batch)                -> (last_logits, cache)
+  decode_step(params, adapters, cache, token, pos)-> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.lora import init_pair
+from .attention import (gqa_forward, gqa_init, gqa_init_cache,
+                        gqa_lora_targets, mla_forward, mla_init,
+                        mla_init_cache, MLA_LORA_TARGETS)
+from .common import (dense, dense_init, embed, embed_init, norm, norm_init,
+                     softcap, unembed)
+from .mamba import (mamba_forward, mamba_init, mamba_init_cache,
+                    MAMBA_LORA_TARGETS)
+from .mlp import mlp_forward, mlp_init, mlp_lora_targets
+from .moe import moe_forward, moe_init, MOE_LORA_TARGETS
+
+Array = jax.Array
+PyTree = Any
+
+
+# ============================================================ block level ====
+def block_init(key, cfg, spec) -> dict:
+    k1, k2 = jax.random.split(key)
+    if spec.kind == "mamba":
+        p = {"mix": mamba_init(k1, cfg)}
+    elif spec.kind == "mla":
+        p = {"mix": mla_init(k1, cfg, spec)}
+    else:
+        p = {"mix": gqa_init(k1, cfg, spec)}
+    if spec.ffn == "dense":
+        p["ffn"] = mlp_init(k2, cfg)
+    elif spec.ffn == "moe":
+        p["ffn"] = moe_init(k2, cfg)
+    return p
+
+
+def block_forward(bp, blora, x, cfg, spec, *, mode, positions=None,
+                  cache=None, pos=None, enc_out=None, alpha=16.0,
+                  mla_absorbed=False, capacity=None):
+    blora = blora or {}
+    if spec.kind == "mamba":
+        y, c = mamba_forward(bp["mix"], blora.get("mix"), x, cfg, mode=mode,
+                             cache=cache, pos=pos, alpha=alpha)
+    elif spec.kind == "mla":
+        y, c = mla_forward(bp["mix"], blora.get("mix"), x, cfg, spec,
+                           mode=mode, positions=positions, cache=cache,
+                           pos=pos, alpha=alpha, absorbed=mla_absorbed,
+                           capacity=capacity)
+    else:
+        y, c = gqa_forward(bp["mix"], blora.get("mix"), x, cfg, spec,
+                           mode=mode, positions=positions, cache=cache,
+                           pos=pos, enc_out=enc_out, alpha=alpha,
+                           capacity=capacity)
+    x = x + y
+    if spec.ffn == "dense":
+        x = x + mlp_forward(bp["ffn"], blora.get("ffn"), x, cfg, alpha)
+    elif spec.ffn == "moe":
+        if cfg.moe_mode == "ep_a2a":
+            from .moe_ep import moe_forward_ep_wrapped
+            x = x + moe_forward_ep_wrapped(bp["ffn"], blora.get("ffn"), x,
+                                           cfg, alpha)
+        else:
+            x = x + moe_forward(bp["ffn"], blora.get("ffn"), x, cfg, alpha)
+    return x, c
+
+
+def block_init_cache(cfg, spec, batch: int, seq_len: int, dtype) -> dict:
+    if spec.kind == "mamba":
+        return mamba_init_cache(cfg, batch, dtype)
+    if spec.kind == "mla":
+        return mla_init_cache(cfg, spec, batch, seq_len, dtype)
+    return gqa_init_cache(cfg, spec, batch, seq_len, dtype)
+
+
+def block_lora_specs(cfg, spec) -> dict[str, tuple]:
+    """{relpath: (fan_out, fan_in, extra_leading)} for one block."""
+    d = cfg.d_model
+    out: dict[str, tuple] = {}
+    if spec.kind == "mamba":
+        d_in = cfg.ssm_expand * d
+        h = d_in // cfg.ssm_head_dim
+        n = cfg.ssm_state
+        dims = {"in_proj": (2 * d_in + 2 * n + h, d),
+                "out_proj": (d, d_in)}
+        for t in MAMBA_LORA_TARGETS:
+            out[f"mix/{t}"] = dims[t] + ((),)
+    elif spec.kind == "mla":
+        qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+        dims = {
+            "q_a": (cfg.q_lora_rank, d),
+            "q_b": (cfg.n_heads * qk, cfg.q_lora_rank),
+            "kv_a": (cfg.kv_lora_rank + cfg.qk_rope_dim, d),
+            "kv_b": (cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim),
+                     cfg.kv_lora_rank),
+            "o": (d, cfg.n_heads * cfg.v_head_dim),
+        }
+        for t in MLA_LORA_TARGETS:
+            out[f"mix/{t}"] = dims[t] + ((),)
+    else:
+        h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        dims = {"q": (h * hd, d), "k": (kv * hd, d), "v": (kv * hd, d),
+                "o": (d, h * hd), "xq": (h * hd, d), "xk": (kv * hd, d),
+                "xv": (kv * hd, d), "xo": (d, h * hd)}
+        for t in gqa_lora_targets(spec):
+            out[f"mix/{t}"] = dims[t] + ((),)
+    if spec.ffn == "dense":
+        f = cfg.d_ff
+        if cfg.mlp_act == "gelu_plain":
+            dims = {"fc1": (f, d), "fc2": (d, f)}
+        else:
+            dims = {"gate": (f, d), "up": (f, d), "down": (d, f)}
+        for t, v in dims.items():
+            out[f"ffn/{t}"] = v + ((),)
+    elif spec.ffn == "moe":
+        f = cfg.moe_d_ff or cfg.d_ff
+        e = cfg.n_experts + cfg.moe_pad_experts
+        for t in MOE_LORA_TARGETS:
+            fo, fi = (d, f) if t.endswith("down") else (f, d)
+            out[f"ffn/{t}"] = (fo, fi, (e,))
+        if cfg.n_shared_experts:
+            fs = f * cfg.n_shared_experts
+            out["ffn/shared/gate"] = (fs, d, ())
+            out["ffn/shared/up"] = (fs, d, ())
+            out["ffn/shared/down"] = (d, fs, ())
+    return out
+
+
+def _get_lora(blora: Mapping | None, prefix: str):
+    """Project 'mix/q'-style flat keys into the sub-dict for one module."""
+    if not blora:
+        return None
+    sub = {}
+    for k, v in blora.items():
+        if k.startswith(prefix + "/"):
+            sub[k[len(prefix) + 1:]] = v
+    return sub or None
+
+
+# ============================================================ stage level ====
+def stage_init(key, cfg, stage) -> dict:
+    def unit_init(k):
+        ks = jax.random.split(k, len(stage.unit))
+        return {f"b{i}": block_init(ks[i], cfg, spec)
+                for i, spec in enumerate(stage.unit)}
+    keys = jax.random.split(key, stage.repeat)
+    return jax.vmap(unit_init)(keys)
+
+
+def stage_lora_init(key, cfg, stage, r_max: int, rank) -> dict:
+    out = {}
+    for i, spec in enumerate(stage.unit):
+        specs = block_lora_specs(cfg, spec)
+        ks = jax.random.split(jax.random.fold_in(key, i), len(specs))
+        out[f"b{i}"] = {
+            path: init_pair(kk, fo, fi, r_max, rank,
+                            leading=(stage.repeat,) + extra)
+            for kk, (path, (fo, fi, extra)) in zip(ks,
+                                                   sorted(specs.items()))
+        }
+    return out
+
+
+REMAT_POLICIES = {
+    "full": lambda: jax.checkpoint_policies.nothing_saveable,
+    "dots": lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def stage_forward(sp, slora, x, cfg, stage, *, mode, positions=None,
+                  caches=None, pos=None, enc_out=None, alpha=16.0,
+                  remat=False, mla_absorbed=False, capacity=None):
+    """Scan over the stage's repeats. Returns (x, new_caches or None).
+
+    ``remat``: False | True ("full") | "full" | "dots" -- the checkpoint
+    policy applied to each scanned block during training."""
+
+    def body(x, xs):
+        bp_unit, bl_unit, cache_unit = xs
+        new_caches = {}
+        for i, spec in enumerate(stage.unit):
+            bp = bp_unit[f"b{i}"]
+            bl = None
+            if bl_unit is not None:
+                flat = bl_unit.get(f"b{i}")
+                bl = {"mix": _get_lora(flat, "mix"),
+                      "ffn": _get_lora(flat, "ffn")} if flat else None
+            c = cache_unit[f"b{i}"] if cache_unit is not None else None
+            x, cnew = block_forward(
+                bp, bl, x, cfg, spec, mode=mode, positions=positions,
+                cache=c, pos=pos, enc_out=enc_out, alpha=alpha,
+                mla_absorbed=mla_absorbed, capacity=capacity)
+            if cnew is not None:
+                new_caches[f"b{i}"] = cnew
+        return x, (new_caches or None)
+
+    if remat and mode == "full":
+        policy_name = "full" if remat is True else remat
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[policy_name]())
+
+    xs = (sp, slora, caches)
+    # lax.scan needs xs leaves with a leading `repeat` axis; None subtrees
+    # are threaded through untouched.
+    x, ys = lax.scan(lambda carry, xs_: body(carry, xs_), x, xs)
+    return x, ys

@@ -1,0 +1,113 @@
+"""Minimal optax-style optimizers in pure JAX (optax is not installed).
+
+An optimizer is a pair of pure functions:
+
+    init(params)                  -> state
+    update(grads, state, params)  -> (updates, state)      # updates are
+                                                           # *added* to params
+
+plus :func:`apply_updates`.  All states are pytrees, so they shard/jit
+exactly like params.  ``masked`` freezes a sub-tree (used for LoRA-only
+fine-tuning: base weights get zero updates and **no optimizer state**, which
+is what makes 100B+ fine-tuning fit on a pod).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates, is_leaf=lambda x: x is None)
+
+
+def _resolve_lr(lr, count):
+    return lr(count) if callable(lr) else lr
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        mu = (jax.tree.map(jnp.zeros_like, params) if momentum else None)
+        return {"count": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        del params
+        count = state["count"] + 1
+        step = _resolve_lr(lr, count)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g,
+                              state["mu"], grads)
+            eff = (jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+                   if nesterov else mu)
+        else:
+            mu, eff = None, grads
+        updates = jax.tree.map(lambda g: -step * g, eff)
+        return updates, {"count": count, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Adam / AdamW (decoupled decay when ``weight_decay > 0``)."""
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                              params),
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                              params),
+        }
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        step = _resolve_lr(lr, count)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) *
+                         g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = -step * (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            if weight_decay and p is not None:
+                u = u - step * weight_decay * p.astype(jnp.float32)
+            return u
+        if params is None:
+            updates = jax.tree.map(lambda m_, v_: upd(m_, v_, None), m, v)
+        else:
+            updates = jax.tree.map(upd, m, v, params)
+        return updates, {"count": count, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    def init(params):
+        return opt.init(params)
+
+    def update(grads, state, params=None):
+        sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                 for g in jax.tree.leaves(grads))
+        norm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(init, update)

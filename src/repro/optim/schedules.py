@@ -1,0 +1,27 @@
+"""Learning-rate schedules (callables of the int32 step count)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda count: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(peak: float, total_steps: int, warmup: int = 0,
+           floor: float = 0.0):
+    def fn(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / jnp.maximum(warmup, 1)
+        t = jnp.clip((c - warmup) / jnp.maximum(total_steps - warmup, 1),
+                     0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(c < warmup, warm, cos)
+    return fn
+
+
+def exponential(init: float, decay: float, every: int):
+    def fn(count):
+        return jnp.asarray(init, jnp.float32) * decay ** (
+            count.astype(jnp.float32) / every)
+    return fn

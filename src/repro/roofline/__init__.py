@@ -1,0 +1,6 @@
+from . import hw
+from .analysis import (Roofline, active_params, collective_bytes_from_hlo,
+                       model_flops_estimate)
+
+__all__ = ["hw", "Roofline", "active_params", "collective_bytes_from_hlo",
+           "model_flops_estimate"]

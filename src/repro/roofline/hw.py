@@ -1,0 +1,7 @@
+"""TPU v5e hardware constants (per chip) for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (~ per-chip injection)
+
+CHIPS_PER_POD = 256

@@ -1,0 +1,3 @@
+from . import rules
+
+__all__ = ["rules"]

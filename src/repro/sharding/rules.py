@@ -1,0 +1,195 @@
+"""Logical sharding rules: pytree paths -> PartitionSpec.
+
+Scheme (megatron-style TP x DP, FLaaS pod axis on top):
+  batch               -> ("pod", "data") when present, else ("data",)
+  fused head dims     -> "model"    (q/k/v/up projections: column parallel)
+  contracting dims    -> "model"    (o/down projections: row parallel)
+  vocab               -> "model" when divisible, else replicated
+  MoE expert axis     -> "model"    (expert parallelism)
+  LoRA adapters       -> replicated (tiny; psum'd grads)
+  KV cache time axis  -> data axes when the batch axis is unshardable
+                         (long_500k, global_batch=1)
+
+Every rule degrades to replication when the dimension does not divide the
+mesh axis (e.g. whisper's 51866 vocab) -- recorded via ``maybe()``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def maybe(mesh: Mesh, dim: int, axes):
+    """axes if dim divides the mesh axes product, else None (replicate)."""
+    return axes if dim % axis_size(mesh, axes) == 0 else None
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+# --------------------------------------------------------------- params ----
+_COL = ("q", "k", "v", "xq", "xk", "xv", "gate", "up", "fc1", "q_b",
+        "kv_b", "in_proj")
+_ROW = ("o", "xo", "down", "fc2", "out_proj")
+_REPL = ("q_a", "kv_a", "router", "proj")
+
+
+def param_spec_for(path: str, leaf, mesh: Mesh, fsdp: bool = False) -> P:
+    """``fsdp=True`` additionally shards the *contracting* dim of big 2-D
+    kernels over the data axes.  Legitimate here even for training because
+    the base is FROZEN in LoRA fine-tuning -- there are no base gradients
+    to all-reduce, so zero-redundancy sharding costs only the forward
+    all-gather (SSPerf iteration A1)."""
+    parts = path.split("/")
+    name = parts[-2] if parts[-1] in ("w", "b") else parts[-1]
+    ndim = leaf.ndim
+    m = "model"
+    da = data_axes(mesh)
+
+    def lead(n_extra: int, *last) -> P:
+        return P(*([None] * (ndim - len(last))), *last)
+
+    def fs(dim: int):
+        return maybe(mesh, dim, da) if fsdp else None
+
+    if parts[-1] == "b":                      # biases: shard like fan-out
+        if name in _COL:
+            return lead(0, maybe(mesh, leaf.shape[-1], m))
+        return lead(0, None)
+    if "experts" in parts:                    # (L, E, in, out): expert axis
+        e_axis = ndim - 3
+        spec = [None] * ndim
+        if leaf.shape[e_axis] % axis_size(mesh, m) == 0:
+            spec[e_axis] = m
+        if fsdp and leaf.shape[-2] % axis_size(mesh, da) == 0:
+            spec[ndim - 2] = da
+        return P(*spec)
+    if name == "table":                       # embedding (V, d)
+        return P(maybe(mesh, leaf.shape[0], m), fs(leaf.shape[1]))
+    if name == "lm_head" or (len(parts) >= 2 and parts[-2] == "lm_head"):
+        return lead(0, fs(leaf.shape[-2]), maybe(mesh, leaf.shape[-1], m))
+    if name in _COL:
+        return lead(0, fs(leaf.shape[-2]), maybe(mesh, leaf.shape[-1], m))
+    if name in _ROW:
+        return lead(0, maybe(mesh, leaf.shape[-2], m), fs(leaf.shape[-1]))
+    if name == "pos":                         # whisper learned positions
+        return P(*([None] * ndim))
+    return P(*([None] * ndim))                # norms, scalars, conv, misc
+
+
+def param_specs(params_shapes: PyTree, mesh: Mesh,
+                fsdp: bool = False) -> PyTree:
+    def f(path, leaf):
+        return param_spec_for(_path_str(path), leaf, mesh, fsdp)
+    return jax.tree_util.tree_map_with_path(f, params_shapes)
+
+
+def replicated_specs(tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)), tree)
+
+
+def adapter_specs(ad_shapes: PyTree, mesh: Mesh) -> PyTree:
+    """LoRA adapters are tiny and replicated -- EXCEPT per-expert adapters
+    (A (L, E, r, d), B (L, E, out, r)) whose expert axis is sharded over
+    'model' exactly like the expert weights they adapt.  Their grads then
+    stay shard-local instead of being all-reduced at adapter size x E."""
+    def f(path, leaf):
+        path_s = _path_str(path)
+        if "experts" in path_s and leaf.ndim == 4:
+            e = leaf.shape[1]
+            spec = [None] * leaf.ndim
+            if e % axis_size(mesh, "model") == 0:
+                spec[1] = "model"
+            return P(*spec)
+        return P(*([None] * leaf.ndim))
+    return jax.tree_util.tree_map_with_path(f, ad_shapes)
+
+
+# ---------------------------------------------------------------- batch ----
+def batch_specs(batch_shapes: PyTree, mesh: Mesh) -> PyTree:
+    da = data_axes(mesh)
+
+    def f(leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        ax = da if b % axis_size(mesh, da) == 0 else (
+            ("data",) if b % mesh.shape["data"] == 0 else None)
+        return P(ax, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(f, batch_shapes)
+
+
+# ---------------------------------------------------------------- cache ----
+def cache_specs(cache_shapes: PyTree, mesh: Mesh, global_batch: int,
+                seq_shard_model: bool = False) -> PyTree:
+    """Caches are stacked (L, B, T, ...) kv / (L, B, T, R) latent /
+    (L, B, ...) mamba states.  Shard batch over data axes when divisible;
+    otherwise (long_500k) shard the *time* axis of attention caches.
+
+    ``seq_shard_model=True`` additionally shards the time axis over the
+    'model' axis (SSPerf C3): decode attention has one query, so the
+    partial-softmax all-reduce it induces is tiny, while the per-device
+    cache shrinks by the model-axis size.  Only applied to caches without
+    a model-sharded head axis (MLA latent)."""
+    da = data_axes(mesh)
+    batch_shardable = global_batch % axis_size(mesh, da) == 0
+    if not batch_shardable and global_batch % mesh.shape["data"] == 0:
+        da = ("data",)
+        batch_shardable = True
+    m = "model"
+
+    def f(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        spec = [None] * leaf.ndim
+        if batch_shardable:
+            spec[1] = da
+        if name in ("k", "v", "xk", "xv"):        # (L,B,T,KV,hd)
+            spec[3] = maybe(mesh, leaf.shape[3], m)
+            if not batch_shardable:
+                spec[2] = da if leaf.shape[2] % axis_size(mesh, da) == 0 \
+                    else maybe(mesh, leaf.shape[2], ("data",))
+        elif name in ("ckv", "kr"):               # (L,B,T,R)
+            if not batch_shardable:
+                spec[2] = da if leaf.shape[2] % axis_size(mesh, da) == 0 \
+                    else maybe(mesh, leaf.shape[2], ("data",))
+            elif seq_shard_model:
+                spec[2] = maybe(mesh, leaf.shape[2], m)
+        elif name == "ssm":                       # (L,B,H,P,N)
+            spec[2] = maybe(mesh, leaf.shape[2], m)
+        elif name == "conv":                      # (L,B,K-1,C)
+            spec[3] = maybe(mesh, leaf.shape[3], m)
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+
+# ------------------------------------------------------------- sharding ----
+def to_shardings(spec_tree: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shaped(shapes: PyTree, shardings: PyTree) -> PyTree:
+    """Attach shardings to ShapeDtypeStructs (dry-run inputs)."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)

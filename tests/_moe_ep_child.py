@@ -1,0 +1,44 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.configs import get_config
+from repro.models.moe import moe_init, moe_forward
+from repro.models.moe_ep import moe_forward_ep
+
+cfg = get_config("granite-moe-3b-a800m").reduced(
+    d_model=64, n_experts=8, experts_per_token=2, moe_d_ff=32,
+    capacity_factor=8.0)
+key = jax.random.PRNGKey(0)
+p = moe_init(key, cfg)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(8, 16, 64)), jnp.float32)
+
+# reference: single-device sort path with 1 group (same capacity math)
+y_ref = moe_forward(p, None, x, cfg, n_groups=8)
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+pspec = jax.tree.map(lambda _: P(), p)
+pspec["experts"] = {k: {"w": P("model", None, None)} for k in
+                    ("gate", "up", "down")}
+
+def body(p_local, x_local):
+    return moe_forward_ep(p_local, None, x_local, cfg,
+                          model_axis="model")
+
+fn = jax.jit(jax.shard_map(body, mesh=mesh,
+                           in_specs=(pspec, P(("data", "model"), None, None)),
+                           out_specs=P(("data", "model"), None, None),
+                           check_vma=False))
+with mesh:
+    pd = jax.device_put(p, jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec,
+        is_leaf=lambda v: isinstance(v, P)))
+    xd = jax.device_put(x, NamedSharding(mesh, P(("data", "model"), None, None)))
+    y = fn(pd, xd)
+print("max diff", float(jnp.abs(y - y_ref).max()),
+      "ref scale", float(jnp.abs(y_ref).max()))
+np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                           rtol=2e-4, atol=2e-4)
+print("EP_OK")

@@ -1,0 +1,131 @@
+"""Model-level property tests: causality, masking, rope, softcap, SSD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.common import apply_rope, softcap
+from repro.models.mamba import ssd_chunked, _segsum
+from repro.models.model import make_model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name", ["h2o-danube-3-4b", "mamba2-1.3b",
+                                  "gemma2-9b", "deepseek-v3-671b"])
+def test_causality(name):
+    """Changing tokens after position t must not change logits at <= t."""
+    cfg = get_config(name).reduced()
+    model = make_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (1, 32))
+    t = 16
+    toks2 = toks.copy()
+    toks2[:, t + 1:] = rng.integers(0, cfg.vocab_size,
+                                    toks2[:, t + 1:].shape)
+    l1, _ = model.forward(params, None, {"tokens": jnp.asarray(toks)})
+    l2, _ = model.forward(params, None, {"tokens": jnp.asarray(toks2)})
+    np.testing.assert_allclose(np.asarray(l1[:, :t + 1], np.float32),
+                               np.asarray(l2[:, :t + 1], np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_swa_locality():
+    """With window w, logits at t depend only on tokens in (t-w, t]."""
+    from dataclasses import replace
+    from repro.configs.base import BlockSpec, Stage
+    cfg = get_config("h2o-danube-3-4b").reduced()
+    stages = tuple(Stage(unit=tuple(
+        BlockSpec(kind=b.kind, ffn=b.ffn, window=4) for b in s.unit),
+        repeat=s.repeat) for s in cfg.stages)
+    cfg = replace(cfg, stages=stages)
+    model = make_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, cfg.vocab_size, (1, 32))
+    toks2 = toks.copy()
+    toks2[:, :8] = rng.integers(0, cfg.vocab_size, (1, 8))  # far past
+    l1, _ = model.forward(params, None, {"tokens": jnp.asarray(toks)})
+    l2, _ = model.forward(params, None, {"tokens": jnp.asarray(toks2)})
+    # last position: window 4 x 2 layers => receptive field ~8 < 24 back
+    np.testing.assert_allclose(np.asarray(l1[:, -1], np.float32),
+                               np.asarray(l2[:, -1], np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j (the rope invariant)."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 64)), jnp.float32)
+
+    def dot_at(i, j):
+        qr = apply_rope(q, jnp.asarray([[i]]), 10000.0, "full")
+        kr = apply_rope(k, jnp.asarray([[j]]), 10000.0, "full")
+        return float(jnp.sum(qr * kr))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(15, 13), rel=1e-4)
+    assert dot_at(0, 0) == pytest.approx(dot_at(9, 9), rel=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), rel=1e-3)
+
+
+def test_rope_half_leaves_second_half_unrotated():
+    x = jnp.ones((1, 1, 1, 8), jnp.float32)
+    out = apply_rope(x, jnp.asarray([[7]]), 10000.0, "half")
+    np.testing.assert_allclose(np.asarray(out[..., 4:]), 1.0)
+    assert not np.allclose(np.asarray(out[..., :4]), 1.0)
+
+
+def test_softcap_bounds():
+    x = jnp.asarray([-1e6, -1.0, 0.0, 1.0, 1e6], jnp.float32)
+    y = np.asarray(softcap(x, 30.0))
+    assert (np.abs(y) <= 30.0 + 1e-4).all()
+    assert y[2] == 0.0 and abs(y[1] + y[3]) < 1e-6
+    np.testing.assert_allclose(np.asarray(softcap(x, 0.0)), np.asarray(x))
+
+
+# ------------------------------------------------------------------ SSD ----
+def _ssd_ref(xdt, dtA, Bm, Cm):
+    """O(L^2)-free sequential recurrence oracle."""
+    b, l, h, p = xdt.shape
+    n = Bm.shape[-1]
+    hstate = np.zeros((b, h, p, n), np.float64)
+    ys = []
+    for t in range(l):
+        a = np.exp(np.asarray(dtA[:, t], np.float64))          # (b,h)
+        hstate = hstate * a[..., None, None] + np.einsum(
+            "bhp,bn->bhpn", np.asarray(xdt[:, t], np.float64),
+            np.asarray(Bm[:, t], np.float64))
+        ys.append(np.einsum("bhpn,bn->bhp", hstate,
+                            np.asarray(Cm[:, t], np.float64)))
+    return np.stack(ys, 1), hstate
+
+
+@settings(max_examples=10, deadline=None)
+@given(l=st.sampled_from([8, 16, 32]), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 99))
+def test_prop_ssd_chunked_matches_recurrence(l, chunk, seed):
+    rng = np.random.default_rng(seed)
+    b, h, p, n = 2, 3, 4, 5
+    xdt = jnp.asarray(rng.normal(size=(b, l, h, p)), jnp.float32) * 0.5
+    dtA = -jnp.abs(jnp.asarray(rng.normal(size=(b, l, h)),
+                               jnp.float32)) * 0.5
+    Bm = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32) * 0.5
+    Cm = jnp.asarray(rng.normal(size=(b, l, n)), jnp.float32) * 0.5
+    y, hlast = ssd_chunked(xdt, dtA, Bm, Cm, chunk)
+    y_ref, h_ref = _ssd_ref(xdt, dtA, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y, np.float32), y_ref,
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(hlast, np.float32), h_ref,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_segsum_lower_triangular():
+    x = jnp.asarray([[1.0, 2.0, 3.0]])
+    s = np.asarray(_segsum(x))[0]
+    assert s[0, 0] == 0.0 and s[1, 0] == 2.0 and s[2, 0] == 5.0
+    assert s[2, 1] == 3.0
+    assert np.isneginf(s[0, 1]) and np.isneginf(s[1, 2])
