@@ -1,6 +1,9 @@
-"""Server aggregation throughput: RBLA vs zero-padding vs FedAvg, pure-jnp
-core vs the Pallas kernel (interpret mode on CPU -- relative numbers
-document the harness; absolute TPU numbers require hardware).
+"""Server aggregation throughput across strategies and backends.
+
+Every registered aggregation strategy is benchmarked on its reference
+(jnp) tree path; strategies with a kernel path are also benchmarked on
+``backend="pallas"`` (interpreter mode on CPU -- relative numbers document
+the harness; absolute TPU numbers require hardware).
 
 The paper motivates RBLA partly by zero-padding's wasted compute on
 structural zeros; this bench quantifies server-side aggregation cost per
@@ -14,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregate, stacked_rank_masks
+from repro.core import get_strategy, list_strategies, stacked_rank_masks
 from repro.kernels import rbla_agg
 
 CASES = [
@@ -23,6 +26,8 @@ CASES = [
     (10, 128, 4096, 8),
     (32, 64, 1024, 8),
 ]
+
+BENCH_METHODS = ("rbla", "zeropad", "fedavg", "rbla_ranked")
 
 
 def bench(fn, *args, iters=5):
@@ -36,6 +41,7 @@ def bench(fn, *args, iters=5):
 
 def main():
     rng = np.random.default_rng(0)
+    print(f"# registered strategies: {','.join(list_strategies())}")
     for n, r, d, nt in CASES:
         ranks = jnp.asarray(rng.integers(1, r + 1, n), jnp.int32)
         masks = stacked_rank_masks(r, ranks)[:, :, None]
@@ -45,16 +51,27 @@ def main():
         mtree = {f"t{i}": masks for i in range(nt)}
         w = jnp.ones(n)
 
-        for method in ("rbla", "zeropad", "fedavg"):
-            f = jax.jit(lambda t, m, w, meth=method: aggregate(
-                t, m, w, method=meth))
+        for method in BENCH_METHODS:
+            s = get_strategy(method)
+            f = jax.jit(lambda t, m, ww, s=s: s.aggregate_tree(
+                t, m, ww, client_ranks=ranks))
             us = bench(f, tree, mtree, w)
-            print(f"agg/{method}/n{n}_r{r}_d{d}x{nt},{us:.0f},core-jnp")
+            print(f"agg/{method}/n{n}_r{r}_d{d}x{nt},{us:.0f},core-ref")
 
         x0 = tree["t0"]
-        us = bench(lambda x: rbla_agg(x, ranks, w, interpret=True), x0)
-        print(f"agg/rbla_kernel/n{n}_r{r}_d{d}x1,{us:.0f},"
-              "pallas-interpret")
+        for method in BENCH_METHODS:
+            s = get_strategy(method)
+            if not s.supports_pallas:
+                continue
+            wt = s.transform_weights(w, ranks)
+            # mirror the strategy's kernel call: fedavg (use_mask=False)
+            # runs the kernel with full-rank masks
+            kranks = ranks if s.use_mask else jnp.full((n,), r, jnp.int32)
+            us = bench(lambda x, ww, s=s, kr=kranks: rbla_agg(
+                x, kr, ww, method=s.pallas_method), x0, wt)
+            mode = "pallas" if jax.default_backend() in ("tpu", "gpu") \
+                else "pallas-interpret"
+            print(f"agg/{method}_kernel/n{n}_r{r}_d{d}x1,{us:.0f},{mode}")
 
 
 if __name__ == "__main__":

@@ -18,9 +18,9 @@ import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import aggregate, stacked_rank_masks
-from repro.core.distributed import make_distributed_aggregator
+from repro.core import get_strategy, stacked_rank_masks
 
+strategy = get_strategy("rbla")
 n, r, d = 8, 64, 2048
 rng = np.random.default_rng(0)
 ranks = jnp.asarray(rng.integers(1, r + 1, n), jnp.int32)
@@ -29,14 +29,14 @@ x = jnp.asarray(rng.normal(size=(n, r, d)), jnp.float32) * masks
 w = jnp.asarray(rng.uniform(0.5, 2.0, n), jnp.float32)
 
 mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("clients",))
-agg = make_distributed_aggregator(mesh, client_axis="clients")
+agg = strategy.make_distributed_aggregator(mesh, client_axis="clients")
 sh = NamedSharding(mesh, P("clients"))
 xd = jax.device_put(x, sh)
 md = jax.device_put(jnp.broadcast_to(masks, x.shape), sh)
 wd = jax.device_put(w, sh)
 
 out = agg(xd, md, wd)
-want = aggregate({"t": x}, {"t": masks}, w, method="rbla")["t"]
+want = strategy.aggregate_tree({"t": x}, {"t": masks}, w)["t"]
 np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                            rtol=1e-5, atol=1e-6)
 
@@ -48,8 +48,8 @@ def bench(f, *a, iters=10):
     return (time.time() - t0) / iters * 1e6
 
 us_dist = bench(agg, xd, md, wd)
-host = jax.jit(lambda x, m, w: aggregate({"t": x}, {"t": m}, w,
-                                         method="rbla")["t"])
+host = jax.jit(lambda x, m, w: strategy.aggregate_tree({"t": x}, {"t": m},
+                                                       w)["t"])
 us_host = bench(host, x, masks, w)
 print(f"agg/distributed_psum/8dev_n{n}_r{r}_d{d},{us_dist:.0f},"
       f"equivalent=True")

@@ -27,7 +27,9 @@ COLUMNS = [
 ]
 
 METHODS = ["zeropad", "fft", "rbla"]
-EXTRA_METHODS = ["rbla_ranked", "rbla_norm"]          # beyond-paper
+# beyond-paper strategies (svd became dispatchable with the strategy
+# registry; any register_strategy'd name can be listed here)
+EXTRA_METHODS = ["rbla_ranked", "rbla_norm", "svd"]
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 

@@ -12,9 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import (aggregate, rbla_leaf, stacked_rank_masks,
-                        zeropad_leaf)
-from repro.core.distributed import make_distributed_aggregator
+from repro.core import get_strategy, rbla_leaf, stacked_rank_masks, \
+    zeropad_leaf
 from repro.lora import init_pair, set_ranks, pair_masks
 
 R_MAX, FAN_IN, FAN_OUT = 8, 16, 12
@@ -45,8 +44,10 @@ for row in range(R_MAX):
 print("  (zero-padding shrinks scarce rows by owners/n; RBLA does not)")
 
 print("\n== the same aggregation as a pod-level collective ==")
+# every registered strategy carries its own distributed shard_map path:
 mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(8), ("clients",))
-agg = make_distributed_aggregator(mesh, client_axis="clients")
+agg = get_strategy("rbla").make_distributed_aggregator(
+    mesh, client_axis="clients")
 sh = NamedSharding(mesh, P("clients"))
 out = agg(jax.device_put(stacked, sh),
           jax.device_put(jnp.broadcast_to(masks, stacked.shape), sh),

@@ -23,7 +23,10 @@ def main():
                     choices=["mnist", "fmnist", "cifar", "cinic"])
     ap.add_argument("--model", default="mlp",
                     choices=["mlp", "cnn_mnist", "cnn_cifar"])
-    ap.add_argument("--methods", default="rbla,zeropad,fft")
+    ap.add_argument("--methods", default="rbla,zeropad,fft",
+                    help="comma-separated registered strategy names "
+                         "(see repro.core.list_strategies(); e.g. add "
+                         "rbla_ranked,rbla_norm,svd)")
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--target", type=float, default=0.90)
     ap.add_argument("--n-per-class", type=int, default=400)

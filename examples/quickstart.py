@@ -7,7 +7,9 @@ from repro.fl import FLConfig, run_simulation
 
 cfg = FLConfig(
     dataset="mnist", model="mlp",
-    method="rbla",              # try: "zeropad", "fft", "rbla_norm"
+    method="rbla",              # any registered AggregationStrategy name:
+                                # "zeropad", "fft", "rbla_ranked",
+                                # "rbla_norm", "svd" (see docs/strategies.md)
     rounds=6, n_clients=10,
     n_per_class=200, n_test_per_class=50,
     local_epochs=2, lr=0.05,

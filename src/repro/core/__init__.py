@@ -1,21 +1,29 @@
 """RBLA core: rank-based aggregation of heterogeneous LoRA adapters.
 
 This package is the paper's primary contribution (Eq. 6-7, Alg. 1-2) plus
-its distributed (shard_map collective) form and beyond-paper variants.
+its distributed (shard_map collective) form, beyond-paper variants, and the
+pluggable :class:`~repro.core.strategy.AggregationStrategy` registry that
+ties every method's reference, distributed, and Pallas paths together.
 """
 from .masks import (axis_mask, pad_to_rank, rank_mask, slice_to_rank,
                     stacked_rank_masks)
 from .aggregation import (aggregate, fedavg_leaf, rbla_leaf, zeropad_leaf,
                           AGGREGATORS)
-from .distributed import (make_distributed_aggregator, rbla_allreduce,
-                          rbla_tree_allreduce)
 from .variants import (rank_proportional_weights, rbla_norm_leaf,
                        svd_project_pair)
+from .strategy import (AggregationStrategy, ClientUpdate, ServerState,
+                       BACKENDS, get_strategy, list_strategies,
+                       register_strategy, resolve_backend, stack_trees)
+from .distributed import (make_distributed_aggregator, rbla_allreduce,
+                          rbla_tree_allreduce)
 
 __all__ = [
     "axis_mask", "pad_to_rank", "rank_mask", "slice_to_rank",
     "stacked_rank_masks", "aggregate", "fedavg_leaf", "rbla_leaf",
     "zeropad_leaf", "AGGREGATORS", "make_distributed_aggregator",
     "rbla_allreduce", "rbla_tree_allreduce", "rank_proportional_weights",
-    "rbla_norm_leaf", "svd_project_pair",
+    "rbla_norm_leaf", "svd_project_pair", "AggregationStrategy",
+    "ClientUpdate", "ServerState", "BACKENDS", "get_strategy",
+    "list_strategies", "register_strategy", "resolve_backend",
+    "stack_trees",
 ]

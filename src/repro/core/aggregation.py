@@ -93,30 +93,17 @@ def aggregate(stacked_tree: PyTree, mask_tree: PyTree, weights: Array,
               ) -> PyTree:
     """Aggregate a pytree of stacked client leaves.
 
+    Deprecated shim: resolves ``method`` through the strategy registry
+    (``repro.core.strategy``) and runs its reference tree path.  New code
+    should call ``get_strategy(method).aggregate_tree(...)`` directly.
+
     ``stacked_tree`` leaves are ``(n_clients, *shape)``; ``mask_tree`` has
     the same structure with leaves that broadcast against them (or ``None``
     for fully-shared leaves -- encode None as a 0-d ones array if the tree
-    library would prune it).  ``prev_tree`` (rbla only): the server's
-    current values, retained for rows no participant owns.
+    library would prune it).  ``prev_tree``: the server's current values,
+    retained (by strategies that keep them, e.g. rbla) for rows no
+    participant owns.
     """
-    if method == "fedavg":
-        return jax.tree.map(lambda x: fedavg_leaf(x, weights), stacked_tree)
-    try:
-        fn = AGGREGATORS[method]
-    except KeyError:
-        raise ValueError(f"unknown aggregation method {method!r}; "
-                         f"options: {sorted(AGGREGATORS)} + ['fedavg']")
-    if method == "rbla" and prev_tree is not None:
-        return jax.tree.map(
-            lambda x, m, p: fn(
-                x, None if (m is not None and m.ndim == 0) else m,
-                weights, p),
-            stacked_tree, mask_tree, prev_tree,
-            is_leaf=lambda v: v is None,
-        )
-    return jax.tree.map(
-        lambda x, m: fn(x, None if (m is not None and m.ndim == 0) else m,
-                        weights),
-        stacked_tree, mask_tree,
-        is_leaf=lambda v: v is None,
-    )
+    from .strategy import get_strategy
+    return get_strategy(method).aggregate_tree(stacked_tree, mask_tree,
+                                               weights, prev_tree)

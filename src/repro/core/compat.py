@@ -1,0 +1,38 @@
+"""Version-compat shims for JAX APIs that moved between releases.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to a top-level
+``jax.shard_map`` (jax >= 0.7), and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma`` along the way.  Everything in this repo that
+builds shard_map programs goes through :func:`shard_map_no_check` so one
+import site absorbs both changes.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map                     # jax >= 0.7
+except AttributeError:                            # pragma: no cover - old jax
+    from jax.experimental.shard_map import shard_map
+
+
+def axis_size(axis_name) -> int:
+    """``lax.axis_size`` (jax >= 0.4.x-late); older jax constant-folds
+    ``psum(1, axis)`` to the same static size inside shard_map bodies."""
+    try:
+        return jax.lax.axis_size(axis_name)
+    except AttributeError:                        # pragma: no cover - old jax
+        return jax.lax.psum(1, axis_name)
+
+
+def shard_map_no_check(body, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking disabled, any JAX version."""
+    try:
+        return shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except TypeError:                             # jax < 0.7 spells it check_rep
+        return shard_map(body, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+
+__all__ = ["shard_map", "shard_map_no_check"]

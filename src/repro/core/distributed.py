@@ -6,25 +6,23 @@ hosts one client (or cohort) and its adapters; aggregation becomes two
 ``psum``s (numerator and participating-weight-mass denominator) over that
 axis -- no gather of ``n_clients`` copies ever materializes.
 
-``rbla_allreduce`` is written against ``jax.lax`` collectives so it can be
-used inside ``shard_map`` bodies; ``make_distributed_aggregator`` wraps a
-whole adapter pytree into a single shard_mapped SPMD aggregation program.
+The method-specific math lives in ``repro.core.strategy``; everything here
+is a thin, backward-compatible veneer over the registered strategies'
+distributed paths.  ``rbla_allreduce`` works inside ``shard_map`` bodies;
+``make_distributed_aggregator`` wraps a whole adapter pytree into a single
+shard_mapped SPMD aggregation program.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import PartitionSpec as P
 
-shard_map = jax.shard_map  # jax >= 0.7: top-level API
+from .compat import shard_map, shard_map_no_check  # noqa: F401  (re-export)
+from .strategy import get_strategy
 
 Array = jax.Array
 PyTree = Any
-_EPS = 1e-12
 
 
 def rbla_allreduce(local: Array, mask: Array | None, weight: Array,
@@ -34,33 +32,22 @@ def rbla_allreduce(local: Array, mask: Array | None, weight: Array,
     Eq. 7 as two all-reduces:
         C = psum(w * m * x) / psum(w * m)           (rbla)
         C = psum(w * m * x) / psum(w)               (zeropad baseline)
+
+    Dispatches on the strategy registry; any registered strategy with a
+    distributed path works.
     """
-    x = local.astype(jnp.float32)
-    w = jnp.asarray(weight, jnp.float32)
-    m = jnp.ones_like(x) if mask is None else jnp.broadcast_to(
-        mask.astype(jnp.float32), x.shape)
-    num = lax.psum(w * m * x, axis_name)
-    if method == "rbla":
-        den = lax.psum(w * m, axis_name)
-        out = jnp.where(den > 0, num / (den + _EPS), 0.0)
-    elif method == "zeropad":
-        den = lax.psum(w, axis_name)
-        out = num / (den + _EPS)
-    elif method == "fedavg":
-        den = lax.psum(w, axis_name)
-        out = num / (den + _EPS)
-    else:
-        raise ValueError(f"unknown method {method!r}")
-    return out.astype(local.dtype)
+    return get_strategy(method).allreduce_leaf(local, mask, weight,
+                                               axis_name)
 
 
 def rbla_tree_allreduce(local_tree: PyTree, mask_tree: PyTree, weight: Array,
                         axis_name: str, method: str = "rbla") -> PyTree:
     """Pytree version of :func:`rbla_allreduce` (for shard_map bodies)."""
+    strategy = get_strategy(method)
     return jax.tree.map(
-        lambda x, m: rbla_allreduce(
+        lambda x, m: strategy.allreduce_leaf(
             x, None if (m is not None and m.ndim == 0) else m,
-            weight, axis_name, method),
+            weight, axis_name),
         local_tree, mask_tree, is_leaf=lambda v: v is None)
 
 
@@ -68,36 +55,8 @@ def make_distributed_aggregator(mesh, client_axis: str = "data",
                                 method: str = "rbla"):
     """Build a jitted SPMD aggregator over ``client_axis`` of ``mesh``.
 
-    Inputs are *sharded* pytrees whose leading axis enumerates clients and
-    is sharded over ``client_axis`` (one or more clients per shard).  The
-    local clients are first reduced locally (masked partial sums), then
-    combined globally with psum -- a two-level tree reduction.
+    Deprecated shim for
+    ``get_strategy(method).make_distributed_aggregator(mesh, client_axis)``.
     """
-    def _local_partial(stacked, mask, weights):
-        x = stacked.astype(jnp.float32)
-        w = weights.astype(jnp.float32).reshape(
-            weights.shape + (1,) * (x.ndim - 1))
-        m = jnp.ones_like(x) if mask is None else jnp.broadcast_to(
-            mask.astype(jnp.float32), x.shape)
-        return jnp.sum(w * m * x, axis=0), jnp.sum(w * m, axis=0), jnp.sum(w)
-
-    def body(stacked_tree, mask_tree, weights):
-        def agg_leaf(x, m):
-            m = None if (m is not None and m.ndim == 0) else m
-            num, den_m, den_w = _local_partial(x, m, weights)
-            num = lax.psum(num, client_axis)
-            if method == "rbla":
-                den = lax.psum(den_m, client_axis)
-                out = jnp.where(den > 0, num / (den + _EPS), 0.0)
-            else:  # zeropad / fedavg
-                den = lax.psum(den_w, client_axis)
-                out = num / (den + _EPS)
-            return out.astype(x.dtype)
-        return jax.tree.map(agg_leaf, stacked_tree, mask_tree,
-                            is_leaf=lambda v: v is None)
-
-    in_specs = (P(client_axis), P(client_axis), P(client_axis))
-    out_specs = P()  # aggregated result replicated over the client axis
-    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_vma=False)
-    return jax.jit(fn)
+    return get_strategy(method).make_distributed_aggregator(mesh,
+                                                            client_axis)

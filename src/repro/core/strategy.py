@@ -1,0 +1,627 @@
+"""First-class aggregation strategies: one pluggable API over every path.
+
+The paper's contribution (RBLA vs zero-padding) plus every beyond-paper
+variant used to live as string dispatch (``method == "rbla"`` / ...)
+duplicated across the core, fl, kernels, and benchmark layers.  This module
+makes each method a single :class:`AggregationStrategy` that owns
+
+* (a) its **leaf math** (:meth:`AggregationStrategy.leaf`),
+* (b) its **pytree traversal** including ``prev_global`` retention
+  semantics (:meth:`AggregationStrategy.aggregate_tree`),
+* (c) an optional **distributed** shard_map path
+  (:meth:`AggregationStrategy.make_distributed_aggregator` /
+  :meth:`AggregationStrategy.allreduce_leaf`), and
+* (d) an optional **Pallas kernel** path
+  (:meth:`AggregationStrategy.aggregate_tree_pallas`),
+
+behind a ``backend="auto" | "ref" | "pallas" | "distributed"`` selector that
+picks the Pallas kernel on TPU/GPU and the jnp reference path on CPU.
+
+Registering a new method is one class::
+
+    from repro.core.strategy import AggregationStrategy, register_strategy
+
+    @register_strategy
+    class TrimmedMean(AggregationStrategy):
+        name = "trimmed_mean"
+        norm_by = "mask"
+
+        def leaf(self, stacked, mask, weights, prev=None):
+            ...  # (n_clients, *leaf) -> (*leaf)
+
+after which ``FLConfig(method="trimmed_mean")``, the FL server, the
+distributed aggregator factory, and the benchmarks all resolve it by name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .aggregation import _EPS, fedavg_leaf, rbla_leaf, zeropad_leaf
+from .compat import shard_map_no_check
+from .masks import pad_to_rank
+from .variants import (rank_proportional_weights, rbla_norm_leaf,
+                       svd_project_pair)
+
+Array = jax.Array
+PyTree = Any
+
+BACKENDS = ("auto", "ref", "pallas", "distributed")
+
+
+# ------------------------------------------------------------ server state --
+@dataclasses.dataclass
+class ServerState:
+    """The FL server's round state: what Alg. 1 carries between rounds."""
+    adapters: PyTree | None            # global LoRA adapters (None in FFT)
+    base_trainable: PyTree             # non-LoRA trainables (or full params)
+    round: int = 0
+    r_max: int | None = None
+    client_ranks: Array | None = None  # ranks of the last participant cohort
+
+
+@dataclasses.dataclass
+class ClientUpdate:
+    """One participant's upload for a round."""
+    adapters: PyTree | None
+    base_trainable: PyTree
+    n_examples: float = 1.0
+    rank: int | None = None
+
+
+# ---------------------------------------------------------------- registry --
+_REGISTRY: dict[str, "AggregationStrategy"] = {}
+
+
+def register_strategy(cls):
+    """Class decorator: instantiate ``cls`` and register it under
+    ``cls.name`` (plus any ``cls.aliases``).  Returns ``cls`` unchanged."""
+    inst = cls()
+    if not inst.name:
+        raise ValueError(f"{cls.__name__} needs a non-empty .name")
+    _REGISTRY[inst.name] = inst
+    for alias in inst.aliases:
+        _REGISTRY[alias] = inst
+    return cls
+
+
+def get_strategy(name: "str | AggregationStrategy") -> "AggregationStrategy":
+    """Resolve a strategy by registry name (or pass an instance through)."""
+    if isinstance(name, AggregationStrategy):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregation strategy {name!r}; registered: "
+            f"{list_strategies()}") from None
+
+
+def list_strategies() -> list[str]:
+    """Sorted primary names of every registered strategy."""
+    return sorted({s.name for s in _REGISTRY.values()})
+
+
+def resolve_backend(backend: str, strategy: "AggregationStrategy") -> str:
+    """Map ``auto`` to ``pallas`` on TPU/GPU (when supported) else ``ref``."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; options: {BACKENDS}")
+    if backend == "auto":
+        if strategy.supports_pallas and jax.default_backend() in ("tpu",
+                                                                  "gpu"):
+            return "pallas"
+        return "ref"
+    return backend
+
+
+# ------------------------------------------------------------ tree helpers --
+def stack_trees(trees: Sequence[PyTree]) -> PyTree:
+    """Stack per-client pytrees leafwise into (n_clients, *leaf) arrays."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _squeeze_mask(m):
+    """0-d mask means 'fully shared leaf' -> None (no rank masking)."""
+    return None if (m is not None and getattr(m, "ndim", 1) == 0) else m
+
+
+def _is_pair(node) -> bool:
+    # mirrors repro.lora.is_pair deliberately: core cannot depend on lora
+    # at import time (lora itself builds on repro.core.masks)
+    return (isinstance(node, Mapping) and "A" in node and "B" in node
+            and "rank" in node)
+
+
+def _map_pairs(fn, tree, *rest, strict: bool = False):
+    """Map ``fn`` over every LoRA pair of ``tree`` (and parallel ``rest``
+    trees, which may be ``None``).  ``strict`` raises on bare array leaves
+    so pair-only strategies fail loudly on generic leaf trees."""
+    if _is_pair(tree):
+        return fn(tree, *rest)
+    if isinstance(tree, Mapping):
+        return {k: _map_pairs(fn, v, *[None if r is None else r[k]
+                                       for r in rest], strict=strict)
+                for k, v in tree.items()}
+    if isinstance(tree, (tuple, list)):
+        return type(tree)(
+            _map_pairs(fn, v, *[None if r is None else r[i] for r in rest],
+                       strict=strict) for i, v in enumerate(tree))
+    if strict and tree is not None:
+        raise NotImplementedError(
+            "this strategy aggregates whole LoRA pairs ({'A','B','rank'}); "
+            f"got a bare leaf of type {type(tree).__name__}")
+    return tree
+
+
+def _fix_rank(tree: PyTree, r_max: int | None) -> PyTree:
+    """Reset every pair's live rank to r_max: the server keeps the full
+    stack; clients re-slice per Alg. 2."""
+    def fix(pair):
+        p = dict(pair)
+        rm = p["A"].shape[-2] if r_max is None else r_max
+        p["rank"] = jnp.full_like(jnp.asarray(p["rank"], jnp.int32), rm)
+        return p
+    return _map_pairs(fix, tree)
+
+
+def _infer_ranks(stacked_tree: PyTree) -> Array | None:
+    """Recover the per-client rank vector from a stacked adapter tree's
+    first scalar-rank pair (None if there is none)."""
+    found = []
+
+    def visit(pair):
+        r = jnp.asarray(pair["rank"])
+        if r.ndim == 1:
+            found.append(r.astype(jnp.int32))
+        return pair
+    _map_pairs(visit, stacked_tree)
+    return found[0] if found else None
+
+
+def _retain_prev(tree: PyTree, prev: PyTree, client_ranks: Array) -> PyTree:
+    """Rank-rows owned by no participant keep the server's current value
+    (RBLA's 'preserve unique layers' under partial participation).  Row r
+    is owned iff r < max(participant ranks) -- equivalent to the per-element
+    den > 0 test when masks are rank-row masks and weights are positive."""
+    rmax_part = jnp.max(jnp.asarray(client_ranks, jnp.int32))
+
+    def fix(pair, prev_pair):
+        r_storage = pair["A"].shape[-2]
+        owned = lax.iota(jnp.int32, r_storage) < rmax_part
+        return {
+            "A": jnp.where(owned[:, None], pair["A"],
+                           prev_pair["A"].astype(pair["A"].dtype)),
+            "B": jnp.where(owned[None, :], pair["B"],
+                           prev_pair["B"].astype(pair["B"].dtype)),
+            "rank": pair["rank"],
+        }
+    return _map_pairs(fix, tree, prev)
+
+
+# ------------------------------------------------------------ the protocol --
+class AggregationStrategy:
+    """One server-side aggregation method, every execution path.
+
+    Subclasses set the class attributes and implement :meth:`leaf` (or
+    override :meth:`aggregate_tree` for pair-structured methods); the
+    distributed and Pallas paths come for free from ``norm_by`` /
+    ``use_mask`` unless overridden.
+    """
+    name: str = ""
+    aliases: tuple[str, ...] = ()
+    #: denominator of the weighted mean: "mask" = sum_i w_i * delta_ir
+    #: (RBLA Eq. 7), "weight" = sum_i w_i (zero-padding dilution / FedAvg)
+    norm_by: str = "mask"
+    #: apply delta_{i,r} rank-row masks at all (FedAvg turns this off)
+    use_mask: bool = True
+    #: rows no participant owns keep the previous global value
+    retains_prev: bool = False
+    supports_pallas: bool = False
+    supports_distributed: bool = True
+    #: method name understood by the rbla_agg Pallas kernel
+    pallas_method: str = "rbla"
+
+    # ------------------------------------------------------ (a) leaf math --
+    def leaf(self, stacked: Array, mask: Array | None, weights: Array,
+             prev: Array | None = None) -> Array:
+        """Aggregate one stacked leaf (n_clients, *shape) -> (*shape)."""
+        raise NotImplementedError
+
+    def transform_weights(self, weights: Array,
+                          client_ranks: Array | None = None) -> Array:
+        """Hook: reweight clients before aggregation (rbla_ranked)."""
+        return weights
+
+    def _combine(self, num: Array, den_mask: Array | None,
+                 den_w: Array | None) -> Array:
+        """Numerator/denominator combine shared by the psum paths."""
+        if self.norm_by == "mask":
+            return jnp.where(den_mask > 0, num / (den_mask + _EPS), 0.0)
+        return num / (den_w + _EPS)
+
+    # ------------------------------------------------- (b) tree traversal --
+    def aggregate_tree(self, stacked_tree: PyTree, mask_tree: PyTree,
+                       weights: Array, prev_tree: PyTree | None = None, *,
+                       r_max: int | None = None,
+                       client_ranks: Array | None = None) -> PyTree:
+        """Reference path: leafwise map over stacked (n, *leaf) trees.
+
+        ``mask_tree`` leaves broadcast against the stacked leaves; 0-d
+        leaves mean fully shared.  ``prev_tree`` is honored only by
+        strategies with ``retains_prev``.
+        """
+        w = self.transform_weights(jnp.asarray(weights, jnp.float32),
+                                   client_ranks)
+        if prev_tree is not None and self.retains_prev:
+            return jax.tree.map(
+                lambda x, m, p: self.leaf(x, _squeeze_mask(m), w, p),
+                stacked_tree, mask_tree, prev_tree,
+                is_leaf=lambda v: v is None)
+        return jax.tree.map(
+            lambda x, m: self.leaf(x, _squeeze_mask(m), w),
+            stacked_tree, mask_tree, is_leaf=lambda v: v is None)
+
+    # ---------------------------------------------- (c) distributed path --
+    def allreduce_leaf(self, local: Array, mask: Array | None, weight: Array,
+                       axis_name: str) -> Array:
+        """Aggregate one shard's leaf with all peers over ``axis_name``
+        (for use inside shard_map bodies; one client per shard)."""
+        if not self.supports_distributed:
+            raise NotImplementedError(
+                f"strategy {self.name!r} has no distributed path")
+        x = local.astype(jnp.float32)
+        w = jnp.asarray(weight, jnp.float32)
+        mask = _squeeze_mask(mask) if self.use_mask else None
+        m = (jnp.ones_like(x) if mask is None
+             else jnp.broadcast_to(mask.astype(jnp.float32), x.shape))
+        num = lax.psum(w * m * x, axis_name)
+        den_mask = (lax.psum(w * m, axis_name)
+                    if self.norm_by == "mask" else None)
+        den_w = lax.psum(w, axis_name) if self.norm_by == "weight" else None
+        return self._combine(num, den_mask, den_w).astype(local.dtype)
+
+    def make_distributed_aggregator(self, mesh, client_axis: str = "data"):
+        """Build a jitted SPMD aggregator over ``client_axis`` of ``mesh``.
+
+        Inputs are sharded pytrees whose leading axis enumerates clients
+        (one or more clients per shard); local clients are reduced locally
+        (masked partial sums) then combined with psum -- a two-level tree
+        reduction.  Weights must already be transformed
+        (:meth:`transform_weights` needs the global rank vector, which a
+        shard does not see).
+        """
+        if not self.supports_distributed:
+            raise NotImplementedError(
+                f"strategy {self.name!r} has no distributed path; "
+                "use backend='ref'")
+        cache = self.__dict__.setdefault("_dist_agg_cache", {})
+        if (mesh, client_axis) in cache:    # one trace+compile per mesh,
+            return cache[(mesh, client_axis)]   # not one per FL round
+        from jax.sharding import PartitionSpec as P
+
+        def body(stacked_tree, mask_tree, weights):
+            wf = weights.astype(jnp.float32)
+
+            def agg_leaf(x, m):
+                m = _squeeze_mask(m) if self.use_mask else None
+                xf = x.astype(jnp.float32)
+                w = wf.reshape(wf.shape + (1,) * (xf.ndim - 1))
+                mf = (jnp.ones_like(xf) if m is None
+                      else jnp.broadcast_to(m.astype(jnp.float32), xf.shape))
+                num = lax.psum(jnp.sum(w * mf * xf, axis=0), client_axis)
+                den_mask = (lax.psum(jnp.sum(w * mf, axis=0), client_axis)
+                            if self.norm_by == "mask" else None)
+                den_w = (lax.psum(jnp.sum(wf), client_axis)
+                         if self.norm_by == "weight" else None)
+                return self._combine(num, den_mask, den_w).astype(x.dtype)
+
+            return jax.tree.map(agg_leaf, stacked_tree, mask_tree,
+                                is_leaf=lambda v: v is None)
+
+        fn = jax.jit(shard_map_no_check(
+            body, mesh, in_specs=(P(client_axis), P(client_axis),
+                                  P(client_axis)),
+            out_specs=P()))
+        cache[(mesh, client_axis)] = fn
+        return fn
+
+    # --------------------------------------------------- (d) Pallas path --
+    def aggregate_tree_pallas(self, stacked_tree: PyTree, weights: Array,
+                              client_ranks: Array | None,
+                              prev_tree: PyTree | None = None, *,
+                              interpret: bool | None = None) -> PyTree:
+        """Kernel path over an adapter tree of stacked LoRA pairs.
+
+        A leaves (n, r_max, fan_in) hit the kernel directly; B leaves
+        (n, fan_out, r_max) via a rank-axis transpose.  Layer-stacked pairs
+        (leading dims / per-layer rank vectors) fall back to the reference
+        leaf math -- the kernel wants a single rank-row axis.
+        """
+        if not self.supports_pallas:
+            raise NotImplementedError(
+                f"strategy {self.name!r} has no Pallas kernel path; "
+                "use backend='ref'")
+        from repro.kernels.rbla_agg.ops import rbla_agg
+        from repro.lora import pair_masks
+
+        w = self.transform_weights(jnp.asarray(weights, jnp.float32),
+                                   client_ranks)
+        ranks = (None if client_ranks is None
+                 else jnp.asarray(client_ranks, jnp.int32))
+
+        def agg_pair(pair, prev_pair):
+            A, B = pair["A"], pair["B"]
+            r_storage = A.shape[-2]
+            n = A.shape[0]
+            pranks = ranks
+            if pranks is None and jnp.asarray(pair["rank"]).ndim == 1:
+                pranks = jnp.asarray(pair["rank"], jnp.int32)
+            if not self.use_mask:
+                pranks = jnp.full((n,), r_storage, jnp.int32)
+            if A.ndim != 3 or B.ndim != 3 or pranks is None:
+                masks = pair_masks(pair)       # works on stacked pairs
+                prev_A = prev_pair["A"] if prev_pair is not None else None
+                prev_B = prev_pair["B"] if prev_pair is not None else None
+                return {"A": self.leaf(A, masks["A"], w, prev_A),
+                        "B": self.leaf(B, masks["B"], w, prev_B),
+                        "rank": pair["rank"][0]}
+            outA = rbla_agg(A, pranks, w, method=self.pallas_method,
+                            interpret=interpret)
+            outB = rbla_agg(jnp.swapaxes(B, 1, 2), pranks, w,
+                            method=self.pallas_method, interpret=interpret).T
+            out = {"A": outA, "B": outB, "rank": pair["rank"][0]}
+            if prev_pair is not None and self.retains_prev:
+                out = _retain_prev(out, prev_pair, pranks)
+            return out
+
+        return _map_pairs(agg_pair, stacked_tree, prev_tree, strict=True)
+
+    # ----------------------------------------------------- mid-level API --
+    def aggregate_adapters(self, client_adapters: Sequence[PyTree],
+                           weights: Array, *, r_max: int | None = None,
+                           client_ranks: Array | None = None,
+                           prev_global: PyTree | None = None,
+                           backend: str = "auto", mesh=None,
+                           client_axis: str = "clients",
+                           interpret: bool | None = None) -> PyTree:
+        """Aggregate per-client adapter trees into the global adapter.
+
+        Stacks the uploads, builds delta_{i,r} masks, applies the
+        strategy's weight transform, dispatches to the selected backend,
+        and resets the live rank to ``r_max`` (clients re-slice, Alg. 2).
+        """
+        from repro.lora import adapter_masks
+
+        stacked = stack_trees(client_adapters)
+        if client_ranks is None:
+            client_ranks = _infer_ranks(stacked)
+        w = jnp.asarray(weights, jnp.float32)
+        prev = prev_global if self.retains_prev else None
+        kind = resolve_backend(backend, self)
+        # transform_weights is applied by the tree/pallas paths themselves
+        # (they see client_ranks); the distributed program cannot (a shard
+        # never sees the global rank vector), so transform here for it.
+        if kind == "pallas":
+            out = self.aggregate_tree_pallas(stacked, w, client_ranks, prev,
+                                             interpret=interpret)
+        else:
+            # the kernel path derives masks from ranks; only the jnp/psum
+            # paths need the materialized delta_{i,r} mask tree
+            masks = stack_trees([adapter_masks(a) for a in client_adapters])
+            if kind == "distributed":
+                wt = self.transform_weights(w, client_ranks)
+                out = self._aggregate_distributed(stacked, masks, wt, mesh,
+                                                  client_axis)
+                if prev is not None and client_ranks is not None:
+                    out = _retain_prev(out, prev, client_ranks)
+            else:
+                out = self.aggregate_tree(stacked, masks, w, prev,
+                                          r_max=r_max,
+                                          client_ranks=client_ranks)
+        return _fix_rank(out, r_max)
+
+    def _aggregate_distributed(self, stacked, masks, w, mesh, client_axis):
+        import numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+        n = int(w.shape[0])
+        if mesh is None:
+            devs = jax.devices()
+            k = max(i for i in range(1, len(devs) + 1) if n % i == 0)
+            mesh = Mesh(np.asarray(devs[:k]), (client_axis,))
+        agg = self.make_distributed_aggregator(mesh, client_axis)
+        # 0-d "fully shared" masks can't shard over clients: materialize
+        full_masks = jax.tree.map(
+            lambda x, m: (jnp.ones(x.shape, jnp.float32) if m.ndim == 0
+                          else jnp.broadcast_to(m.astype(jnp.float32),
+                                                x.shape)),
+            stacked, masks)
+        sh = NamedSharding(mesh, P(client_axis))
+        return agg(jax.device_put(stacked, sh),
+                   jax.device_put(full_masks, sh), jax.device_put(w, sh))
+
+    # ---------------------------------------------------- high-level API --
+    def aggregate(self, state: ServerState,
+                  client_updates: Sequence[ClientUpdate],
+                  weights: Array | None = None, *, backend: str = "auto",
+                  mesh=None, client_axis: str = "clients") -> ServerState:
+        """One server round: fold a participant cohort into ``state``.
+
+        Non-LoRA trainables are FedAvg'd; adapters go through this
+        strategy on the selected backend.  ``weights`` defaults to the
+        updates' ``n_examples``.  Returns the next round's state.
+        """
+        updates = list(client_updates)
+        if weights is None:
+            weights = [u.n_examples for u in updates]
+        w = jnp.asarray(weights, jnp.float32)
+        # this cohort's ranks; None (inferred from the pairs downstream)
+        # if any update omits its rank -- never a stale previous cohort's
+        got = [u.rank for u in updates]
+        ranks = (jnp.asarray(got, jnp.int32)
+                 if updates and all(r is not None for r in got) else None)
+
+        new_base = state.base_trainable
+        base_trees = [u.base_trainable for u in updates]
+        if updates and jax.tree.leaves(base_trees[0]):
+            new_base = jax.tree.map(lambda x: fedavg_leaf(x, w),
+                                    stack_trees(base_trees))
+
+        new_adapters = state.adapters
+        ad_trees = [u.adapters for u in updates]
+        if (state.adapters is not None and updates
+                and all(a is not None for a in ad_trees)):
+            new_adapters = self.aggregate_adapters(
+                ad_trees, w, r_max=state.r_max, client_ranks=ranks,
+                prev_global=state.adapters, backend=backend, mesh=mesh,
+                client_axis=client_axis)
+
+        return ServerState(adapters=new_adapters, base_trainable=new_base,
+                           round=state.round + 1, r_max=state.r_max,
+                           client_ranks=(ranks if ranks is not None
+                                         else state.client_ranks))
+
+
+# --------------------------------------------------------- the strategies --
+@register_strategy
+class FedAvgStrategy(AggregationStrategy):
+    """Plain weighted mean (non-LoRA leaves and the FFT baseline)."""
+    name = "fedavg"
+    aliases = ("fft",)
+    norm_by = "weight"
+    use_mask = False
+    supports_pallas = True
+    pallas_method = "zeropad"          # full-rank masks => weighted mean
+
+    def leaf(self, stacked, mask, weights, prev=None):
+        return fedavg_leaf(stacked, weights)
+
+
+@register_strategy
+class ZeropadStrategy(AggregationStrategy):
+    """HetLoRA-style zero-padding baseline (paper Eq. 1-5): mask values,
+    normalize by total weight mass -- missing rows dilute toward zero."""
+    name = "zeropad"
+    norm_by = "weight"
+    supports_pallas = True
+    pallas_method = "zeropad"
+
+    def leaf(self, stacked, mask, weights, prev=None):
+        return zeropad_leaf(stacked, mask, weights)
+
+
+@register_strategy
+class RBLAStrategy(AggregationStrategy):
+    """Rank-Based LoRA Aggregation (paper Eq. 7 / Alg. 1): per rank-row
+    weighted mean over owners; unowned rows keep the previous global."""
+    name = "rbla"
+    norm_by = "mask"
+    retains_prev = True
+    supports_pallas = True
+    pallas_method = "rbla"
+
+    def leaf(self, stacked, mask, weights, prev=None):
+        return rbla_leaf(stacked, mask, weights, prev)
+
+
+@register_strategy
+class RBLARankedStrategy(RBLAStrategy):
+    """RBLA with rank-proportional client weights (HetLoRA-flavoured)."""
+    name = "rbla_ranked"
+
+    def transform_weights(self, weights, client_ranks=None):
+        if client_ranks is None:
+            raise ValueError("rbla_ranked needs client_ranks to reweight "
+                             "clients by rank; pass client_ranks (or use "
+                             "aggregate_adapters on adapter trees, which "
+                             "infers them)")
+        return rank_proportional_weights(weights,
+                                         jnp.asarray(client_ranks))
+
+    def allreduce_leaf(self, local, mask, weight, axis_name):
+        raise NotImplementedError(
+            "rbla_ranked cannot reweight inside a shard_map body (a shard "
+            "never sees the global rank vector); apply "
+            "rank_proportional_weights to the weights first and use the "
+            "'rbla' strategy")
+
+
+@register_strategy
+class RBLANormStrategy(AggregationStrategy):
+    """RBLA + per-row update-norm preservation (pair-structured: the row
+    axis differs between A and B, so it traverses whole pairs)."""
+    name = "rbla_norm"
+    norm_by = "mask"
+    supports_distributed = False
+
+    def leaf(self, stacked, mask, weights, prev=None):
+        return rbla_leaf(stacked, mask, weights, prev)
+
+    def aggregate_tree(self, stacked_tree, mask_tree, weights,
+                       prev_tree=None, *, r_max=None, client_ranks=None):
+        w = jnp.asarray(weights, jnp.float32)
+
+        def agg_pair(pair, masks):
+            if pair["A"].ndim != 3 or pair["B"].ndim != 3:
+                raise NotImplementedError(
+                    "rbla_norm supports scalar-rank pairs (got "
+                    f"A.ndim={pair['A'].ndim}); the per-row norm target "
+                    "needs a per-layer loop for layer-stacked pairs")
+            return {
+                "A": rbla_norm_leaf(pair["A"], masks["A"], w, row_axis=0),
+                "B": rbla_norm_leaf(pair["B"], masks["B"], w, row_axis=1),
+                "rank": pair["rank"][0],
+            }
+        return _map_pairs(agg_pair, stacked_tree, mask_tree, strict=True)
+
+
+@register_strategy
+class SVDStrategy(AggregationStrategy):
+    """Product-space aggregation: weighted-average the dense updates
+    ``(r_out / rank_i) * B_i @ A_i`` (no dilution -- products are dense),
+    truncated-SVD back to rank-``r_out`` factors, re-pad to storage rank.
+
+    The ``r_out / rank_i`` scale matches effective updates under the
+    ``alpha / rank`` LoRA convention: serving the aggregate at ``r_max``
+    reproduces the weighted mean of the clients' effective deltas.
+    O(out * in * min(out, in)) server cost per pair.
+    """
+    name = "svd"
+    norm_by = "mask"
+    supports_distributed = False
+
+    def aggregate_tree(self, stacked_tree, mask_tree, weights,
+                       prev_tree=None, *, r_max=None, client_ranks=None):
+        w = jnp.asarray(weights, jnp.float32)
+
+        def agg_pair(pair, _masks):
+            A, B = pair["A"], pair["B"]
+            if A.ndim != 3 or B.ndim != 3:
+                raise NotImplementedError(
+                    "svd aggregation supports scalar-rank pairs "
+                    f"(got A.ndim={A.ndim}); layer-stacked pairs need a "
+                    "per-layer loop")
+            r_storage = A.shape[-2]
+            r_out = r_storage if r_max is None else min(r_max, r_storage)
+            pranks = jnp.asarray(pair["rank"] if client_ranks is None
+                                 else client_ranks, jnp.int32)
+            scales = (jnp.float32(r_out) /
+                      jnp.maximum(pranks.astype(jnp.float32), 1.0))
+            Bo, Ao = svd_project_pair(B, A, pranks, w, r_out=r_out,
+                                      scales=scales)
+            return {"A": pad_to_rank(Ao, -2, r_storage),
+                    "B": pad_to_rank(Bo, -1, r_storage),
+                    "rank": pair["rank"][0]}
+        return _map_pairs(agg_pair, stacked_tree, mask_tree, strict=True)
+
+
+__all__ = [
+    "AggregationStrategy", "ServerState", "ClientUpdate", "BACKENDS",
+    "register_strategy", "get_strategy", "list_strategies",
+    "resolve_backend", "stack_trees", "FedAvgStrategy", "ZeropadStrategy",
+    "RBLAStrategy", "RBLARankedStrategy", "RBLANormStrategy", "SVDStrategy",
+]

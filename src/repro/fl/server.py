@@ -1,77 +1,58 @@
-"""Server-side aggregation (paper Alg. 1) over arbitrary adapter pytrees."""
+"""Server-side aggregation (paper Alg. 1) over arbitrary adapter pytrees.
+
+Deprecated veneer: the aggregation methods themselves now live in
+``repro.core.strategy`` as registered :class:`AggregationStrategy` objects
+owning every backend (reference / distributed / Pallas).  These wrappers
+keep the old keyword call sites working; new code should use::
+
+    from repro.core import get_strategy
+    strategy = get_strategy("rbla")
+    state = strategy.aggregate(state, client_updates, weights)
+"""
 from __future__ import annotations
 
+import warnings
 from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregate
-from repro.core.variants import rank_proportional_weights, rbla_norm_leaf
-from repro.lora import adapter_masks, is_pair, tree_map_pairs
+from repro.core.strategy import get_strategy, stack_trees  # noqa: F401
 
 Array = jax.Array
 PyTree = Any
 
-
-def stack_trees(trees: Sequence[PyTree]) -> PyTree:
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+_DEPRECATION = ("repro.fl.server.%s is deprecated; use repro.core."
+                "get_strategy(method).%s instead")
 
 
 def aggregate_adapters(client_adapters: Sequence[PyTree], weights: Array,
                        method: str = "rbla", r_max: int | None = None,
                        client_ranks: Array | None = None,
-                       prev_global: PyTree | None = None) -> PyTree:
+                       prev_global: PyTree | None = None,
+                       backend: str = "auto") -> PyTree:
     """Aggregate per-client adapter trees into the global adapter.
 
-    ``method``: 'rbla' | 'zeropad' | 'rbla_ranked' | 'rbla_norm'.
-    The global adapter's live rank is reset to r_max (the server keeps the
-    full stack; clients re-slice per Alg. 2).  ``prev_global``: under
-    partial participation, rank-rows owned by no participant retain the
-    server's current value instead of being zeroed.
+    ``method``: any registered strategy name ('rbla' | 'zeropad' |
+    'fedavg' | 'rbla_ranked' | 'rbla_norm' | 'svd' | ...).  The global
+    adapter's live rank is reset to r_max (the server keeps the full
+    stack; clients re-slice per Alg. 2).  ``prev_global``: under partial
+    participation, rank-rows owned by no participant retain the server's
+    current value instead of being zeroed (strategies with
+    ``retains_prev``).
     """
-    stacked = stack_trees(client_adapters)
-    masks = stack_trees([adapter_masks(a) for a in client_adapters])
-
-    if method == "rbla_ranked":
-        assert client_ranks is not None
-        weights = rank_proportional_weights(weights, client_ranks)
-        method_inner = "rbla"
-    else:
-        method_inner = method
-
-    if method == "rbla_norm":
-        def agg_pair(pair_stacked, pair_masks):
-            return {
-                "A": rbla_norm_leaf(pair_stacked["A"], pair_masks["A"],
-                                    weights, row_axis=0),
-                "B": rbla_norm_leaf(pair_stacked["B"], pair_masks["B"],
-                                    weights, row_axis=1),
-                "rank": pair_stacked["rank"][0],
-            }
-        out = _map_pair_trees(agg_pair, stacked, masks)
-    else:
-        out = aggregate(stacked, masks, weights, method=method_inner,
-                        prev_tree=prev_global if method_inner == "rbla"
-                        else None)
-
-    def fix_rank(pair):
-        p = dict(pair)
-        rm = p["A"].shape[-2] if r_max is None else r_max
-        p["rank"] = jnp.full_like(jnp.asarray(p["rank"], jnp.int32), rm)
-        return p
-    return tree_map_pairs(fix_rank, out)
-
-
-def _map_pair_trees(fn, stacked, masks):
-    if is_pair(stacked):
-        return fn(stacked, masks)
-    return {k: _map_pair_trees(fn, stacked[k], masks[k]) for k in stacked}
+    warnings.warn(_DEPRECATION % ("aggregate_adapters", "aggregate_adapters"),
+                  DeprecationWarning, stacklevel=2)
+    return get_strategy(method).aggregate_adapters(
+        client_adapters, weights, r_max=r_max, client_ranks=client_ranks,
+        prev_global=prev_global, backend=backend)
 
 
 def aggregate_base(client_params: Sequence[PyTree], weights: Array) -> PyTree:
     """Plain FedAvg for non-LoRA trainables (convs, biases, norms, or the
     full model in FFT mode)."""
+    warnings.warn(_DEPRECATION % ("aggregate_base", "aggregate"),
+                  DeprecationWarning, stacklevel=2)
     stacked = stack_trees(client_params)
     masks = jax.tree.map(lambda _: jnp.ones(()), stacked)
-    return aggregate(stacked, masks, weights, method="fedavg")
+    return get_strategy("fedavg").aggregate_tree(stacked, masks, weights)

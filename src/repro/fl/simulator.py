@@ -15,11 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.strategy import ClientUpdate, ServerState, get_strategy
 from repro.data import ClientData, make_dataset, staircase_partition
 from repro.fl.client import (make_local_fit, merge_base_params,
                              split_base_params)
 from repro.fl.selection import select_clients
-from repro.fl.server import aggregate_adapters, aggregate_base
 from repro.lora import init_adapters, set_ranks
 from repro.models.paper_nets import PAPER_MODELS
 from repro.optim import adam, sgd
@@ -31,8 +31,11 @@ PyTree = Any
 class FLConfig:
     dataset: str = "mnist"
     model: str = "mlp"
-    method: str = "rbla"           # rbla | zeropad | fft | rbla_ranked |
-                                   # rbla_norm | svd  (svd via server hook)
+    method: str = "rbla"           # any registered strategy: rbla |
+                                   # zeropad | fedavg | rbla_ranked |
+                                   # rbla_norm | svd -- or "fft" (full
+                                   # fine-tune baseline, FedAvg on params)
+    agg_backend: str = "auto"      # auto | ref | pallas | distributed
     n_clients: int = 10
     rounds: int = 50
     local_epochs: int = 1
@@ -63,6 +66,11 @@ class FLHistory:
 
 
 def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
+    # "fft" resolves to the fedavg strategy (full-parameter FedAvg); every
+    # other method name resolves through the registry, so a
+    # register_strategy'd class is immediately runnable from FLConfig.
+    # Resolve first: a typo'd method must fail before data/model setup.
+    strategy = get_strategy(cfg.method)
     key = jax.random.PRNGKey(cfg.seed)
     model = PAPER_MODELS[cfg.model]() if cfg.model != "cnn_cifar" else \
         PAPER_MODELS[cfg.model](n_dense=2 if cfg.dataset == "cifar" else 4)
@@ -82,6 +90,9 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
         frozen_base, base_trainable = {}, params
     global_adapters = init_adapters(akey, model.lora_specs, cfg.r_max,
                                     cfg.r_max)
+    state = ServerState(
+        adapters=global_adapters if mode == "lora" else None,
+        base_trainable=base_trainable, round=0, r_max=cfg.r_max)
 
     opt = (sgd(cfg.lr) if cfg.optimizer == "sgd" else adam(cfg.lr))
     max_n = max(len(c.x) for c in clients)
@@ -115,7 +126,7 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
         t0 = time.time()
         part = select_clients(cfg.n_clients, rnd, cfg.participation,
                               cfg.seed)
-        sent_adapters, sent_base, weights, losses = [], [], [], []
+        updates, losses = [], []
         for ci in part:
             c = clients[ci]
             fit_key = jax.random.PRNGKey(
@@ -124,18 +135,17 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
             res = local_fit(frozen_base, base_trainable, local_ad,
                             client_x[ci], client_y[ci],
                             jnp.asarray(c.n, jnp.int32), fit_key)
-            sent_adapters.append(res.adapters)
-            sent_base.append(res.base_trainable)
-            weights.append(float(max(c.n, 1)))
+            updates.append(ClientUpdate(
+                adapters=res.adapters if mode == "lora" else None,
+                base_trainable=res.base_trainable,
+                n_examples=float(max(c.n, 1)), rank=c.rank))
             losses.append(float(res.loss))
-        w = jnp.asarray(weights, jnp.float32)
 
-        base_trainable = aggregate_base(sent_base, w)
+        state = strategy.aggregate(state, updates,
+                                   backend=cfg.agg_backend)
+        base_trainable = state.base_trainable
         if mode == "lora":
-            ranks = jnp.asarray([clients[ci].rank for ci in part])
-            global_adapters = aggregate_adapters(
-                sent_adapters, w, method=cfg.method, r_max=cfg.r_max,
-                client_ranks=ranks, prev_global=global_adapters)
+            global_adapters = state.adapters
         acc = evaluate()
         hist.test_acc.append(acc)
         hist.train_loss.append(float(np.mean(losses)))

@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the LoRA-FL hot spots.
 
-Validated in interpret=True mode on CPU against ref.py oracles; pass
-interpret=False on real TPU.
+Wrappers default to ``interpret=None`` (auto-detect): real Pallas lowering
+on TPU/GPU, interpreter mode on CPU.  Validated in interpreter mode on CPU
+against the ref.py oracles; pass ``interpret=False`` to force compilation.
 """
 from .lora_matmul.ops import lora_dense_apply, lora_matmul
 from .lora_matmul.ref import lora_matmul_ref

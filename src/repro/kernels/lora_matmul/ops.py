@@ -1,9 +1,9 @@
 """jit'd public wrapper for the fused LoRA matmul kernel.
 
 Handles: leading batch dims, non-aligned shape padding (to 128 multiples),
-LoRA-pair plumbing (alpha/rank scale), and the interpret switch (True on
-CPU -- the container validates kernels in interpret mode; on TPU pass
-interpret=False).
+LoRA-pair plumbing (alpha/rank scale), and the interpret switch
+(``None`` = auto-detect: compiled Pallas on TPU/GPU, interpreter mode on
+CPU where Pallas cannot lower).
 """
 from __future__ import annotations
 
@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..runtime import auto_interpret
 from .kernel import lora_matmul_pallas
 from .ref import lora_matmul_ref
 
@@ -21,10 +22,11 @@ def _pad_to(v: int, mult: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "bm", "bn", "bk"))
-def lora_matmul(x, w, a, b, scale, *, interpret=True, bm=256, bn=256,
+def lora_matmul(x, w, a, b, scale, *, interpret=None, bm=256, bn=256,
                 bk=512):
     """x (..., K) @ w (K, N) + scale * (x @ a^T) @ b^T  via the Pallas
     kernel.  a: (r, K), b: (N, r), scale scalar."""
+    interpret = auto_interpret(interpret)
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w.shape[-1]
@@ -46,7 +48,7 @@ def lora_matmul(x, w, a, b, scale, *, interpret=True, bm=256, bn=256,
     return y[:m, :n].reshape(lead + (n,))
 
 
-def lora_dense_apply(p, x, pair, alpha: float = 16.0, interpret=True):
+def lora_dense_apply(p, x, pair, alpha: float = 16.0, interpret=None):
     """Drop-in replacement for models.common.dense on 2-D kernels with a
     LoRA pair: uses the fused kernel for the matmul + low-rank path."""
     scale = alpha / jnp.maximum(pair["rank"].astype(jnp.float32), 1.0)

@@ -28,7 +28,7 @@ DEFAULT_BD = 512
 
 
 def _kernel(ranks_ref, weights_ref, x_ref, o_ref, *, n_clients: int,
-            method: str):
+            norm_by: str):
     br = x_ref.shape[1]
     r0 = pl.program_id(0) * br
     rows = r0 + jax.lax.broadcasted_iota(jnp.int32, (br, 1), 0)
@@ -42,21 +42,25 @@ def _kernel(ranks_ref, weights_ref, x_ref, o_ref, *, n_clients: int,
         num = num + (w * m) * x_ref[nix].astype(jnp.float32)
         den = den + w * m
         wtot = wtot + w
-    if method == "rbla":
+    if norm_by == "mask":       # rbla: owner weight-mass denominator
         out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
-    else:  # zeropad baseline: normalize by total weight mass
+    else:                       # zeropad baseline: total weight mass
         out = num / wtot
     o_ref[...] = out.astype(o_ref.dtype)
 
 
-def rbla_agg_pallas(x, ranks, weights, *, method: str = "rbla",
+def rbla_agg_pallas(x, ranks, weights, *, norm_by: str = "mask",
                     br=DEFAULT_BR, bd=DEFAULT_BD, interpret=True):
-    """x: (N, R, D); ranks: (N,) int32; weights: (N,) f32 -> (R, D)."""
+    """x: (N, R, D); ranks: (N,) int32; weights: (N,) f32 -> (R, D).
+
+    ``norm_by``: "mask" divides by the owners' weight mass (RBLA Eq. 7);
+    "weight" divides by the total mass (zero-padding dilution / FedAvg).
+    """
     n, r, d = x.shape
     br, bd = min(br, r), min(bd, d)
     grid = (pl.cdiv(r, br), pl.cdiv(d, bd))
     return pl.pallas_call(
-        functools.partial(_kernel, n_clients=n, method=method),
+        functools.partial(_kernel, n_clients=n, norm_by=norm_by),
         grid=grid,
         in_specs=[
             pl.BlockSpec((n,), lambda i, j: (0,)),

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..runtime import auto_interpret
 from .kernel import rbla_agg_pallas
 from .ref import rbla_agg_ref
 
@@ -14,13 +15,26 @@ def _pad_to(v: int, mult: int) -> int:
     return (v + mult - 1) // mult * mult
 
 
+#: legacy method names -> the kernel's two normalization modes.  FedAvg at
+#: kernel level is zeropad with full-rank masks (see FedAvgStrategy).
+_NORM_BY = {"rbla": "mask", "zeropad": "weight"}
+
+
 @functools.partial(jax.jit, static_argnames=("method", "interpret"))
-def rbla_agg(x, ranks, weights, *, method: str = "rbla", interpret=True):
+def rbla_agg(x, ranks, weights, *, method: str = "rbla", interpret=None):
     """Aggregate stacked client tensors (N, R, *dims) with rank-row masks.
 
     Trailing dims are flattened into D; padding rows/cols are masked out of
     the result.  Matches ``repro.core.rbla_leaf`` semantics.
+    ``interpret=None`` auto-detects: compiled on TPU/GPU, interpreter on
+    CPU.
     """
+    interpret = auto_interpret(interpret)
+    try:
+        norm_by = _NORM_BY[method]
+    except KeyError:
+        raise ValueError(f"unknown kernel method {method!r}; options: "
+                         f"{sorted(_NORM_BY)}") from None
     n, r = x.shape[:2]
     lead = x.shape[2:]
     d = 1
@@ -31,7 +45,7 @@ def rbla_agg(x, ranks, weights, *, method: str = "rbla", interpret=True):
     x2 = jnp.pad(x2, ((0, 0), (0, rp - r), (0, dp - d)))
     out = rbla_agg_pallas(x2, jnp.asarray(ranks, jnp.int32),
                           jnp.asarray(weights, jnp.float32),
-                          method=method, interpret=interpret)
+                          norm_by=norm_by, interpret=interpret)
     return out[:r, :d].reshape((r,) + lead)
 
 

@@ -2,14 +2,17 @@
 implementation -- the kernel must agree with the paper's Eq. 7 exactly)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.core import rbla_leaf, stacked_rank_masks, zeropad_leaf
+
+_REF_FNS = {"rbla": rbla_leaf, "zeropad": zeropad_leaf}
 
 
 def rbla_agg_ref(x, ranks, weights, method: str = "rbla"):
     """x: (N, R, D); ranks: (N,); weights: (N,) -> (R, D)."""
+    try:
+        fn = _REF_FNS[method]
+    except KeyError:
+        raise ValueError(f"unknown kernel method {method!r}; options: "
+                         f"{sorted(_REF_FNS)}") from None
     masks = stacked_rank_masks(x.shape[1], ranks)[:, :, None]
-    if method == "rbla":
-        return rbla_leaf(x, masks, weights)
-    return zeropad_leaf(x, masks, weights)
+    return fn(x, masks, weights)

@@ -1,0 +1,17 @@
+"""Shared runtime policy for the Pallas kernel wrappers."""
+from __future__ import annotations
+
+import jax
+
+
+def auto_interpret(interpret: bool | None) -> bool:
+    """Resolve the ``interpret`` tri-state of a kernel wrapper.
+
+    ``None`` (the default) auto-detects: compiled Pallas on TPU/GPU,
+    interpreter mode on CPU (where Pallas cannot lower).  Explicit
+    ``True`` / ``False`` pass through -- tests force ``True``; TPU callers
+    that want a hard failure on accidental interpretation force ``False``.
+    """
+    if interpret is None:
+        return jax.default_backend() not in ("tpu", "gpu")
+    return interpret

@@ -5,15 +5,18 @@ import functools
 
 import jax
 
+from ..runtime import auto_interpret
 from .kernel import ssd_scan_pallas
 from .ref import ssd_scan_ref
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(xdt, dta, bm, cm, chunk: int = 256, *, interpret=True):
+def ssd_scan(xdt, dta, bm, cm, chunk: int = 256, *, interpret=None):
     """Chunked SSD: xdt (B,L,H,P) pre-scaled by dt; dta (B,L,H);
-    bm/cm (B,L,N).  Returns (y, h_final)."""
-    return ssd_scan_pallas(xdt, dta, bm, cm, chunk, interpret=interpret)
+    bm/cm (B,L,N).  Returns (y, h_final).  ``interpret=None`` auto-detects
+    (compiled on TPU/GPU, interpreter on CPU)."""
+    return ssd_scan_pallas(xdt, dta, bm, cm, chunk,
+                           interpret=auto_interpret(interpret))
 
 
 __all__ = ["ssd_scan", "ssd_scan_ref"]

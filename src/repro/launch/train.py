@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.checkpoint import save as ckpt_save
 from repro.configs import get_config, INPUT_SHAPES
+from repro.core.strategy import get_strategy, list_strategies
 from repro.data import make_lm_dataset
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 from repro.lora import attach_ranks, strip_ranks
@@ -38,7 +39,13 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--method", default="rbla",
+                    help="server aggregation strategy for the cohort "
+                         f"upload: one of {list_strategies()}")
+    ap.add_argument("--agg-backend", default="auto",
+                    choices=["auto", "ref", "pallas", "distributed"])
     args = ap.parse_args()
+    strategy = get_strategy(args.method)   # fail fast on typos
 
     cfg = get_config(args.arch)
     if args.preset == "reduced":
@@ -82,9 +89,29 @@ def main():
                 print(f"step {i:4d} loss {float(loss):.4f} "
                       f"({(time.time() - t0) / (i + 1):.2f}s/step)",
                       flush=True)
+        # the pod-side round ends like the FLaaS server: the cohort's
+        # adapter upload goes through the registered strategy (one cohort
+        # here; the FL simulator drives many).
+        # r_max=args.rank keeps the live rank (and the alpha/rank forward
+        # scale) identical to the model that was just trained
+        trained = attach_ranks(factors, ranks)
+        try:
+            global_adapters = strategy.aggregate_adapters(
+                [trained], jnp.ones(1), r_max=args.rank,
+                client_ranks=jnp.asarray([args.rank]),
+                backend=args.agg_backend)
+            print(f"aggregated cohort upload via strategy={strategy.name} "
+                  f"backend={args.agg_backend}")
+        except NotImplementedError as e:
+            # e.g. svd on layer-stacked pairs: don't lose the run --
+            # checkpoint the raw trained adapters instead
+            print(f"WARNING: strategy={strategy.name} cannot aggregate "
+                  f"this adapter structure ({e}); saving unaggregated "
+                  "adapters")
+            global_adapters = trained
         if args.ckpt:
-            ckpt_save(args.ckpt, attach_ranks(factors, ranks))
-            print(f"saved adapters to {args.ckpt}")
+            ckpt_save(args.ckpt, global_adapters)
+            print(f"saved aggregated adapters to {args.ckpt}")
 
 
 if __name__ == "__main__":

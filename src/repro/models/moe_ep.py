@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.compat import axis_size, shard_map_no_check
+
 from .common import dense, norm
 from .moe import _route, expert_dense
 
@@ -71,10 +73,10 @@ def moe_forward_ep_wrapped(p: Mapping, lora: Mapping | None, x: Array,
         return moe_forward_ep(p_l, lora_l, x_l, cfg, model_axis="model",
                               alpha=alpha)
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(pspec, lspec, P(tok_axes, None, None)),
-                       out_specs=P(tok_axes, None, None),
-                       check_vma=False)
+    fn = shard_map_no_check(body, mesh,
+                            in_specs=(pspec, lspec,
+                                      P(tok_axes, None, None)),
+                            out_specs=P(tok_axes, None, None))
     return fn(p, lora, x)
 
 
@@ -85,7 +87,7 @@ def moe_forward_ep(p: Mapping, lora: Mapping | None, x: Array, cfg, *,
     shard_map over (data..., model) with tokens sharded on data and
     experts on model."""
     lora = lora or {}
-    ep = lax.axis_size(model_axis)
+    ep = axis_size(model_axis)
     e = cfg.n_experts + cfg.moe_pad_experts
     e_local = e // ep
     k = cfg.experts_per_token

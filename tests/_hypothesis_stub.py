@@ -1,0 +1,66 @@
+"""Deterministic mini stand-in for `hypothesis`, used only when the real
+package is not installed (the CPU container ships without it).
+
+Implements exactly the subset this suite uses -- ``given`` with keyword
+strategies, ``settings(max_examples, deadline)``, and
+``strategies.integers / tuples / sampled_from`` -- by running each property
+test on ``max_examples`` seeded-random samples.  No shrinking, no database;
+CI installs the real hypothesis and bypasses this module entirely.
+"""
+from __future__ import annotations
+
+
+import types
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample            # sample(rng) -> value
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def tuples(*strats):
+    return _Strategy(lambda rng: tuple(s.sample(rng) for s in strats))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def settings(max_examples=20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**kw_strategies):
+    # NB: the wrapper must be zero-arg and must NOT expose fn's signature
+    # (no functools.wraps/__wrapped__), or pytest mistakes the property
+    # arguments for fixtures.
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", 20))
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__name__.encode("utf-8")))
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                fn(**drawn)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.tuples = tuples
+strategies.sampled_from = sampled_from

@@ -27,10 +27,10 @@ def body(p_local, x_local):
     return moe_forward_ep(p_local, None, x_local, cfg,
                           model_axis="model")
 
-fn = jax.jit(jax.shard_map(body, mesh=mesh,
-                           in_specs=(pspec, P(("data", "model"), None, None)),
-                           out_specs=P(("data", "model"), None, None),
-                           check_vma=False))
+from repro.core.compat import shard_map_no_check
+fn = jax.jit(shard_map_no_check(
+    body, mesh, in_specs=(pspec, P(("data", "model"), None, None)),
+    out_specs=P(("data", "model"), None, None)))
 with mesh:
     pd = jax.device_put(p, jax.tree.map(
         lambda s: NamedSharding(mesh, s), pspec,

@@ -1,4 +1,14 @@
+import sys
+
 import pytest
+
+try:                                    # property tests prefer the real thing
+    import hypothesis                   # noqa: F401
+except ImportError:                     # container without hypothesis: stub it
+    import _hypothesis_stub as _stub
+
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _stub.strategies
 
 
 def pytest_configure(config):

@@ -110,11 +110,11 @@ def test_fl_round_spmd():
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core.compat import shard_map_no_check
 from repro.core.distributed import rbla_tree_allreduce
 from repro.lora import (adapter_masks, attach_ranks, init_adapters,
                         strip_ranks, set_ranks)
 
-shard_map = jax.shard_map
 mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("clients",))
 
 specs = {"fc1": (16, 8)}
@@ -133,11 +133,9 @@ def client_round(adapters, rank, x):
 
 ranks = jnp.arange(1, 9, dtype=jnp.int32)        # heterogeneous ranks
 xs = jnp.arange(8, dtype=jnp.float32)[:, None] * jnp.ones((8, 4))
-fn = shard_map(client_round,
-               mesh=mesh,
-               in_specs=(P(), P("clients"), P("clients")),
-               out_specs=P(),
-               check_vma=False)
+fn = shard_map_no_check(client_round, mesh,
+                        in_specs=(P(), P("clients"), P("clients")),
+                        out_specs=P())
 out = fn(server, ranks, xs)
 A = np.asarray(out["fc1"]["A"])
 # row 7 owned only by the rank-8 client (client 7): preserved verbatim

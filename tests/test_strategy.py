@@ -1,0 +1,262 @@
+"""Strategy registry tests: every registered method's tree (reference),
+distributed (shard_map psum), and Pallas (kernel) paths must agree
+numerically on heterogeneous-rank fixtures, and unknown names must fail
+with an actionable error."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.strategy import (AggregationStrategy, ClientUpdate,
+                                 ServerState, get_strategy, list_strategies,
+                                 register_strategy, resolve_backend,
+                                 stack_trees)
+from repro.lora import init_adapters, mask_adapters, set_ranks
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPECS = {"fc1": (12, 16), "fc2": (10, 12)}
+R_MAX = 8
+
+
+def hetero_cohort(n=5, seed=0, r_lo=1, r_hi=R_MAX):
+    """n clients with random ranks in [r_lo, r_hi], noisy A and B."""
+    rng = np.random.default_rng(seed)
+    ranks = rng.integers(r_lo, r_hi + 1, n)
+    adapters, keys = [], jax.random.split(jax.random.PRNGKey(seed), n)
+    for i in range(n):
+        ad = init_adapters(keys[i], SPECS, R_MAX, int(ranks[i]))
+        ad = jax.tree.map(     # B inits to zero: randomize both factors
+            lambda x: x + jnp.asarray(rng.normal(size=x.shape), x.dtype)
+            if x.dtype == jnp.float32 else x, ad)
+        adapters.append(set_ranks(ad, int(ranks[i])))   # re-mask padding
+    weights = jnp.asarray(rng.uniform(0.5, 2.0, n), jnp.float32)
+    return adapters, jnp.asarray(ranks, jnp.int32), weights
+
+
+def assert_trees_close(a, b, rtol=1e-4, atol=1e-5):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- registry --
+def test_all_six_methods_registered():
+    assert {"rbla", "zeropad", "fedavg", "rbla_ranked", "rbla_norm",
+            "svd"} <= set(list_strategies())
+
+
+def test_fft_alias_resolves_to_fedavg():
+    assert get_strategy("fft") is get_strategy("fedavg")
+
+
+def test_unknown_strategy_error_names_options():
+    with pytest.raises(ValueError, match="unknown aggregation strategy"):
+        get_strategy("definitely_not_a_method")
+    with pytest.raises(ValueError, match="rbla"):
+        get_strategy("definitely_not_a_method")
+
+
+def test_register_custom_strategy_in_a_few_lines():
+    @register_strategy
+    class _Median(AggregationStrategy):
+        name = "test_median"
+        supports_distributed = False
+
+        def leaf(self, stacked, mask, weights, prev=None):
+            return jnp.median(stacked, axis=0)
+
+    try:
+        adapters, ranks, w = hetero_cohort(3)
+        out = get_strategy("test_median").aggregate_adapters(
+            adapters, w, r_max=R_MAX, backend="ref")
+        assert out["fc1"]["A"].shape == (R_MAX, 16)
+        assert int(out["fc1"]["rank"]) == R_MAX
+    finally:
+        from repro.core import strategy as _s
+        _s._REGISTRY.pop("test_median", None)
+
+
+def test_resolve_backend_auto_is_ref_on_cpu():
+    s = get_strategy("rbla")
+    assert resolve_backend("auto", s) == "ref"
+    assert resolve_backend("pallas", s) == "pallas"
+    with pytest.raises(ValueError, match="unknown backend"):
+        resolve_backend("cuda", s)
+
+
+def test_unsupported_paths_raise_actionable_errors():
+    with pytest.raises(NotImplementedError, match="Pallas"):
+        get_strategy("rbla_norm").aggregate_tree_pallas({}, jnp.ones(2),
+                                                        None)
+    with pytest.raises(NotImplementedError, match="distributed"):
+        get_strategy("svd").make_distributed_aggregator(None)
+
+
+# ------------------------------------------------- backend parity (tree) ----
+PARITY_METHODS = ["rbla", "zeropad", "fedavg", "rbla_ranked"]
+
+
+@pytest.mark.parametrize("method", PARITY_METHODS)
+def test_ref_vs_pallas_parity(method):
+    adapters, ranks, w = hetero_cohort(5, seed=1)
+    s = get_strategy(method)
+    ref = s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                               backend="ref")
+    pal = s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                               backend="pallas")
+    assert_trees_close(ref, pal)
+
+
+@pytest.mark.parametrize("method", PARITY_METHODS)
+def test_ref_vs_distributed_parity(method):
+    adapters, ranks, w = hetero_cohort(4, seed=2)
+    s = get_strategy(method)
+    ref = s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                               backend="ref")
+    dist = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                client_ranks=ranks, backend="distributed")
+    assert_trees_close(ref, dist)
+
+
+@pytest.mark.parametrize("method", ["rbla_norm", "svd"])
+def test_pair_structured_methods_run_on_ref(method):
+    adapters, ranks, w = hetero_cohort(4, seed=3)
+    out = get_strategy(method).aggregate_adapters(
+        adapters, w, r_max=R_MAX, client_ranks=ranks, backend="ref")
+    for pair in out.values():
+        assert pair["A"].shape == (R_MAX, pair["A"].shape[-1])
+        assert np.isfinite(np.asarray(pair["A"])).all()
+        assert int(pair["rank"]) == R_MAX
+
+
+# -------------------------------------------- prev_global retention parity --
+@pytest.mark.parametrize("backend", ["ref", "pallas", "distributed"])
+def test_rbla_prev_retention_across_backends(backend):
+    """A cohort of all-low-rank clients must not wipe the high-rank rows
+    the server already holds -- on every backend."""
+    adapters, ranks, w = hetero_cohort(4, seed=4, r_lo=2, r_hi=3)
+    prev = init_adapters(jax.random.PRNGKey(99), SPECS, R_MAX, R_MAX)
+    prev = jax.tree.map(
+        lambda x: x + 1.0 if x.dtype == jnp.float32 else x, prev)
+    out = get_strategy("rbla").aggregate_adapters(
+        adapters, w, r_max=R_MAX, client_ranks=ranks, prev_global=prev,
+        backend=backend)
+    top = slice(int(ranks.max()), R_MAX)      # rows no participant owns
+    for name in SPECS:
+        np.testing.assert_allclose(
+            np.asarray(out[name]["A"][top]),
+            np.asarray(prev[name]["A"][top]), rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(out[name]["B"][:, top]),
+            np.asarray(prev[name]["B"][:, top]), rtol=1e-6)
+
+
+def test_zeropad_does_not_retain_prev():
+    adapters, ranks, w = hetero_cohort(4, seed=5, r_lo=2, r_hi=3)
+    prev = init_adapters(jax.random.PRNGKey(7), SPECS, R_MAX, R_MAX)
+    out = get_strategy("zeropad").aggregate_adapters(
+        adapters, w, r_max=R_MAX, client_ranks=ranks, prev_global=prev)
+    top = slice(int(ranks.max()), R_MAX)
+    for name in SPECS:
+        np.testing.assert_allclose(np.asarray(out[name]["A"][top]), 0.0,
+                                   atol=1e-6)
+
+
+# ------------------------------------------------------------ svd strategy --
+def test_svd_single_client_preserves_effective_update():
+    """One rank-r client: serving the aggregate at r_max must reproduce
+    the client's effective delta (1/r_max) * B A == (1/r) * B_c A_c."""
+    (ad,), ranks, _ = hetero_cohort(1, seed=6, r_lo=3, r_hi=3)
+    out = get_strategy("svd").aggregate_adapters(
+        [ad], jnp.ones(1), r_max=R_MAX, client_ranks=ranks)
+    r = float(ranks[0])
+    for name in SPECS:
+        got = (np.asarray(out[name]["B"], np.float32)
+               @ np.asarray(out[name]["A"], np.float32)) / R_MAX
+        want = (np.asarray(ad[name]["B"], np.float32)
+                @ np.asarray(ad[name]["A"], np.float32)) / r
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------------------- high-level round --
+def test_server_state_round_with_client_updates():
+    adapters, ranks, w = hetero_cohort(3, seed=8)
+    base = [{"b": jnp.full((4,), float(i))} for i in range(3)]
+    state = ServerState(
+        adapters=init_adapters(jax.random.PRNGKey(0), SPECS, R_MAX, R_MAX),
+        base_trainable={"b": jnp.zeros((4,))}, round=0, r_max=R_MAX)
+    updates = [ClientUpdate(adapters=a, base_trainable=b, rank=int(r))
+               for a, b, r in zip(adapters, base, ranks)]
+    nxt = get_strategy("rbla").aggregate(state, updates, w)
+    assert nxt.round == 1
+    np.testing.assert_array_equal(np.asarray(nxt.client_ranks),
+                                  np.asarray(ranks))
+    # base is plain weighted mean of the uploads
+    want = float(jnp.sum(w * jnp.asarray([0., 1., 2.])) / jnp.sum(w))
+    np.testing.assert_allclose(np.asarray(nxt.base_trainable["b"]), want,
+                               rtol=1e-5)
+    # adapters keep padded storage shapes and reset live rank to r_max
+    assert nxt.adapters["fc1"]["A"].shape == (R_MAX, 16)
+    assert int(nxt.adapters["fc1"]["rank"]) == R_MAX
+
+
+def test_aggregate_defaults_weights_to_n_examples():
+    state = ServerState(adapters=None, base_trainable={"w": jnp.zeros(2)})
+    updates = [ClientUpdate(adapters=None,
+                            base_trainable={"w": jnp.full((2,), float(i))},
+                            n_examples=n)
+               for i, n in enumerate([1.0, 3.0])]
+    nxt = get_strategy("fedavg").aggregate(state, updates)
+    np.testing.assert_allclose(np.asarray(nxt.base_trainable["w"]), 0.75,
+                               rtol=1e-6)
+
+
+def test_aggregate_without_adapters_is_fedavg_only():
+    state = ServerState(adapters=None, base_trainable={"w": jnp.zeros(3)},
+                        round=4)
+    updates = [ClientUpdate(adapters=None,
+                            base_trainable={"w": jnp.ones(3) * i})
+               for i in range(2)]
+    nxt = get_strategy("fft").aggregate(state, updates, jnp.ones(2))
+    assert nxt.adapters is None and nxt.round == 5
+    np.testing.assert_allclose(np.asarray(nxt.base_trainable["w"]), 0.5,
+                               rtol=1e-6)
+
+
+# ----------------------------------------- old entry points still dispatch --
+def test_deprecated_server_wrappers_route_through_registry():
+    adapters, ranks, w = hetero_cohort(3, seed=9)
+    from repro.fl.server import aggregate_adapters
+    with pytest.deprecated_call():
+        old = aggregate_adapters(adapters, w, method="rbla", r_max=R_MAX,
+                                 client_ranks=ranks)
+    new = get_strategy("rbla").aggregate_adapters(
+        adapters, w, r_max=R_MAX, client_ranks=ranks, backend="ref")
+    assert_trees_close(old, new)
+
+
+def test_core_aggregate_shim_rejects_unknown_method():
+    from repro.core import aggregate
+    tree = {"t": jnp.ones((2, 4, 3))}
+    masks = {"t": jnp.ones(())}
+    with pytest.raises(ValueError, match="unknown aggregation strategy"):
+        aggregate(tree, masks, jnp.ones(2), method="nope")
+
+
+def test_ranked_via_legacy_shims_never_silently_downgrades():
+    """The old string-dispatch aggregate() rejected rbla_ranked; the shim
+    must not quietly run it as plain rbla when ranks are unavailable."""
+    from repro.core import aggregate, rbla_tree_allreduce
+    tree = {"t": jnp.ones((2, 4, 3))}
+    masks = {"t": jnp.ones(())}
+    with pytest.raises(ValueError, match="client_ranks"):
+        aggregate(tree, masks, jnp.ones(2), method="rbla_ranked")
+    with pytest.raises(NotImplementedError, match="rank_proportional"):
+        rbla_tree_allreduce(tree, masks, jnp.float32(1.0), "clients",
+                            method="rbla_ranked")
