@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import get_strategy, list_strategies, stacked_rank_masks
-from repro.kernels import rbla_agg
+from repro.kernels import flora_stack, rbla_agg
 
 CASES = [
     # (n_clients, r_max, fan_in, n_tensors)
@@ -57,6 +57,28 @@ def main():
                 t, m, ww, client_ranks=ranks))
             us = bench(f, tree, mtree, w)
             print(f"agg/{method}/n{n}_r{r}_d{d}x{nt},{us:.0f},core-ref")
+
+        # flora is pair-structured and rank-changing: bench it on whole
+        # adapter pairs (ref tree path) and its copy/scale kernel, which
+        # reads sum(ranks)*d vs the reduction kernels' n*r*d
+        pairs = [{"A": jnp.asarray(rng.normal(size=(r, d)), jnp.float32),
+                  "B": jnp.asarray(rng.normal(size=(d, r)), jnp.float32),
+                  "rank": jnp.asarray(int(ranks[i]), jnp.int32)}
+                 for i in range(n)]
+        flora = get_strategy("flora").with_options(
+            stack_r_cap=int(np.asarray(ranks).sum()) + r)
+        us = bench(lambda: flora.aggregate_adapters(
+            [{"t": p} for p in pairs], w, r_max=r,
+            client_ranks=ranks, backend="ref"), iters=3)
+        print(f"agg/flora/n{n}_r{r}_d{d}x1,{us:.0f},core-ref")
+
+        segs = tuple(int(v) for v in np.asarray(ranks))
+        xs = tree["t0"]
+        us = bench(lambda: flora_stack(
+            xs, jnp.ones(n), segs=segs, out_rows=sum(segs)), iters=3)
+        mode = "pallas" if jax.default_backend() in ("tpu", "gpu") \
+            else "pallas-interpret"
+        print(f"agg/flora_stack_kernel/n{n}_r{r}_d{d}x1,{us:.0f},{mode}")
 
         x0 = tree["t0"]
         for method in BENCH_METHODS:

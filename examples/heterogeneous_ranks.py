@@ -43,6 +43,41 @@ for row in range(R_MAX):
           f"|rbla|={float(jnp.abs(rb[row]).mean()):.3f}")
 print("  (zero-padding shrinks scarce rows by owners/n; RBLA does not)")
 
+print("\n== FLoRA stacking: rank-growing, noise-free aggregation ==")
+# the flora strategy concatenates client factors instead of averaging
+# rows: the served update is *exactly* the convex combination of the
+# clients' effective updates, at the price of a growing global rank
+from repro.lora import init_adapters, set_ranks as _set_ranks
+
+SPECS = {"fc": (FAN_OUT, FAN_IN)}
+cohort, keys = [], jax.random.split(jax.random.PRNGKey(3), 3)
+cranks = (2, 3, 5)
+for k, r in zip(keys, cranks):
+    ad = init_adapters(k, SPECS, R_MAX, r)
+    ad = jax.tree.map(lambda x: x + 0.1 if x.dtype == jnp.float32 else x,
+                      ad)           # randomize B too (it inits to zero)
+    cohort.append(_set_ranks(ad, r))
+flora = get_strategy("flora").with_options(stack_r_cap=32)
+wf = jnp.ones(len(cohort))
+glob = flora.aggregate_adapters(cohort, wf, r_max=R_MAX,
+                                client_ranks=jnp.asarray(cranks))
+print(f"  client ranks {cranks} -> stacked global rank "
+      f"{int(glob['fc']['rank'])} (storage {glob['fc']['A'].shape[-2]})")
+eff = np.asarray(glob["fc"]["B"] @ glob["fc"]["A"]) / int(glob["fc"]["rank"])
+want = sum(np.asarray(c["fc"]["B"] @ c["fc"]["A"]) / r
+           for c, r in zip(cohort, cranks)) / len(cohort)
+print(f"  served update == mean client update: max |diff| = "
+      f"{np.abs(eff - want).max():.2e}  (stacking is noise-free)")
+nxt = flora.aggregate_adapters(cohort, wf, r_max=R_MAX,
+                               client_ranks=jnp.asarray(cranks),
+                               prev_global=glob)
+print(f"  next round stacks the previous global as one more contributor: "
+      f"rank {int(glob['fc']['rank'])} -> {int(nxt['fc']['rank'])}")
+capped = flora.with_options(stack_r_cap=R_MAX).aggregate_adapters(
+    cohort, wf, r_max=R_MAX, client_ranks=jnp.asarray(cranks))
+print(f"  with stack_r_cap={R_MAX} the same cohort SVD-reprojects back "
+      f"to rank {int(capped['fc']['rank'])}")
+
 print("\n== the same aggregation as a pod-level collective ==")
 # every registered strategy carries its own distributed shard_map path:
 mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(8), ("clients",))

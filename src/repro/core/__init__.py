@@ -12,8 +12,9 @@ from .aggregation import (aggregate, fedavg_leaf, rbla_leaf, zeropad_leaf,
 from .variants import (rank_proportional_weights, rbla_norm_leaf,
                        svd_project_pair)
 from .strategy import (AggregationStrategy, ClientUpdate, ServerState,
-                       BACKENDS, get_strategy, list_strategies,
-                       register_strategy, resolve_backend, stack_trees)
+                       BACKENDS, adapter_live_ranks, get_strategy,
+                       list_strategies, register_strategy, resolve_backend,
+                       stack_trees)
 from .distributed import (make_distributed_aggregator, rbla_allreduce,
                           rbla_tree_allreduce)
 
@@ -23,7 +24,8 @@ __all__ = [
     "zeropad_leaf", "AGGREGATORS", "make_distributed_aggregator",
     "rbla_allreduce", "rbla_tree_allreduce", "rank_proportional_weights",
     "rbla_norm_leaf", "svd_project_pair", "AggregationStrategy",
-    "ClientUpdate", "ServerState", "BACKENDS", "get_strategy",
+    "ClientUpdate", "ServerState", "BACKENDS", "adapter_live_ranks",
+    "get_strategy",
     "list_strategies", "register_strategy", "resolve_backend",
     "stack_trees",
 ]

@@ -39,6 +39,7 @@ from typing import Any, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from .aggregation import _EPS, fedavg_leaf, rbla_leaf, zeropad_leaf
@@ -56,12 +57,20 @@ BACKENDS = ("auto", "ref", "pallas", "distributed")
 # ------------------------------------------------------------ server state --
 @dataclasses.dataclass
 class ServerState:
-    """The FL server's round state: what Alg. 1 carries between rounds."""
+    """The FL server's round state: what Alg. 1 carries between rounds.
+
+    ``current_rank`` is the per-leaf *live* rank of ``adapters`` after the
+    last aggregation: a pytree mirroring ``adapters`` with each LoRA pair
+    replaced by its rank leaf.  For fixed-rank strategies it is ``r_max``
+    everywhere; rank-changing strategies (``rank_contract="stacked"``)
+    vary it round to round while the storage shape stays static.
+    """
     adapters: PyTree | None            # global LoRA adapters (None in FFT)
     base_trainable: PyTree             # non-LoRA trainables (or full params)
     round: int = 0
     r_max: int | None = None
     client_ranks: Array | None = None  # ranks of the last participant cohort
+    current_rank: PyTree | None = None  # per-leaf live rank of ``adapters``
 
 
 @dataclasses.dataclass
@@ -79,13 +88,24 @@ _REGISTRY: dict[str, "AggregationStrategy"] = {}
 
 def register_strategy(cls):
     """Class decorator: instantiate ``cls`` and register it under
-    ``cls.name`` (plus any ``cls.aliases``).  Returns ``cls`` unchanged."""
+    ``cls.name`` (plus any ``cls.aliases``).  Returns ``cls`` unchanged.
+
+    Duplicate names (or aliases colliding with existing names) raise: a
+    silent overwrite would reroute every ``FLConfig(method=...)`` user of
+    the shadowed strategy.
+    """
     inst = cls()
     if not inst.name:
         raise ValueError(f"{cls.__name__} needs a non-empty .name")
-    _REGISTRY[inst.name] = inst
-    for alias in inst.aliases:
-        _REGISTRY[alias] = inst
+    names = (inst.name,) + tuple(inst.aliases)
+    taken = [n for n in names if n in _REGISTRY]
+    if taken:
+        raise ValueError(
+            f"strategy name(s) {taken} already registered (by "
+            f"{type(_REGISTRY[taken[0]]).__name__}); pick a unique .name / "
+            ".aliases or remove the old entry explicitly")
+    for n in names:
+        _REGISTRY[n] = inst
     return cls
 
 
@@ -168,6 +188,12 @@ def _fix_rank(tree: PyTree, r_max: int | None) -> PyTree:
     return _map_pairs(fix, tree)
 
 
+def adapter_live_ranks(tree: PyTree) -> PyTree:
+    """Per-leaf live-rank tree: every LoRA pair replaced by its rank leaf
+    (what :class:`ServerState` carries as ``current_rank``)."""
+    return _map_pairs(lambda p: jnp.asarray(p["rank"], jnp.int32), tree)
+
+
 def _infer_ranks(stacked_tree: PyTree) -> Array | None:
     """Recover the per-client rank vector from a stacked adapter tree's
     first scalar-rank pair (None if there is none)."""
@@ -224,6 +250,40 @@ class AggregationStrategy:
     supports_distributed: bool = True
     #: method name understood by the rbla_agg Pallas kernel
     pallas_method: str = "rbla"
+    #: declared output-rank contract: "fixed" = the aggregate's live rank
+    #: is always r_max (the registry's historical assumption); "stacked" =
+    #: the live rank varies with the cohort (e.g. flora) and callers must
+    #: read it from the output pairs / ``ServerState.current_rank``
+    rank_contract: str = "fixed"
+    #: what a homogeneous-rank cohort degenerates to: "factors" = output
+    #: factors equal FedAvg of the client factors, "product" = the served
+    #: effective update equals the weighted mean of the clients' effective
+    #: updates, None = intentionally neither (the property suite reads
+    #: this; see tests/test_strategy_properties.py)
+    fedavg_equivalence: str | None = "factors"
+
+    def with_options(self, **options) -> "AggregationStrategy":
+        """Return a configured copy of this strategy.
+
+        Registered instances are shared singletons; per-run knobs (e.g.
+        flora's ``stack_r_cap``) must never be set on them directly.  Only
+        attributes the strategy already declares are accepted.
+        """
+        import copy
+        inst = copy.copy(self)
+        inst.__dict__.pop("_dist_agg_cache", None)  # fns close over self
+        for k, v in options.items():
+            if not hasattr(inst, k) or k.startswith("_"):
+                raise ValueError(
+                    f"strategy {self.name!r} has no option {k!r}")
+            setattr(inst, k, v)
+        return inst
+
+    def server_storage_rank(self, r_max: int | None) -> int | None:
+        """Storage rank the server should allocate for global adapters.
+        Fixed-rank strategies store exactly ``r_max``; rank-growing ones
+        (flora) need headroom up to their cap."""
+        return r_max
 
     # ------------------------------------------------------ (a) leaf math --
     def leaf(self, stacked: Array, mask: Array | None, weights: Array,
@@ -284,6 +344,29 @@ class AggregationStrategy:
         den_w = lax.psum(w, axis_name) if self.norm_by == "weight" else None
         return self._combine(num, den_mask, den_w).astype(local.dtype)
 
+    def aggregate_tree_distributed(self, stacked_tree: PyTree,
+                                   mask_tree: PyTree, weights: Array,
+                                   prev_tree: PyTree | None = None, *,
+                                   r_max: int | None = None,
+                                   client_ranks: Array | None = None,
+                                   mesh=None,
+                                   client_axis: str = "clients") -> PyTree:
+        """Distributed path over an already-stacked tree.
+
+        Transforms the weights host-side (a shard never sees the global
+        rank vector), runs the shard_map aggregator, and re-applies
+        ``prev_global`` retention.  Rank-changing strategies override this
+        wholesale (their collective is a ragged concat, not a psum).
+        """
+        wt = self.transform_weights(jnp.asarray(weights, jnp.float32),
+                                    client_ranks)
+        out = self._aggregate_distributed(stacked_tree, mask_tree, wt, mesh,
+                                          client_axis)
+        if (prev_tree is not None and self.retains_prev
+                and client_ranks is not None):
+            out = _retain_prev(out, prev_tree, client_ranks)
+        return out
+
     def make_distributed_aggregator(self, mesh, client_axis: str = "data"):
         """Build a jitted SPMD aggregator over ``client_axis`` of ``mesh``.
 
@@ -333,13 +416,16 @@ class AggregationStrategy:
     def aggregate_tree_pallas(self, stacked_tree: PyTree, weights: Array,
                               client_ranks: Array | None,
                               prev_tree: PyTree | None = None, *,
+                              r_max: int | None = None,
                               interpret: bool | None = None) -> PyTree:
         """Kernel path over an adapter tree of stacked LoRA pairs.
 
         A leaves (n, r_max, fan_in) hit the kernel directly; B leaves
         (n, fan_out, r_max) via a rank-axis transpose.  Layer-stacked pairs
         (leading dims / per-layer rank vectors) fall back to the reference
-        leaf math -- the kernel wants a single rank-row axis.
+        leaf math -- the kernel wants a single rank-row axis.  ``r_max``
+        is ignored by fixed-rank strategies (the caller's finalize resets
+        live ranks); rank-changing ones need it for their cap logic.
         """
         if not self.supports_pallas:
             raise NotImplementedError(
@@ -402,26 +488,31 @@ class AggregationStrategy:
         w = jnp.asarray(weights, jnp.float32)
         prev = prev_global if self.retains_prev else None
         kind = resolve_backend(backend, self)
-        # transform_weights is applied by the tree/pallas paths themselves
-        # (they see client_ranks); the distributed program cannot (a shard
-        # never sees the global rank vector), so transform here for it.
         if kind == "pallas":
             out = self.aggregate_tree_pallas(stacked, w, client_ranks, prev,
+                                             r_max=r_max,
                                              interpret=interpret)
         else:
             # the kernel path derives masks from ranks; only the jnp/psum
             # paths need the materialized delta_{i,r} mask tree
             masks = stack_trees([adapter_masks(a) for a in client_adapters])
             if kind == "distributed":
-                wt = self.transform_weights(w, client_ranks)
-                out = self._aggregate_distributed(stacked, masks, wt, mesh,
-                                                  client_axis)
-                if prev is not None and client_ranks is not None:
-                    out = _retain_prev(out, prev, client_ranks)
+                out = self.aggregate_tree_distributed(
+                    stacked, masks, w, prev, r_max=r_max,
+                    client_ranks=client_ranks, mesh=mesh,
+                    client_axis=client_axis)
             else:
                 out = self.aggregate_tree(stacked, masks, w, prev,
                                           r_max=r_max,
                                           client_ranks=client_ranks)
+        return self.finalize_tree(out, r_max)
+
+    def finalize_tree(self, out: PyTree, r_max: int | None) -> PyTree:
+        """Post-aggregation rank bookkeeping.  Fixed-rank strategies reset
+        every pair's live rank to ``r_max`` (the server keeps the full
+        stack; clients re-slice per Alg. 2).  Rank-changing strategies
+        override this to a no-op: their aggregation already wrote the new
+        live rank into each pair."""
         return _fix_rank(out, r_max)
 
     def _aggregate_distributed(self, stacked, masks, w, mesh, client_axis):
@@ -480,10 +571,13 @@ class AggregationStrategy:
                 prev_global=state.adapters, backend=backend, mesh=mesh,
                 client_axis=client_axis)
 
+        current_rank = (adapter_live_ranks(new_adapters)
+                        if new_adapters is not None else state.current_rank)
         return ServerState(adapters=new_adapters, base_trainable=new_base,
                            round=state.round + 1, r_max=state.r_max,
                            client_ranks=(ranks if ranks is not None
-                                         else state.client_ranks))
+                                         else state.client_ranks),
+                           current_rank=current_rank)
 
 
 # --------------------------------------------------------- the strategies --
@@ -557,6 +651,9 @@ class RBLANormStrategy(AggregationStrategy):
     name = "rbla_norm"
     norm_by = "mask"
     supports_distributed = False
+    # homogeneous cohorts do NOT degenerate to FedAvg: the per-row norm
+    # restoration rescales even fully-shared rows (that is the point)
+    fedavg_equivalence = None
 
     def leaf(self, stacked, mask, weights, prev=None):
         return rbla_leaf(stacked, mask, weights, prev)
@@ -593,6 +690,11 @@ class SVDStrategy(AggregationStrategy):
     name = "svd"
     norm_by = "mask"
     supports_distributed = False
+    # FedAvg-equivalence holds in product space only when the truncated
+    # SVD is lossless (sum of client ranks <= r_out), which a random
+    # cohort does not guarantee -- declared None; the exactness case is
+    # covered by test_svd_single_client_preserves_effective_update
+    fedavg_equivalence = None
 
     def aggregate_tree(self, stacked_tree, mask_tree, weights,
                        prev_tree=None, *, r_max=None, client_ranks=None):
@@ -619,9 +721,339 @@ class SVDStrategy(AggregationStrategy):
         return _map_pairs(agg_pair, stacked_tree, mask_tree, strict=True)
 
 
+@register_strategy
+class FloraStrategy(AggregationStrategy):
+    """FLoRA-style *stacking* aggregation (Wang et al., 2024).
+
+    Instead of averaging factors row-by-row, the participating clients'
+    A/B factors are concatenated along the rank axis, so the aggregate is
+    **noise-free** (no cross-client interference) but **rank-growing**:
+    the output's live rank is the sum of the contributors' ranks.  The
+    previous global is retained by treating it as one more stacked
+    contributor (mass ``prev_weight`` x the mean client weight), ILoRA-
+    style concatenation plumbing serves the result.
+
+    Scaling: contributor ``i`` (normalized mass ``m_i``, rank ``r_i``)
+    enters with ``s_i = m_i * R_out / r_i`` folded into its B columns, so
+    that serving the aggregate at rank ``R_out`` under the ``alpha/rank``
+    LoRA convention reproduces the convex combination of the
+    contributors' effective updates ``sum_i m_i * (alpha/r_i) B_i A_i``
+    *exactly*.  A rows pass through verbatim.
+
+    Rank cap: storage is padded to ``stack_r_cap`` (default ``2*r_max``).
+    When the stacked rank would exceed the cap, the contributors are
+    SVD re-projected back to ``r_max`` in product space instead (same
+    math as the ``svd`` strategy, but over the ragged contributor list),
+    and rank growth restarts from there next round.
+
+    All paths need **concrete** client ranks: the stack/reproject
+    decision and the concat offsets depend on their sum, which cannot be
+    resolved under tracing.  Aggregate outside jit (the FL server does).
+    """
+    name = "flora"
+    aliases = ("stacking",)
+    rank_contract = "stacked"
+    fedavg_equivalence = "product"
+    retains_prev = True
+    supports_pallas = True
+    supports_distributed = True
+    norm_by = "weight"
+    stack_r_cap: int | None = None     # None -> 2 * r_max at aggregation
+    prev_weight: float = 1.0           # prev global mass / mean client mass
+
+    # ------------------------------------------------------ rank plumbing --
+    def resolve_cap(self, r_max: int | None,
+                    r_storage: int | None = None) -> int:
+        if self.stack_r_cap is not None:
+            return int(self.stack_r_cap)
+        base = r_max if r_max is not None else r_storage
+        if base is None:
+            raise ValueError("flora needs r_max (or an explicit "
+                             "stack_r_cap) to size the stacked storage")
+        return 2 * int(base)
+
+    def server_storage_rank(self, r_max: int | None) -> int | None:
+        cap = self.resolve_cap(r_max)
+        self._validate_cap(cap, np.zeros(0, np.int64), r_max)  # fail fast
+        return cap
+
+    @staticmethod
+    def _concrete_ranks(ranks) -> np.ndarray:
+        if ranks is None:
+            raise ValueError(
+                "flora needs the client ranks (pass client_ranks, or "
+                "aggregate adapter trees whose pairs carry scalar ranks)")
+        if isinstance(ranks, jax.core.Tracer):
+            raise NotImplementedError(
+                "flora stacking needs concrete client ranks: the output "
+                "rank is their sum, which cannot be decided under "
+                "jit tracing -- aggregate outside jit")
+        arr = np.asarray(jax.device_get(ranks)).astype(np.int64)
+        if arr.ndim == 2:            # layer-stacked (n, L): must be uniform
+            if not np.all(arr == arr[:, :1]):
+                raise NotImplementedError(
+                    "flora supports layer-stacked pairs only when each "
+                    "client's rank is uniform across layers")
+            arr = arr[:, 0]
+        return arr.reshape(-1)
+
+    def _validate_cap(self, cap: int, ranks: np.ndarray,
+                      r_max: int | None) -> None:
+        mx = int(ranks.max()) if ranks.size else 0
+        if cap < mx:
+            raise ValueError(
+                f"flora: stack_r_cap={cap} < max client rank {mx}; a "
+                "single contributor would not fit the stacked storage -- "
+                "raise stack_r_cap to at least the largest client rank")
+        if r_max is not None and cap < r_max:
+            raise ValueError(
+                f"flora: stack_r_cap={cap} < r_max={r_max}: the SVD "
+                "re-projection target would not fit the stacked storage")
+
+    # -------------------------------------------------------- core pair op --
+    def _stack_pair(self, A: Array, B: Array, ranks: np.ndarray, w: Array,
+                    prev_A: Array | None, prev_B: Array | None,
+                    prev_rank: int | None, r_max: int | None):
+        """Stack (or SVD-reproject) one gathered pair.
+
+        ``A``: (n, *lead, r_st, fan_in); ``B``: (n, *lead, fan_out, r_st).
+        ``ranks``/``prev_rank`` are host ints (static); ``w`` may be
+        traced.  Returns (A_out, B_out, r_out) at ``stack_r_cap`` storage.
+        Contributor order is prev-first, so the leading rows of the new
+        global continue the old one (clients that re-slice the top rows
+        keep maximal continuity).
+        """
+        n = A.shape[0]
+        cap = self.resolve_cap(r_max, r_storage=A.shape[-2])
+        self._validate_cap(cap, ranks, r_max)
+        wf = jnp.asarray(w, jnp.float32)
+
+        seg_ranks: list[int] = []
+        A_parts, B_parts, masses = [], [], []
+        if prev_A is not None and prev_rank:
+            seg_ranks.append(int(prev_rank))
+            A_parts.append(prev_A[..., :int(prev_rank), :])
+            B_parts.append(prev_B[..., :int(prev_rank)])
+            masses.append(self.prev_weight * jnp.mean(wf))
+        for i in range(n):
+            r_i = int(ranks[i])
+            if r_i <= 0:
+                continue
+            seg_ranks.append(r_i)
+            A_parts.append(A[i][..., :r_i, :])
+            B_parts.append(B[i][..., :, :r_i])
+            masses.append(wf[i])
+        if not seg_ranks:
+            raise ValueError("flora: empty cohort (all ranks are zero)")
+        m = jnp.stack(masses)
+        mhat = m / (jnp.sum(m) + _EPS)
+        r_total = int(sum(seg_ranks))
+
+        if r_total <= cap:
+            r_out = r_total
+            scales = mhat * (jnp.float32(r_out) /
+                             jnp.asarray(seg_ranks, jnp.float32))
+            A_out = jnp.concatenate([a.astype(jnp.float32)
+                                     for a in A_parts], axis=-2)
+            B_out = jnp.concatenate(
+                [b.astype(jnp.float32) * scales[i]
+                 for i, b in enumerate(B_parts)], axis=-1)
+        else:
+            # over the cap: product-space re-projection back to r_max
+            # (batched over any leading layer/expert dims)
+            r_out = min(int(r_max if r_max is not None else A.shape[-2]),
+                        cap)
+            delta = None
+            for i, (a, b) in enumerate(zip(A_parts, B_parts)):
+                scale = mhat[i] * (jnp.float32(r_out) /
+                                   jnp.float32(seg_ranks[i]))
+                term = scale * jnp.einsum("...or,...ri->...oi",
+                                          b.astype(jnp.float32),
+                                          a.astype(jnp.float32))
+                delta = term if delta is None else delta + term
+            u, s, vt = jnp.linalg.svd(delta, full_matrices=False)
+            u, s, vt = (u[..., :, :r_out], s[..., :r_out],
+                        vt[..., :r_out, :])
+            sq = jnp.sqrt(s)
+            B_out = u * sq[..., None, :]
+            A_out = sq[..., :, None] * vt
+        A_out = pad_to_rank(A_out.astype(A.dtype), -2, cap)
+        B_out = pad_to_rank(B_out.astype(B.dtype), -1, cap)
+        return A_out, B_out, r_out
+
+    def _pair_ranks(self, pair, client_ranks) -> np.ndarray:
+        got = (pair["rank"] if client_ranks is None else client_ranks)
+        return self._concrete_ranks(got)
+
+    @staticmethod
+    def _out_rank_leaf(stacked_rank_leaf, r_out: int) -> Array:
+        # drop the client axis: scalar-rank -> (), layer-stacked -> (L,)
+        shape = jnp.asarray(stacked_rank_leaf).shape[1:]
+        return jnp.full(shape, r_out, jnp.int32)
+
+    @staticmethod
+    def _prev_rank_of(prev_pair) -> int | None:
+        if prev_pair is None:
+            return None
+        return int(np.max(np.asarray(jax.device_get(prev_pair["rank"]))))
+
+    def finalize_tree(self, out: PyTree, r_max: int | None) -> PyTree:
+        return out                       # live ranks already written
+
+    # ------------------------------------------------- (b) tree traversal --
+    def aggregate_tree(self, stacked_tree, mask_tree, weights,
+                       prev_tree=None, *, r_max=None, client_ranks=None):
+        w = jnp.asarray(weights, jnp.float32)
+
+        def agg_pair(pair, _masks, prev_pair):
+            ranks = self._pair_ranks(pair, client_ranks)
+            pA = prev_pair["A"] if prev_pair is not None else None
+            pB = prev_pair["B"] if prev_pair is not None else None
+            A_out, B_out, r_out = self._stack_pair(
+                pair["A"], pair["B"], ranks, w, pA, pB,
+                self._prev_rank_of(prev_pair), r_max)
+            return {"A": A_out, "B": B_out,
+                    "rank": self._out_rank_leaf(pair["rank"], r_out)}
+        return _map_pairs(agg_pair, stacked_tree, mask_tree, prev_tree,
+                          strict=True)
+
+    # ---------------------------------------------- (c) distributed path --
+    def make_distributed_aggregator(self, mesh, client_axis: str = "data"):
+        raise NotImplementedError(
+            "flora's distributed path is a ragged concat "
+            "(gather-then-stack), not a uniform masked psum -- the base "
+            "leafwise aggregator would silently average the stacked "
+            "factors; use aggregate_tree_distributed / "
+            "aggregate_adapters(backend='distributed') instead")
+
+    def aggregate_tree_distributed(self, stacked_tree, mask_tree, weights,
+                                   prev_tree=None, *, r_max=None,
+                                   client_ranks=None, mesh=None,
+                                   client_axis: str = "clients"):
+        """Ragged-concat collective: ranks differ per client, so there is
+        no uniform psum.  Each shard all-gathers the cohort's factors
+        (gather-then-stack) and computes the stacked pair replicated; the
+        concat offsets are static (host-known ranks) so the gathered
+        layout compiles to plain slices."""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+        w = jnp.asarray(weights, jnp.float32)
+        ranks = self._concrete_ranks(
+            client_ranks if client_ranks is not None
+            else _infer_ranks(stacked_tree))
+        n = int(w.shape[0])
+        if mesh is None:
+            devs = jax.devices()
+            k = max(i for i in range(1, len(devs) + 1) if n % i == 0)
+            mesh = Mesh(np.asarray(devs[:k]), (client_axis,))
+        prev_rank_tree = (None if prev_tree is None else
+                          _map_pairs(self._prev_rank_of, prev_tree))
+
+        # one trace+compile per (mesh, cohort rank multiset, prev ranks,
+        # r_max), not one per FL round: the closure is static in exactly
+        # these values (jit itself re-traces on leaf-shape changes)
+        cache = self.__dict__.setdefault("_dist_agg_cache", {})
+        prev_leaves, prev_def = jax.tree.flatten(prev_rank_tree)
+        key = (mesh, client_axis, tuple(int(r) for r in ranks), r_max,
+               tuple(prev_leaves), prev_def)
+        fn = cache.get(key)
+        if fn is None:
+            def body(st, wv, pv):
+                wf = lax.all_gather(wv, client_axis, tiled=True)
+
+                def agg_pair(pair, prev_pair, prev_rank):
+                    Ag = lax.all_gather(pair["A"], client_axis, tiled=True)
+                    Bg = lax.all_gather(pair["B"], client_axis, tiled=True)
+                    pA = prev_pair["A"] if prev_pair is not None else None
+                    pB = prev_pair["B"] if prev_pair is not None else None
+                    A_out, B_out, r_out = self._stack_pair(
+                        Ag, Bg, ranks, wf, pA, pB, prev_rank, r_max)
+                    shape = pair["rank"].shape[1:]
+                    return {"A": A_out, "B": B_out,
+                            "rank": jnp.full(shape, r_out, jnp.int32)}
+                return _map_pairs(agg_pair, st, pv, prev_rank_tree,
+                                  strict=True)
+
+            fn = jax.jit(shard_map_no_check(
+                body, mesh,
+                in_specs=(P(client_axis), P(client_axis), P()),
+                out_specs=P()))
+            cache[key] = fn
+        sh = NamedSharding(mesh, P(client_axis))
+        return fn(jax.device_put(stacked_tree, sh),
+                  jax.device_put(w, sh), prev_tree)
+
+    # --------------------------------------------------- (d) Pallas path --
+    def aggregate_tree_pallas(self, stacked_tree, weights, client_ranks,
+                              prev_tree=None, *, r_max=None,
+                              interpret=None):
+        """Kernel path: the stack is a pure copy/scale (no reduction), so
+        the ``flora_stack`` kernel places each contributor's live rows at
+        its static offset in one pass.  Layer-stacked (leading-dim) pairs
+        and over-cap cohorts (SVD re-projection) fall back to the
+        reference pair math."""
+        from repro.kernels.rbla_agg.ops import flora_stack
+
+        w = jnp.asarray(weights, jnp.float32)
+
+        def agg_pair(pair, prev_pair):
+            A, B = pair["A"], pair["B"]
+            ranks = self._pair_ranks(pair, client_ranks)
+            prev_rank = self._prev_rank_of(prev_pair)
+            pA = prev_pair["A"] if prev_pair is not None else None
+            pB = prev_pair["B"] if prev_pair is not None else None
+            cap = self.resolve_cap(r_max, r_storage=A.shape[-2])
+            self._validate_cap(cap, ranks, r_max)
+
+            has_prev = pA is not None and bool(prev_rank)
+            seg_ranks = [int(prev_rank)] if has_prev else []
+            live = [i for i in range(len(ranks)) if int(ranks[i]) > 0]
+            seg_ranks += [int(ranks[i]) for i in live]
+            r_total = int(sum(seg_ranks))
+            if A.ndim != 3 or B.ndim != 3 or r_total > cap:
+                # reference fallback: layer-stacked pairs / SVD reproject
+                A_out, B_out, r_out = self._stack_pair(
+                    A, B, ranks, w, pA, pB, prev_rank, r_max)
+                return {"A": A_out, "B": B_out,
+                        "rank": self._out_rank_leaf(pair["rank"], r_out)}
+
+            # uniform-storage contributor stacks (prev first, like ref);
+            # the kernel wants the rank axis leading, so B rides transposed
+            r_st = max(A.shape[-2], pA.shape[-2] if has_prev else 0)
+            keep = jnp.asarray(live, jnp.int32)
+            partsA = [pad_to_rank(A.astype(jnp.float32), -2, r_st)[keep]]
+            partsBt = [pad_to_rank(
+                jnp.swapaxes(B, 1, 2).astype(jnp.float32), -2, r_st)[keep]]
+            masses = [w[i] for i in live]
+            if has_prev:
+                partsA.insert(0, pad_to_rank(
+                    pA.astype(jnp.float32), -2, r_st)[None])
+                partsBt.insert(0, pad_to_rank(
+                    jnp.swapaxes(pB, 0, 1).astype(jnp.float32),
+                    -2, r_st)[None])
+                masses.insert(0, self.prev_weight * jnp.mean(w))
+            xA = jnp.concatenate(partsA, axis=0)
+            xBt = jnp.concatenate(partsBt, axis=0)
+            m = jnp.stack(masses)
+            mhat = m / (jnp.sum(m) + _EPS)
+            r_out = r_total
+            scales = mhat * (jnp.float32(r_out) /
+                             jnp.asarray(seg_ranks, jnp.float32))
+            segs = tuple(seg_ranks)
+            A_out = flora_stack(xA, jnp.ones_like(scales), segs=segs,
+                                out_rows=cap, interpret=interpret)
+            B_out = flora_stack(xBt, scales, segs=segs, out_rows=cap,
+                                interpret=interpret).T
+            return {"A": A_out.astype(A.dtype), "B": B_out.astype(B.dtype),
+                    "rank": self._out_rank_leaf(pair["rank"], r_out)}
+        return _map_pairs(agg_pair, stacked_tree, prev_tree, strict=True)
+
+
 __all__ = [
     "AggregationStrategy", "ServerState", "ClientUpdate", "BACKENDS",
     "register_strategy", "get_strategy", "list_strategies",
-    "resolve_backend", "stack_trees", "FedAvgStrategy", "ZeropadStrategy",
-    "RBLAStrategy", "RBLARankedStrategy", "RBLANormStrategy", "SVDStrategy",
+    "resolve_backend", "stack_trees", "adapter_live_ranks",
+    "FedAvgStrategy", "ZeropadStrategy", "RBLAStrategy",
+    "RBLARankedStrategy", "RBLANormStrategy", "SVDStrategy",
+    "FloraStrategy",
 ]

@@ -33,9 +33,12 @@ class FLConfig:
     model: str = "mlp"
     method: str = "rbla"           # any registered strategy: rbla |
                                    # zeropad | fedavg | rbla_ranked |
-                                   # rbla_norm | svd -- or "fft" (full
-                                   # fine-tune baseline, FedAvg on params)
+                                   # rbla_norm | svd | flora -- or "fft"
+                                   # (full fine-tune, FedAvg on params)
     agg_backend: str = "auto"      # auto | ref | pallas | distributed
+    stack_r_cap: int | None = None  # rank-changing strategies (flora):
+                                    # stacked-rank cap / server storage
+                                    # rank (None = the strategy default)
     n_clients: int = 10
     rounds: int = 50
     local_epochs: int = 1
@@ -71,6 +74,10 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
     # register_strategy'd class is immediately runnable from FLConfig.
     # Resolve first: a typo'd method must fail before data/model setup.
     strategy = get_strategy(cfg.method)
+    if cfg.stack_r_cap is not None:
+        # configured copy -- registered instances are shared singletons;
+        # strategies without the knob reject it loudly here
+        strategy = strategy.with_options(stack_r_cap=cfg.stack_r_cap)
     key = jax.random.PRNGKey(cfg.seed)
     model = PAPER_MODELS[cfg.model]() if cfg.model != "cnn_cifar" else \
         PAPER_MODELS[cfg.model](n_dense=2 if cfg.dataset == "cifar" else 4)
@@ -88,7 +95,10 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
                                                         model.lora_specs)
     else:                       # FFT trains every parameter
         frozen_base, base_trainable = {}, params
-    global_adapters = init_adapters(akey, model.lora_specs, cfg.r_max,
+    # rank-changing strategies (flora) keep the global at a larger static
+    # storage rank (the stack cap); the live rank then varies per round
+    r_storage = strategy.server_storage_rank(cfg.r_max) or cfg.r_max
+    global_adapters = init_adapters(akey, model.lora_specs, r_storage,
                                     cfg.r_max)
     state = ServerState(
         adapters=global_adapters if mode == "lora" else None,
@@ -131,7 +141,12 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
             c = clients[ci]
             fit_key = jax.random.PRNGKey(
                 int(rng.integers(0, 2 ** 31)) )
-            local_ad = set_ranks(global_adapters, c.rank)
+            # re-slice from the (possibly round-varying, rank-grown)
+            # global down to the client's rank at r_max storage: one
+            # compiled local_fit serves every round, and set_ranks copies
+            # -- a client must never alias the server's adapter storage
+            local_ad = set_ranks(global_adapters, c.rank,
+                                 r_storage=cfg.r_max)
             res = local_fit(frozen_base, base_trainable, local_ad,
                             client_x[ci], client_y[ci],
                             jnp.asarray(c.n, jnp.int32), fit_key)

@@ -49,6 +49,58 @@ def _kernel(ranks_ref, weights_ref, x_ref, o_ref, *, n_clients: int,
     o_ref[...] = out.astype(o_ref.dtype)
 
 
+def _stack_kernel(scales_ref, x_ref, o_ref, *, segs, offs):
+    """FLoRA stacking: pure copy/scale, no reduction.
+
+    Each contributor ``i`` owns output rows [offs[i], offs[i]+segs[i]);
+    the segment layout is static (host-known ranks), so every placement
+    is a plain sliced store.  Rows beyond the stacked total stay zero.
+    """
+    o_ref[...] = jnp.zeros(o_ref.shape, o_ref.dtype)
+    for i, (r_i, off) in enumerate(zip(segs, offs)):
+        o_ref[off:off + r_i, :] = (
+            scales_ref[i] * x_ref[i, :r_i, :].astype(jnp.float32)
+        ).astype(o_ref.dtype)
+
+
+def flora_stack_pallas(x, scales, *, segs: tuple[int, ...], out_rows: int,
+                       bd=DEFAULT_BD, interpret=True):
+    """x: (N, R, D); scales: (N,) f32; segs: static per-contributor live
+    row counts -> (out_rows, D) with contributor i's rows at the running
+    offset, scaled.  ``out_rows >= sum(segs)`` (extra rows are zero).
+
+    Bandwidth-optimal for the stacking server: reads sum(segs)*D, writes
+    out_rows*D, zero flops beyond the scale multiply -- the rbla_agg
+    reduction kernel would burn N*R*D reads on what is a placement.
+    """
+    n, r, d = x.shape
+    if len(segs) != n:
+        raise ValueError(f"{len(segs)} segments for {n} contributors")
+    if any(s < 0 or s > r for s in segs):
+        raise ValueError(f"segment sizes {segs} outside [0, {r}]")
+    offs = []
+    tot = 0
+    for s in segs:
+        offs.append(tot)
+        tot += int(s)
+    if tot > out_rows:
+        raise ValueError(f"stacked rows {tot} exceed out_rows={out_rows}")
+    bd = min(bd, d)
+    grid = (pl.cdiv(d, bd),)
+    return pl.pallas_call(
+        functools.partial(_stack_kernel, segs=tuple(int(s) for s in segs),
+                          offs=tuple(offs)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda j: (0,)),
+            pl.BlockSpec((n, r, bd), lambda j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((out_rows, bd), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((out_rows, d), x.dtype),
+        interpret=interpret,
+    )(scales.astype(jnp.float32), x)
+
+
 def rbla_agg_pallas(x, ranks, weights, *, norm_by: str = "mask",
                     br=DEFAULT_BR, bd=DEFAULT_BD, interpret=True):
     """x: (N, R, D); ranks: (N,) int32; weights: (N,) f32 -> (R, D).

@@ -7,8 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from ..runtime import auto_interpret
-from .kernel import rbla_agg_pallas
-from .ref import rbla_agg_ref
+from .kernel import flora_stack_pallas, rbla_agg_pallas
+from .ref import flora_stack_ref, rbla_agg_ref
 
 
 def _pad_to(v: int, mult: int) -> int:
@@ -49,4 +49,33 @@ def rbla_agg(x, ranks, weights, *, method: str = "rbla", interpret=None):
     return out[:r, :d].reshape((r,) + lead)
 
 
-__all__ = ["rbla_agg", "rbla_agg_ref"]
+@functools.partial(jax.jit, static_argnames=("segs", "out_rows",
+                                             "interpret"))
+def flora_stack(x, scales, *, segs: tuple[int, ...], out_rows: int,
+                interpret=None):
+    """Stack contributors' leading rank rows (FLoRA aggregation):
+
+        out[off_i : off_i + segs[i]] = scales[i] * x[i, :segs[i]]
+
+    with ``off_i`` the running sum of ``segs`` -- a pure copy/scale, no
+    reduction.  x: (N, R, *dims); trailing dims are flattened into D and
+    restored; lane/sublane padding is stripped from the result.  ``segs``
+    must be static (the output layout depends on them); recompiles per
+    distinct cohort rank multiset.
+    """
+    interpret = auto_interpret(interpret)
+    n, r = x.shape[:2]
+    lead = x.shape[2:]
+    d = 1
+    for v in lead:
+        d *= v
+    x2 = x.reshape(n, r, d)
+    rp, dp = _pad_to(max(r, 1), 8), _pad_to(d, 128)
+    op = _pad_to(max(out_rows, 1), 8)
+    x2 = jnp.pad(x2, ((0, 0), (0, rp - r), (0, dp - d)))
+    out = flora_stack_pallas(x2, jnp.asarray(scales, jnp.float32),
+                             segs=segs, out_rows=op, interpret=interpret)
+    return out[:out_rows, :d].reshape((out_rows,) + lead)
+
+
+__all__ = ["rbla_agg", "rbla_agg_ref", "flora_stack", "flora_stack_ref"]

@@ -2,9 +2,21 @@
 implementation -- the kernel must agree with the paper's Eq. 7 exactly)."""
 from __future__ import annotations
 
+import jax.numpy as jnp
+
 from repro.core import rbla_leaf, stacked_rank_masks, zeropad_leaf
 
 _REF_FNS = {"rbla": rbla_leaf, "zeropad": zeropad_leaf}
+
+
+def flora_stack_ref(x, scales, segs, out_rows: int):
+    """Oracle for the FLoRA stacking kernel: x (N, R, D), scales (N,),
+    static segs -> (out_rows, D) ragged concat of scaled leading rows."""
+    parts = [scales[i] * x[i, :int(s)].astype(jnp.float32)
+             for i, s in enumerate(segs)]
+    stacked = jnp.concatenate(parts, axis=0)
+    pad = out_rows - stacked.shape[0]
+    return jnp.pad(stacked, ((0, pad), (0, 0))).astype(x.dtype)
 
 
 def rbla_agg_ref(x, ranks, weights, method: str = "rbla"):

@@ -21,7 +21,7 @@ from typing import Any, Callable, Mapping
 import jax
 import jax.numpy as jnp
 
-from repro.core.masks import axis_mask, rank_mask
+from repro.core.masks import axis_mask, pad_to_rank, rank_mask
 
 Array = jax.Array
 PyTree = Any
@@ -139,12 +139,45 @@ def mask_adapters(adapters: PyTree) -> PyTree:
     return tree_map_pairs(mask_pair, adapters)
 
 
-def set_ranks(adapters: PyTree, rank: int | Array) -> PyTree:
-    """Client-side Alg. 2 under static shapes: keep padded storage, set the
-    live rank and re-mask (equivalent to slice + re-pad)."""
+def set_ranks(adapters: PyTree, rank: int | Array,
+              r_storage: int | None = None) -> PyTree:
+    """Client-side Alg. 2 under static shapes: set the live rank and
+    re-mask (equivalent to slice + re-pad).
+
+    ``r_storage`` re-cuts the *storage* rank: rows/cols beyond it are
+    sliced off, smaller storage is zero-padded up.  This is how clients
+    re-slice from a rank-growing global (e.g. flora keeps the server at
+    ``stack_r_cap`` storage while clients train at ``r_max``) without
+    changing their compiled shapes round to round.
+
+    The result never aliases the input buffers: every returned array is
+    freshly materialized (the re-mask multiply), so a client that
+    mutates its local adapters in place (numpy-backed state, in-place
+    optimizers) can never corrupt ``ServerState.adapters``.
+    """
+    if (r_storage is not None
+            and not isinstance(rank, jax.core.Tracer)
+            and int(jnp.max(jnp.asarray(rank))) > r_storage):
+        raise ValueError(
+            f"set_ranks: live rank {int(jnp.max(jnp.asarray(rank)))} "
+            f"exceeds the target storage rank {r_storage}; the pair's "
+            "rank leaf would claim rows that do not physically exist")
+
     def f(pair):
-        out = dict(pair)
-        out["rank"] = jnp.full_like(jnp.asarray(pair["rank"]), rank)
+        A, B = jnp.asarray(pair["A"]), jnp.asarray(pair["B"])
+        if r_storage is not None:
+            cur = A.shape[-2]
+            if cur >= r_storage:
+                A = A[..., :r_storage, :]
+                B = B[..., :r_storage]
+            else:
+                A = pad_to_rank(A, -2, r_storage)
+                B = pad_to_rank(B, -1, r_storage)
+        out = {"A": A, "B": B,
+               "rank": jnp.full_like(jnp.asarray(pair["rank"], jnp.int32),
+                                     rank)}
+        # mask_pair multiplies by the rank mask, which also guarantees a
+        # fresh buffer (copy, not alias, of the server's storage)
         return mask_pair(out)
     return tree_map_pairs(f, adapters)
 

@@ -82,6 +82,74 @@ def test_register_custom_strategy_in_a_few_lines():
         _s._REGISTRY.pop("test_median", None)
 
 
+def test_register_duplicate_name_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_strategy
+        class _Clash(AggregationStrategy):
+            name = "rbla"                  # collides with the paper method
+
+    with pytest.raises(ValueError, match="already registered"):
+        @register_strategy
+        class _AliasClash(AggregationStrategy):
+            name = "totally_new"
+            aliases = ("fedavg",)          # alias collides with a name
+    # the failed alias registration must not leave the primary name behind
+    with pytest.raises(ValueError, match="unknown aggregation strategy"):
+        get_strategy("totally_new")
+
+
+def test_with_options_returns_configured_copy():
+    s = get_strategy("flora")
+    s2 = s.with_options(stack_r_cap=32, prev_weight=0.5)
+    assert s2 is not s and s2.stack_r_cap == 32 and s2.prev_weight == 0.5
+    assert s.stack_r_cap is None            # the singleton is untouched
+    with pytest.raises(ValueError, match="no option"):
+        s.with_options(not_a_knob=1)
+    with pytest.raises(ValueError, match="no option"):
+        get_strategy("rbla").with_options(stack_r_cap=8)
+
+
+def test_flora_rank_cap_validation():
+    adapters, ranks, w = hetero_cohort(3, seed=10, r_lo=4, r_hi=R_MAX)
+    low = get_strategy("flora").with_options(stack_r_cap=2)
+    with pytest.raises(ValueError, match="stack_r_cap"):
+        low.aggregate_adapters(adapters, w, r_max=R_MAX,
+                               client_ranks=ranks, backend="ref")
+    with pytest.raises(ValueError, match="stack_r_cap"):
+        low.server_storage_rank(R_MAX)
+
+
+def test_flora_leafwise_distributed_hook_refuses():
+    """The base make_distributed_aggregator is a masked psum -- on flora
+    it would silently average stacked factors instead of concatenating,
+    so the hook must refuse and point at the ragged-concat path."""
+    with pytest.raises(NotImplementedError, match="ragged"):
+        get_strategy("flora").make_distributed_aggregator(None)
+
+
+def test_set_ranks_rejects_live_rank_beyond_storage():
+    from repro.lora import init_adapters, set_ranks
+    ad = init_adapters(jax.random.PRNGKey(0), SPECS, R_MAX, R_MAX)
+    with pytest.raises(ValueError, match="storage"):
+        set_ranks(ad, R_MAX, r_storage=2)
+
+
+def test_pallas_backend_on_cpu_falls_back_to_interpret():
+    """backend='pallas' must work on CPU (auto_interpret runs the kernel
+    in interpreter mode) and agree with the reference path."""
+    assert jax.default_backend() == "cpu"
+    adapters, ranks, w = hetero_cohort(4, seed=11)
+    for method in ("rbla", "flora"):
+        s = get_strategy(method)
+        if s.rank_contract == "stacked":
+            s = s.with_options(stack_r_cap=int(ranks.sum()) + R_MAX)
+        ref = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                   client_ranks=ranks, backend="ref")
+        pal = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                   client_ranks=ranks, backend="pallas")
+        assert_trees_close(ref, pal)
+
+
 def test_resolve_backend_auto_is_ref_on_cpu():
     s = get_strategy("rbla")
     assert resolve_backend("auto", s) == "ref"
@@ -99,7 +167,7 @@ def test_unsupported_paths_raise_actionable_errors():
 
 
 # ------------------------------------------------- backend parity (tree) ----
-PARITY_METHODS = ["rbla", "zeropad", "fedavg", "rbla_ranked"]
+PARITY_METHODS = ["rbla", "zeropad", "fedavg", "rbla_ranked", "flora"]
 
 
 @pytest.mark.parametrize("method", PARITY_METHODS)
@@ -155,6 +223,29 @@ def test_rbla_prev_retention_across_backends(backend):
         np.testing.assert_allclose(
             np.asarray(out[name]["B"][:, top]),
             np.asarray(prev[name]["B"][:, top]), rtol=1e-6)
+
+
+def test_flora_prev_as_contributor_parity_across_backends():
+    """flora retains the previous global by stacking it as one more
+    contributor; all three backends must place it identically (prev
+    first, then the cohort in order)."""
+    adapters, ranks, w = hetero_cohort(3, seed=6, r_lo=1, r_hi=3)
+    s = get_strategy("flora").with_options(stack_r_cap=64)
+    prev = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                client_ranks=ranks, backend="ref")
+    outs = {b: s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                    client_ranks=ranks, prev_global=prev,
+                                    backend=b)
+            for b in ("ref", "pallas", "distributed")}
+    r_prev = int(prev["fc1"]["rank"])
+    want_rank = r_prev + int(ranks.sum())
+    for b, out in outs.items():
+        assert int(out["fc1"]["rank"]) == want_rank, b
+        assert_trees_close(outs["ref"], out)
+    # prev-first: the leading A rows of the new global are the old one's
+    np.testing.assert_allclose(
+        np.asarray(outs["ref"]["fc1"]["A"][:r_prev]),
+        np.asarray(prev["fc1"]["A"][:r_prev]), rtol=1e-6)
 
 
 def test_zeropad_does_not_retain_prev():

@@ -1,0 +1,284 @@
+"""Property-based invariants for every registered aggregation strategy.
+
+Runs under ``tests/_hypothesis_stub.py`` (containers without hypothesis)
+and under real hypothesis (the CI matrix leg installs it); only the stub's
+API subset is used: ``given`` with keyword strategies, ``settings``, and
+``strategies.integers / tuples / sampled_from``.
+
+Invariants, over randomized rank multisets:
+
+* homogeneous-rank cohorts reduce to FedAvg, in the space each strategy
+  *declares* (``fedavg_equivalence``: "factors" | "product" | None);
+* aggregation is invariant to client permutation (product space -- flora
+  permutes factor segments but not the served update);
+* weights are convex: scaling every weight by the same constant changes
+  nothing (scale-by-n invariance);
+* output shapes match the strategy's declared rank contract
+  (``rank_contract``: fixed ``r_max`` storage+rank vs. stacked);
+* every (strategy x backend) pair either matches the reference path
+  numerically or raises the documented ``NotImplementedError``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.strategy import get_strategy, list_strategies
+from repro.lora import init_adapters, set_ranks
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPECS = {"fc1": (9, 7), "fc2": (6, 9)}
+R_MAX = 6
+ALL_METHODS = ("fedavg", "flora", "rbla", "rbla_norm", "rbla_ranked",
+               "svd", "zeropad")
+#: large enough that a cohort of <= 6 clients plus prev never hits the
+#: cap -- properties about *stacking* must not silently test the SVD path
+BIG_CAP = 8 * R_MAX
+
+
+def configured(method):
+    s = get_strategy(method)
+    if s.rank_contract == "stacked":
+        s = s.with_options(stack_r_cap=BIG_CAP)
+    return s
+
+
+def make_cohort(seed, ranks):
+    """Clients with the given ranks; both factors randomized (B inits 0)."""
+    rng = np.random.default_rng(seed)
+    adapters = []
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(ranks))
+    for i, r in enumerate(ranks):
+        ad = init_adapters(keys[i], SPECS, R_MAX, int(r))
+        ad = jax.tree.map(
+            lambda x: x + jnp.asarray(rng.normal(size=x.shape), x.dtype)
+            if x.dtype == jnp.float32 else x, ad)
+        adapters.append(set_ranks(ad, int(r)))
+    weights = jnp.asarray(rng.uniform(0.5, 2.0, len(ranks)), jnp.float32)
+    return adapters, jnp.asarray(ranks, jnp.int32), weights
+
+
+def random_ranks(rng_seed, n):
+    return tuple(int(r) for r in
+                 np.random.default_rng(rng_seed).integers(1, R_MAX + 1, n))
+
+
+def effective_deltas(tree):
+    """Served update per pair under the alpha/rank convention (alpha
+    dropped): (1/rank) * B @ A.  The space in which rank-changing
+    aggregation must be compared."""
+    out = {}
+    for k, pair in tree.items():
+        r = max(int(np.max(np.asarray(pair["rank"]))), 1)
+        out[k] = (np.asarray(pair["B"], np.float32)
+                  @ np.asarray(pair["A"], np.float32)) / r
+    return out
+
+
+def assert_delta_close(a, b, rtol=1e-3, atol=1e-4):
+    for k in a:
+        np.testing.assert_allclose(a[k], b[k], rtol=rtol, atol=atol,
+                                   err_msg=f"pair {k}")
+
+
+def mean_effective_delta(adapters, weights):
+    w = np.asarray(weights, np.float32)
+    what = w / w.sum()
+    out = {}
+    for k in adapters[0]:
+        out[k] = sum(
+            what[i] * np.asarray(ad[k]["B"], np.float32)
+            @ np.asarray(ad[k]["A"], np.float32) / max(int(ad[k]["rank"]), 1)
+            for i, ad in enumerate(adapters))
+    return out
+
+
+# ------------------------------------------------------------ registration --
+def test_exactly_seven_strategies_registered():
+    assert tuple(list_strategies()) == ALL_METHODS
+
+
+def test_every_strategy_declares_its_contracts():
+    for m in ALL_METHODS:
+        s = get_strategy(m)
+        assert s.rank_contract in ("fixed", "stacked"), m
+        assert s.fedavg_equivalence in ("factors", "product", None), m
+
+
+# ------------------------------------------- homogeneous cohorts == FedAvg --
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(2, 4),
+       rank=st.integers(1, R_MAX), method=st.sampled_from(ALL_METHODS))
+def test_homogeneous_cohort_reduces_to_fedavg(seed, n, rank, method):
+    s = configured(method)
+    if s.fedavg_equivalence is None:        # rbla_norm / svd: deliberate
+        return
+    adapters, ranks, w = make_cohort(seed, (rank,) * n)
+    out = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                               client_ranks=ranks, backend="ref")
+    if s.fedavg_equivalence == "factors":
+        ref = get_strategy("fedavg").aggregate_adapters(
+            adapters, w, r_max=R_MAX, client_ranks=ranks, backend="ref")
+        for k in SPECS:
+            for f in ("A", "B"):
+                np.testing.assert_allclose(
+                    np.asarray(out[k][f]), np.asarray(ref[k][f]),
+                    rtol=1e-4, atol=1e-5, err_msg=f"{method} {k} {f}")
+    else:                                   # "product": flora
+        assert_delta_close(effective_deltas(out),
+                           mean_effective_delta(adapters, w))
+
+
+# ---------------------------------------------------- permutation in order --
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(2, 5),
+       method=st.sampled_from(ALL_METHODS))
+def test_client_order_permutation_invariance(seed, n, method):
+    s = configured(method)
+    ranks = random_ranks(seed + 1, n)
+    adapters, rvec, w = make_cohort(seed, ranks)
+    perm = np.random.default_rng(seed + 2).permutation(n)
+    out = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                               client_ranks=rvec, backend="ref")
+    out_p = s.aggregate_adapters(
+        [adapters[i] for i in perm], w[jnp.asarray(perm)], r_max=R_MAX,
+        client_ranks=rvec[jnp.asarray(perm)], backend="ref")
+    # product space: flora permutes rank segments, svd's factors are only
+    # unique up to the truncation basis -- the served update must agree
+    assert_delta_close(effective_deltas(out), effective_deltas(out_p))
+    for k in SPECS:
+        np.testing.assert_array_equal(np.asarray(out[k]["rank"]),
+                                      np.asarray(out_p[k]["rank"]))
+
+
+# ------------------------------------------------- weights stay convex ------
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(2, 4),
+       scale=st.sampled_from([0.25, 3.0, 17.0]),
+       method=st.sampled_from(ALL_METHODS))
+def test_weight_scale_invariance(seed, n, scale, method):
+    """Scaling every client weight by the same constant (e.g. reporting
+    n_examples in different units) must not change the aggregate: the
+    combination is convex."""
+    s = configured(method)
+    adapters, rvec, w = make_cohort(seed, random_ranks(seed + 3, n))
+    out = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                               client_ranks=rvec, backend="ref")
+    out_s = s.aggregate_adapters(adapters, w * scale, r_max=R_MAX,
+                                 client_ranks=rvec, backend="ref")
+    assert_delta_close(effective_deltas(out), effective_deltas(out_s),
+                       rtol=1e-3, atol=1e-5)
+
+
+# ------------------------------------------------------ the rank contract --
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_output_matches_declared_rank_contract(method):
+    s = configured(method)
+    adapters, rvec, w = make_cohort(11, (1, 3, R_MAX, 2))
+    out = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                               client_ranks=rvec, backend="ref")
+    if s.rank_contract == "fixed":
+        for k, (fo, fi) in SPECS.items():
+            assert out[k]["A"].shape == (R_MAX, fi)
+            assert out[k]["B"].shape == (fo, R_MAX)
+            assert int(out[k]["rank"]) == R_MAX
+    else:
+        r_sum = int(np.asarray(rvec).sum())
+        assert r_sum <= BIG_CAP
+        for k, (fo, fi) in SPECS.items():
+            assert out[k]["A"].shape == (BIG_CAP, fi)   # storage = the cap
+            assert out[k]["B"].shape == (fo, BIG_CAP)
+            assert int(out[k]["rank"]) == r_sum         # live rank = sum
+
+
+def test_stacked_contract_counts_prev_as_contributor():
+    s = configured("flora")
+    adapters, rvec, w = make_cohort(12, (2, 3))
+    first = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                 client_ranks=rvec, backend="ref")
+    assert int(first["fc1"]["rank"]) == 5
+    second = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                  client_ranks=rvec, prev_global=first,
+                                  backend="ref")
+    assert int(second["fc1"]["rank"]) == 5 + 5
+
+
+def test_stacked_contract_caps_to_r_max_via_svd():
+    s = get_strategy("flora").with_options(stack_r_cap=R_MAX)
+    adapters, rvec, w = make_cohort(13, (4, 5, 6))     # sum 15 > cap 6
+    out = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                               client_ranks=rvec, backend="ref")
+    for k, (fo, fi) in SPECS.items():
+        assert out[k]["A"].shape == (R_MAX, fi)
+        assert int(out[k]["rank"]) == R_MAX
+    # the re-projection is the best rank-R_MAX factorization of the
+    # convex product-space combination
+    want = mean_effective_delta(adapters, w)
+    for k in SPECS:
+        u, sv, vt = np.linalg.svd(want[k], full_matrices=False)
+        trunc = (u[:, :R_MAX] * sv[:R_MAX]) @ vt[:R_MAX]
+        np.testing.assert_allclose(effective_deltas(out)[k], trunc,
+                                   rtol=1e-3, atol=1e-4)
+
+
+# ------------------------------------------- flora stacking is noise-free --
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(1, 5))
+def test_flora_stacking_is_product_exact(seed, n):
+    """The central FLoRA claim: below the cap, stacking introduces *no*
+    aggregation noise -- the served update is exactly the convex
+    combination of client updates, for arbitrary heterogeneous ranks."""
+    s = configured("flora")
+    adapters, rvec, w = make_cohort(seed, random_ranks(seed + 7, n))
+    out = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                               client_ranks=rvec, backend="ref")
+    assert_delta_close(effective_deltas(out),
+                       mean_effective_delta(adapters, w),
+                       rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------- every backend: parity or loud refusal --
+@pytest.mark.parametrize("method", ALL_METHODS)
+@pytest.mark.parametrize("backend", ["pallas", "distributed"])
+def test_backend_parity_or_documented_refusal(method, backend):
+    s = configured(method)
+    adapters, rvec, w = make_cohort(21, (2, 4, R_MAX))
+    ref = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                               client_ranks=rvec, backend="ref")
+    supported = (s.supports_pallas if backend == "pallas"
+                 else s.supports_distributed)
+    if not supported:
+        with pytest.raises(NotImplementedError, match=method):
+            s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                 client_ranks=rvec, backend=backend)
+        return
+    got = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                               client_ranks=rvec, backend=backend)
+    for k in SPECS:
+        for f in ("A", "B", "rank"):
+            np.testing.assert_allclose(
+                np.asarray(ref[k][f], np.float32),
+                np.asarray(got[k][f], np.float32),
+                rtol=1e-4, atol=1e-5, err_msg=f"{method}/{backend} {k} {f}")
+
+
+# ----------------------------------------------- flora_stack kernel oracle --
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(1, 5),
+       d=st.sampled_from([3, 17, 130]))
+def test_flora_stack_kernel_matches_ref(seed, n, d):
+    from repro.kernels import flora_stack, flora_stack_ref
+    rng = np.random.default_rng(seed)
+    r_st = R_MAX
+    segs = tuple(int(v) for v in rng.integers(1, r_st + 1, n))
+    out_rows = sum(segs) + int(rng.integers(0, 4))
+    x = jnp.asarray(rng.normal(size=(n, r_st, d)), jnp.float32)
+    scales = jnp.asarray(rng.uniform(0.1, 2.0, n), jnp.float32)
+    got = flora_stack(x, scales, segs=segs, out_rows=out_rows,
+                      interpret=True)
+    want = flora_stack_ref(x, scales, segs, out_rows)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
