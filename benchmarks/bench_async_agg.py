@@ -1,0 +1,139 @@
+"""Sync-round vs async-fold aggregation under a straggler distribution.
+
+Two questions, both on CPU-runnable synthetic cohorts:
+
+1. **Server cost**: what does one synchronous cohort ``aggregate`` cost
+   vs folding the same updates one at a time (``AsyncAggregator``,
+   streaming fold or replay)?  Async folding trades one big reduction
+   for N small ones -- the per-update cost is what an FLaaS server
+   actually pays per arrival.
+
+2. **Time-to-aggregate**: with log-normal client report latencies (a
+   heavy straggler tail), when does each client's update actually land
+   in the served global?  A sync round incorporates *everything* at
+   ``max(latency) + t_agg``; the async server incorporates each update
+   at ``latency_i + t_fold``.  We report the mean/median incorporation
+   time and the time until 50% / 90% of the cohort's update mass is
+   serving -- the straggler tail hits sync rounds directly, async barely.
+
+Run: ``PYTHONPATH=src python benchmarks/bench_async_agg.py``
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.strategy import ClientUpdate, ServerState, get_strategy
+from repro.fl import AsyncAggregator
+from repro.fl.selection import ClientLatencyModel
+from repro.lora import init_adapters, set_ranks
+
+SPECS = {f"blk{i}": (1024, 1024) for i in range(4)}
+R_MAX = 64
+METHODS = ("rbla", "zeropad", "fedavg", "rbla_ranked", "flora")
+N_CLIENTS = 10
+SEED = 0
+
+
+def make_cohort(n=N_CLIENTS, seed=SEED):
+    rng = np.random.default_rng(seed)
+    ranks = rng.integers(4, R_MAX + 1, n)
+    updates = []
+    for i in range(n):
+        ad = init_adapters(jax.random.PRNGKey(seed + i), SPECS, R_MAX,
+                           int(ranks[i]))
+        ad = jax.tree.map(
+            lambda x: x + jnp.asarray(0.01 * rng.normal(size=x.shape),
+                                      x.dtype)
+            if x.dtype == jnp.float32 else x, ad)
+        updates.append(ClientUpdate(adapters=set_ranks(ad, int(ranks[i])),
+                                    base_trainable={},
+                                    n_examples=float(rng.integers(50, 500)),
+                                    rank=int(ranks[i])))
+    return updates, ranks
+
+
+def make_state(strategy):
+    r_storage = strategy.server_storage_rank(R_MAX) or R_MAX
+    adapters = init_adapters(jax.random.PRNGKey(999), SPECS, r_storage,
+                             R_MAX)
+    return ServerState(adapters=adapters, base_trainable={}, r_max=R_MAX)
+
+
+def timed(fn, iters=3):
+    """fn must return a pytree of arrays (we block on every leaf)."""
+    jax.block_until_ready(jax.tree.leaves(fn()))   # warm up / compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(jax.tree.leaves(out))
+    return (time.time() - t0) / iters
+
+
+def bench_method(method, updates):
+    s = get_strategy(method)
+    if s.rank_contract == "stacked":
+        # wide cap: pure stacking, no SVD re-projection mid-bench
+        s = s.with_options(stack_r_cap=int(sum(u.rank for u in updates))
+                           + R_MAX)
+    weights = [u.n_examples for u in updates]
+    state0 = make_state(s)     # built once: only aggregation is timed
+
+    # return the adapters tree (arrays), not the ServerState dataclass --
+    # block_until_ready must see array leaves to measure compute
+    t_sync = timed(lambda: s.aggregate(state0, updates, weights=weights,
+                                       backend="ref").adapters)
+
+    def fold_all():
+        agg = AsyncAggregator(s, state0, staleness="constant",
+                              backend="ref")
+        for u in updates:
+            agg.submit(u)
+        return agg.state.adapters
+    t_async_total = timed(fold_all)
+    return t_sync, t_async_total / len(updates)
+
+
+def time_to_quality(latencies, weights, t_sync, t_fold):
+    """When is X% of the cohort's update mass serving, per mode?"""
+    order = np.argsort(latencies)
+    lat, w = latencies[order], weights[order] / weights.sum()
+    # async: update i serves at latency_i + fold time (folds are short;
+    # queueing is negligible at these rates)
+    async_t = lat + t_fold
+    mass = np.cumsum(w)
+    t50_async = float(async_t[np.searchsorted(mass, 0.5)])
+    t90_async = float(async_t[np.searchsorted(mass, 0.9)])
+    # sync: nothing serves until the slowest client + one aggregate
+    t_round = float(lat.max() + t_sync)
+    return t50_async, t90_async, t_round
+
+
+def main():
+    updates, ranks = make_cohort()
+    weights = np.asarray([u.n_examples for u in updates])
+    lat_model = ClientLatencyModel(N_CLIENTS, median_s=30.0, sigma=0.25,
+                                   straggler_sigma=1.0, seed=SEED)
+    latencies = np.asarray([lat_model.sample(i) for i in range(N_CLIENTS)])
+
+    print(f"# cohort: n={N_CLIENTS} clients, ranks {ranks.min()}.."
+          f"{ranks.max()}, {len(SPECS)} pairs of {list(SPECS.values())[0]}"
+          f" at r_max={R_MAX}")
+    print(f"# latency: log-normal, median 30s, straggler_sigma 1.0 -> "
+          f"min {latencies.min():.0f}s max {latencies.max():.0f}s")
+    print("# method, sync_round_ms, async_fold_ms_per_update, "
+          "t50_async_s, t90_async_s, t_sync_round_s, speedup_t90")
+    for method in METHODS:
+        t_sync, t_fold = bench_method(method, updates)
+        t50a, t90a, t_round = time_to_quality(latencies, weights,
+                                              t_sync, t_fold)
+        print(f"async_agg/{method},{t_sync * 1e3:.1f},{t_fold * 1e3:.1f},"
+              f"{t50a:.1f},{t90a:.1f},{t_round:.1f},"
+              f"{t_round / max(t90a, 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in README.md and docs/*.md.
+
+Scans every markdown link target; external URLs and pure anchors are
+skipped, everything else must resolve to a file or directory — relative
+to the containing file, or to the repo root (both styles appear in the
+docs). Run from anywhere: ``python scripts/check_docs_links.py``.
+Exit code 0 = all links resolve; 1 = broken links (listed on stderr).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files() -> list[Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def broken_links(md: Path) -> list[str]:
+    bad = []
+    for target in LINK_RE.findall(md.read_text()):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#", 1)[0]      # strip section anchors
+        if not path:
+            continue
+        if not ((md.parent / path).exists() or (REPO / path).exists()):
+            bad.append(target)
+    return bad
+
+
+def main() -> int:
+    missing_docs = [p for p in ("README.md", "docs/async.md",
+                                "docs/strategies.md")
+                    if not (REPO / p).exists()]
+    failures = {str(md.relative_to(REPO)): broken_links(md)
+                for md in doc_files()}
+    failures = {k: v for k, v in failures.items() if v}
+    if missing_docs:
+        print(f"missing required docs: {missing_docs}", file=sys.stderr)
+    for doc, links in failures.items():
+        print(f"{doc}: broken links {links}", file=sys.stderr)
+    if missing_docs or failures:
+        return 1
+    n = sum(len(LINK_RE.findall(md.read_text())) for md in doc_files())
+    print(f"docs links OK ({len(doc_files())} files, {n} links)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,10 +11,10 @@ from .aggregation import (aggregate, fedavg_leaf, rbla_leaf, zeropad_leaf,
                           AGGREGATORS)
 from .variants import (rank_proportional_weights, rbla_norm_leaf,
                        svd_project_pair)
-from .strategy import (AggregationStrategy, ClientUpdate, ServerState,
-                       BACKENDS, adapter_live_ranks, get_strategy,
-                       list_strategies, register_strategy, resolve_backend,
-                       stack_trees)
+from .strategy import (AggregationStrategy, ClientUpdate, FoldState,
+                       ServerState, BACKENDS, adapter_live_ranks,
+                       get_strategy, list_strategies, register_strategy,
+                       resolve_backend, stack_trees)
 from .distributed import (make_distributed_aggregator, rbla_allreduce,
                           rbla_tree_allreduce)
 
@@ -24,7 +24,8 @@ __all__ = [
     "zeropad_leaf", "AGGREGATORS", "make_distributed_aggregator",
     "rbla_allreduce", "rbla_tree_allreduce", "rank_proportional_weights",
     "rbla_norm_leaf", "svd_project_pair", "AggregationStrategy",
-    "ClientUpdate", "ServerState", "BACKENDS", "adapter_live_ranks",
+    "ClientUpdate", "FoldState", "ServerState", "BACKENDS",
+    "adapter_live_ranks",
     "get_strategy",
     "list_strategies", "register_strategy", "resolve_backend",
     "stack_trees",

@@ -10,9 +10,12 @@ makes each method a single :class:`AggregationStrategy` that owns
   semantics (:meth:`AggregationStrategy.aggregate_tree`),
 * (c) an optional **distributed** shard_map path
   (:meth:`AggregationStrategy.make_distributed_aggregator` /
-  :meth:`AggregationStrategy.allreduce_leaf`), and
+  :meth:`AggregationStrategy.allreduce_leaf`),
 * (d) an optional **Pallas kernel** path
-  (:meth:`AggregationStrategy.aggregate_tree_pallas`),
+  (:meth:`AggregationStrategy.aggregate_tree_pallas`), and
+* (e) a **per-update fold** for the async aggregation service
+  (:meth:`AggregationStrategy.fold` + the ``supports_incremental``
+  declaration; see ``repro.fl.async_agg`` and ``docs/async.md``),
 
 behind a ``backend="auto" | "ref" | "pallas" | "distributed"`` selector that
 picks the Pallas kernel on TPU/GPU and the jnp reference path on CPU.
@@ -80,6 +83,32 @@ class ClientUpdate:
     base_trainable: PyTree
     n_examples: float = 1.0
     rank: int | None = None
+
+
+@dataclasses.dataclass
+class FoldState:
+    """Accumulator threaded through a sequence of per-update folds.
+
+    The async aggregation service (:class:`repro.fl.AsyncAggregator`)
+    folds one :class:`ClientUpdate` at a time instead of waiting for a
+    cohort; this carries what the running aggregate needs between folds:
+
+    ``mass``
+        accumulated raw weight mass (the denominator of the running
+        weighted mean for base trainables and ``norm_by="weight"``
+        strategies).
+    ``row_mass``
+        per-pair per-rank-row owner mass (RBLA's Eq. 7 denominator in
+        streaming form, where the *transformed* adapter masses
+        accumulate): a pytree mirroring the adapters with each pair
+        replaced by a ``rank_leaf_shape + (r_storage,)`` f32 array.
+        ``None`` for strategies that don't need it.
+    ``n_folds``
+        how many updates have been folded since the anchor.
+    """
+    mass: float = 0.0
+    row_mass: PyTree | None = None
+    n_folds: int = 0
 
 
 # ---------------------------------------------------------------- registry --
@@ -261,6 +290,14 @@ class AggregationStrategy:
     #: updates, None = intentionally neither (the property suite reads
     #: this; see tests/test_strategy_properties.py)
     fedavg_equivalence: str | None = "factors"
+    #: incremental-capable declaration: True means folding a cohort's
+    #: updates one at a time through :meth:`fold` (zero staleness,
+    #: running-mass mixing) reproduces the one-shot ``aggregate`` of the
+    #: same cohort on the ref backend, up to float reassociation.  False
+    #: means :meth:`fold` is an approximation (FedAsync-style convex
+    #: mixing) and exact async semantics need the replay path
+    #: (:class:`repro.fl.AsyncAggregator` handles this automatically).
+    supports_incremental: bool = False
 
     def with_options(self, **options) -> "AggregationStrategy":
         """Return a configured copy of this strategy.
@@ -478,7 +515,10 @@ class AggregationStrategy:
 
         Stacks the uploads, builds delta_{i,r} masks, applies the
         strategy's weight transform, dispatches to the selected backend,
-        and resets the live rank to ``r_max`` (clients re-slice, Alg. 2).
+        and runs :meth:`finalize_tree`: fixed-rank strategies reset the
+        live rank to ``r_max`` there (clients re-slice, Alg. 2), while
+        rank-changing ones (``rank_contract="stacked"``) keep the live
+        rank their aggregation wrote -- read it from the output pairs.
         """
         from repro.lora import adapter_masks
 
@@ -579,6 +619,91 @@ class AggregationStrategy:
                                          else state.client_ranks),
                            current_rank=current_rank)
 
+    # ---------------------------------------------------- per-update fold --
+    def init_fold(self, state: ServerState) -> FoldState:
+        """Fresh accumulator for a sequence of :meth:`fold` calls anchored
+        at ``state`` (strategies that stream per-row mass override this to
+        allocate it)."""
+        return FoldState()
+
+    def fold(self, state: ServerState, update: ClientUpdate,
+             weight: float | None = None, *,
+             fold_state: FoldState | None = None, backend: str = "auto",
+             interpret: bool | None = None
+             ) -> tuple[ServerState, FoldState]:
+        """Fold ONE arriving update into ``state`` (the async hot path).
+
+        ``weight`` is the update's *effective mass* -- its ``n_examples``
+        already scaled by any staleness discount (defaults to plain
+        ``n_examples``).  The strategy's own weight semantics (masks,
+        ``transform_weights``, prev retention) apply underneath.
+
+        Default implementation: the update is aggregated as a
+        single-element cohort through :meth:`aggregate` (so every
+        strategy-specific transform runs), then convex-mixed into the
+        current state with mixing rate ``alpha = w / (mass + w)`` -- a
+        running weighted mean in the style of FedAsync (Xie et al., 2019),
+        whose constant-rate variant the caller gets by managing ``mass``.
+        On ``backend="pallas"`` the mix is the ``axpy_fold`` kernel (one
+        O(size) pass per update, independent of cohort size).
+
+        Exact-incremental strategies (``supports_incremental=True``)
+        guarantee that folding a cohort one update at a time reproduces
+        the one-shot cohort :meth:`aggregate`; for the rest this default
+        is an approximation and :class:`repro.fl.AsyncAggregator` replays
+        the buffered cohort instead.  Returns ``(new_state, fold_state)``.
+        """
+        fs = fold_state if fold_state is not None else self.init_fold(state)
+        w = float(update.n_examples if weight is None else weight)
+        if w <= 0:
+            raise ValueError(f"fold needs a positive weight, got {w}")
+        agg = self.aggregate(state, [update], weights=[w], backend=backend)
+        alpha = w / (fs.mass + w)
+        kind = resolve_backend(backend, self)
+        new_adapters = state.adapters
+        if state.adapters is not None and agg.adapters is not None:
+            new_adapters = _mix_trees(state.adapters, agg.adapters, alpha,
+                                      kind=kind, interpret=interpret)
+        new_base = _mix_trees(state.base_trainable, agg.base_trainable,
+                              alpha, kind=kind, interpret=interpret)
+        new_fs = FoldState(mass=fs.mass + w, row_mass=fs.row_mass,
+                           n_folds=fs.n_folds + 1)
+        current_rank = (adapter_live_ranks(new_adapters)
+                        if new_adapters is not None else state.current_rank)
+        return ServerState(
+            adapters=new_adapters, base_trainable=new_base,
+            round=state.round + 1, r_max=state.r_max,
+            client_ranks=agg.client_ranks,
+            current_rank=current_rank), new_fs
+
+
+def _mix_leaf(old: Array, new: Array, alpha, *, kind: str = "ref",
+              interpret: bool | None = None) -> Array:
+    """One fold step on one leaf: ``old + alpha * (new - old)``.
+
+    ``alpha`` may be a scalar (uniform server mixing) or broadcastable
+    per-row (RBLA's per-rank-row running mean).  ``kind="pallas"``
+    dispatches 2-D leaves with vector alpha (or any >=1-D leaf with
+    scalar alpha) to the ``axpy_fold`` kernel.
+    """
+    if not jnp.issubdtype(jnp.asarray(old).dtype, jnp.floating):
+        return new                      # int bookkeeping (rank leaves)
+    a = jnp.asarray(alpha, jnp.float32)
+    if kind == "pallas" and old.ndim >= 1 and a.ndim <= 1:
+        from repro.kernels.rbla_agg.ops import axpy_fold
+        return axpy_fold(old, new, a, interpret=interpret)
+    of = old.astype(jnp.float32)
+    a = a.reshape(a.shape + (1,) * (old.ndim - a.ndim))
+    return (of + a * (new.astype(jnp.float32) - of)).astype(old.dtype)
+
+
+def _mix_trees(old: PyTree, new: PyTree, alpha, *, kind: str = "ref",
+               interpret: bool | None = None) -> PyTree:
+    """Leafwise :func:`_mix_leaf` over parallel pytrees (scalar alpha)."""
+    return jax.tree.map(
+        lambda o, n: _mix_leaf(o, n, alpha, kind=kind, interpret=interpret),
+        old, new)
+
 
 # --------------------------------------------------------- the strategies --
 @register_strategy
@@ -590,6 +715,8 @@ class FedAvgStrategy(AggregationStrategy):
     use_mask = False
     supports_pallas = True
     pallas_method = "zeropad"          # full-rank masks => weighted mean
+    # the default fold IS the exact streaming form of a weighted mean
+    supports_incremental = True
 
     def leaf(self, stacked, mask, weights, prev=None):
         return fedavg_leaf(stacked, weights)
@@ -603,6 +730,10 @@ class ZeropadStrategy(AggregationStrategy):
     norm_by = "weight"
     supports_pallas = True
     pallas_method = "zeropad"
+    # zeropad = weighted mean of masked uploads, so the default fold's
+    # running mix streams it exactly (a single-element aggregate is the
+    # masked upload; rows nobody owns stay exactly zero through mixing)
+    supports_incremental = True
 
     def leaf(self, stacked, mask, weights, prev=None):
         return zeropad_leaf(stacked, mask, weights)
@@ -617,15 +748,118 @@ class RBLAStrategy(AggregationStrategy):
     retains_prev = True
     supports_pallas = True
     pallas_method = "rbla"
+    supports_incremental = True
 
     def leaf(self, stacked, mask, weights, prev=None):
         return rbla_leaf(stacked, mask, weights, prev)
+
+    # ---------------------------------------------------- streaming fold --
+    def _fold_adapter_weight(self, update: ClientUpdate, w: float,
+                             rank: int) -> float:
+        """Hook: the mass this update's adapter rows enter with (the
+        streaming analogue of :meth:`transform_weights`; ``rbla_ranked``
+        scales it by the client's rank)."""
+        return w
+
+    def init_fold(self, state: ServerState) -> FoldState:
+        if state.adapters is None:
+            return FoldState()
+
+        def zeros(pair):
+            r_storage = pair["A"].shape[-2]
+            shape = jnp.asarray(pair["rank"]).shape + (r_storage,)
+            return jnp.zeros(shape, jnp.float32)
+        return FoldState(row_mass=_map_pairs(zeros, state.adapters))
+
+    def fold(self, state, update, weight=None, *, fold_state=None,
+             backend="auto", interpret=None):
+        """Exact streaming RBLA: Eq. 7's per-rank-row weighted mean in
+        running form.  Row ``rho`` of the accumulated owner mass ``d``
+        gives the arriving update mixing rate ``w / (d_rho + w)`` on the
+        rows it owns and 0 elsewhere, so rows no client has touched keep
+        the anchor value (retention for free) and folding a cohort one
+        update at a time reproduces the one-shot cohort aggregate.
+        """
+        fs = fold_state if fold_state is not None else self.init_fold(state)
+        w = float(update.n_examples if weight is None else weight)
+        if w <= 0:
+            raise ValueError(f"fold needs a positive weight, got {w}")
+        kind = resolve_backend(backend, self)
+        if kind == "distributed":       # one update: nothing to distribute
+            kind = "ref"
+
+        new_adapters, new_row_mass = state.adapters, fs.row_mass
+        rank_seen = update.rank
+        wa = w
+        if state.adapters is not None and update.adapters is not None:
+            upd = update.adapters
+            if rank_seen is None:
+                ranks = []
+                _map_pairs(lambda p: ranks.append(int(np.max(np.asarray(
+                    jax.device_get(p["rank"]))))) or p, upd)
+                rank_seen = max(ranks) if ranks else None
+            wa = self._fold_adapter_weight(update, w, int(rank_seen or 1))
+            masses: list[Array] = []
+
+            def fold_pair(pair, upd_pair, dmass):
+                r_storage = pair["A"].shape[-2]
+                rank = jnp.asarray(upd_pair["rank"], jnp.int32)
+                owned = (lax.iota(jnp.int32, r_storage)
+                         < rank[..., None]).astype(jnp.float32)
+                alpha = jnp.where(owned > 0, wa / (dmass + wa), 0.0)
+                masses.append(dmass + wa * owned)
+                if (kind == "pallas" and pair["A"].ndim == 2
+                        and alpha.ndim == 1):
+                    from repro.kernels.rbla_agg.ops import axpy_fold
+                    A = axpy_fold(pair["A"], upd_pair["A"], alpha,
+                                  interpret=interpret)
+                    B = jnp.swapaxes(
+                        axpy_fold(jnp.swapaxes(pair["B"], 0, 1),
+                                  jnp.swapaxes(upd_pair["B"], 0, 1),
+                                  alpha, interpret=interpret), 0, 1)
+                else:
+                    A = _mix_leaf(pair["A"], upd_pair["A"],
+                                  alpha[..., :, None])
+                    B = _mix_leaf(pair["B"], upd_pair["B"],
+                                  alpha[..., None, :])
+                return {"A": A, "B": B, "rank": pair["rank"]}
+
+            new_adapters = _map_pairs(fold_pair, state.adapters, upd,
+                                      fs.row_mass, strict=True)
+            mass_it = iter(masses)      # same traversal order as above
+            new_row_mass = _map_pairs(lambda p: next(mass_it),
+                                      state.adapters)
+
+        new_base = state.base_trainable
+        if jax.tree.leaves(update.base_trainable):
+            new_base = _mix_trees(state.base_trainable,
+                                  update.base_trainable,
+                                  w / (fs.mass + w), kind=kind,
+                                  interpret=interpret)
+
+        new_fs = FoldState(mass=fs.mass + w, row_mass=new_row_mass,
+                           n_folds=fs.n_folds + 1)
+        current_rank = (adapter_live_ranks(new_adapters)
+                        if new_adapters is not None else state.current_rank)
+        return ServerState(
+            adapters=new_adapters, base_trainable=new_base,
+            round=state.round + 1, r_max=state.r_max,
+            client_ranks=(jnp.asarray([rank_seen], jnp.int32)
+                          if rank_seen is not None else state.client_ranks),
+            current_rank=current_rank), new_fs
 
 
 @register_strategy
 class RBLARankedStrategy(RBLAStrategy):
     """RBLA with rank-proportional client weights (HetLoRA-flavoured)."""
     name = "rbla_ranked"
+
+    def _fold_adapter_weight(self, update, w, rank):
+        # streaming analogue of rank_proportional_weights: a masked
+        # weighted mean depends only on weight *ratios*, so the global
+        # (1/max_rank)^alpha scale and the renormalization constant both
+        # cancel and w * rank is exact (alpha=1, the aggregate default)
+        return w * float(max(rank, 1))
 
     def transform_weights(self, weights, client_ranks=None):
         if client_ranks is None:
@@ -900,6 +1134,30 @@ class FloraStrategy(AggregationStrategy):
     def finalize_tree(self, out: PyTree, r_max: int | None) -> PyTree:
         return out                       # live ranks already written
 
+    # ---------------------------------------------------- per-update fold --
+    def fold(self, state, update, weight=None, *, fold_state=None,
+             backend="auto", interpret=None):
+        """Streaming stack: the current global enters as the prev
+        contributor with mass equal to everything folded so far, and the
+        arriving client is stacked after it -- a stale contributor is
+        *down-weighted* (small ``w`` shrinks its B-column scale), never
+        dropped.  Approximate vs the one-shot cohort aggregate only in
+        the original prev's mass bookkeeping (one-shot uses
+        ``prev_weight x mean cohort mass``, which streaming cannot know
+        up front); :class:`repro.fl.AsyncAggregator` replays the round
+        buffer when exact parity is required.
+        """
+        fs = fold_state if fold_state is not None else self.init_fold(state)
+        w = float(update.n_examples if weight is None else weight)
+        if w <= 0:
+            raise ValueError(f"fold needs a positive weight, got {w}")
+        prev_mass = fs.mass if fs.n_folds else self.prev_weight * w
+        strat = self.with_options(prev_weight=prev_mass / w)
+        new_state = strat.aggregate(state, [update], weights=[w],
+                                    backend=backend)
+        return new_state, FoldState(mass=prev_mass + w,
+                                    n_folds=fs.n_folds + 1)
+
     # ------------------------------------------------- (b) tree traversal --
     def aggregate_tree(self, stacked_tree, mask_tree, weights,
                        prev_tree=None, *, r_max=None, client_ranks=None):
@@ -1050,7 +1308,8 @@ class FloraStrategy(AggregationStrategy):
 
 
 __all__ = [
-    "AggregationStrategy", "ServerState", "ClientUpdate", "BACKENDS",
+    "AggregationStrategy", "ServerState", "ClientUpdate", "FoldState",
+    "BACKENDS",
     "register_strategy", "get_strategy", "list_strategies",
     "resolve_backend", "stack_trees", "adapter_live_ranks",
     "FedAvgStrategy", "ZeropadStrategy", "RBLAStrategy",

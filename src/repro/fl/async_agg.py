@@ -1,0 +1,234 @@
+"""Async staleness-aware aggregation service (the FLaaS serving loop).
+
+In FLaaS, clients on phones, desktops, and accelerators report at wildly
+different cadences; a synchronous cohort round moves at the pace of its
+slowest participant.  This module makes aggregation a **long-lived
+service** instead of a pure per-round function: an
+:class:`AsyncAggregator` owns a live :class:`~repro.core.ServerState` and
+folds individual :class:`~repro.core.ClientUpdate` objects into it as they
+arrive, discounting each update by how *stale* it is -- how many server
+versions were published between the global the client trained on and the
+moment its update lands.
+
+Staleness weighting follows FedAsync (Xie et al., 2019): the update's
+mass ``n_examples`` is scaled by a schedule ``s(tau)`` in ``(0, 1]``:
+
+* ``constant``:    ``s(tau) = 1`` (staleness ignored),
+* ``polynomial``:  ``s(tau) = (1 + tau) ** -a``,
+* ``hinge``:       ``s(tau) = 1`` if ``tau <= b`` else
+  ``1 / (a * (tau - b) + 1)``.
+
+The scaled mass then flows through **each strategy's own weight
+semantics** -- RBLA's per-rank-row masked mean, zero-padding's dilution,
+flora's stacked-contributor masses (a stale stacked contributor is
+*down-weighted*, never dropped) -- via the per-update
+:meth:`~repro.core.AggregationStrategy.fold` hook.
+
+Three service modes:
+
+* **fully async** (``buffer_size=1``): every arrival folds immediately.
+  Strategies declaring ``supports_incremental=True`` stream exactly (one
+  O(state) pass per update); the rest are *replayed* -- the service keeps
+  the updates folded since the last anchor and recomputes the joint
+  aggregate, so sequential folding reproduces the one-shot cohort result
+  bit-for-bit at zero staleness for every registered strategy.
+* **buffered semi-async** (``buffer_size=K`` and/or ``deadline``):
+  arrivals buffer in a :class:`~repro.fl.comm.UpdateBuffer` and flush as
+  one mini-cohort when K updates are waiting or the oldest has waited
+  past the deadline (FedBuff-style).
+* **sync** degenerates to ``buffer_size = cohort size``: one flush per
+  round is exactly the classic ``strategy.aggregate``.
+
+See ``docs/async.md`` for formulas, mode trade-offs, and a runnable
+example.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.strategy import (ClientUpdate, FoldState, ServerState,
+                                 get_strategy)
+from repro.fl.comm import UpdateBuffer
+
+#: schedule name -> factory(a, b) -> s(tau); all monotone non-increasing
+#: in tau with s(0) == 1 (fresh updates are never discounted)
+STALENESS_SCHEDULES = {
+    "constant": lambda a, b: lambda tau: 1.0,
+    "polynomial": lambda a, b: lambda tau: float((1.0 + tau) ** -a),
+    "hinge": lambda a, b: lambda tau: (
+        1.0 if tau <= b else 1.0 / (a * (tau - b) + 1.0)),
+}
+
+
+def make_staleness_fn(schedule: "str | Callable[[float], float]"
+                      = "polynomial", *, a: float = 0.5,
+                      b: float = 4.0) -> Callable[[float], float]:
+    """Resolve a staleness schedule by name (or pass a callable through).
+
+    ``a`` is the decay strength (polynomial exponent / hinge slope), ``b``
+    the hinge's grace period in server versions.
+    """
+    if callable(schedule):
+        return schedule
+    try:
+        factory = STALENESS_SCHEDULES[schedule]
+    except KeyError:
+        raise ValueError(
+            f"unknown staleness schedule {schedule!r}; options: "
+            f"{sorted(STALENESS_SCHEDULES)} or a callable") from None
+    if a <= 0:
+        raise ValueError(f"staleness decay a must be > 0, got {a}")
+    return factory(a, b)
+
+
+class AsyncAggregator:
+    """A long-lived aggregation service over one strategy and one state.
+
+    Parameters
+    ----------
+    strategy
+        Registered strategy name or instance (configured copies welcome).
+    state
+        Initial :class:`ServerState`; the service owns it from here on
+        (read the live one from :attr:`state`).
+    staleness, staleness_a, staleness_b
+        Schedule for the staleness discount (see :func:`make_staleness_fn`).
+    buffer_size, deadline
+        Semi-async knobs: flush when ``buffer_size`` updates are waiting,
+        or when the oldest buffered update has waited ``deadline`` clock
+        units (checked on :meth:`submit` / :meth:`maybe_flush` -- the
+        event loop supplies the clock).  ``buffer_size=1`` is fully async.
+    backend
+        Execution backend for the underlying strategy paths
+        (``auto | ref | pallas | distributed``).
+    replay_window
+        Fully-async mode only: non-incremental strategies replay the
+        updates folded since the last anchor; after this many the service
+        re-anchors at the current state (bounding memory and making the
+        accumulated state the new retention baseline).
+    """
+
+    def __init__(self, strategy, state: ServerState, *,
+                 staleness="constant", staleness_a: float = 0.5,
+                 staleness_b: float = 4.0, buffer_size: int = 1,
+                 deadline: float | None = None, backend: str = "auto",
+                 replay_window: int = 64):
+        if buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
+        if replay_window < 1:
+            raise ValueError(
+                f"replay_window must be >= 1, got {replay_window}")
+        self.strategy = get_strategy(strategy)
+        self.state = state
+        self.backend = backend
+        self.staleness_fn = make_staleness_fn(
+            staleness, a=staleness_a, b=staleness_b)
+        self.buffer = UpdateBuffer(size=buffer_size, deadline=deadline)
+        self.replay_window = int(replay_window)
+        self._anchor = state
+        self._replay: list[tuple[ClientUpdate, float]] = []
+        self._fold_state: FoldState = self.strategy.init_fold(state)
+        # service counters (the benchmark / simulator read these)
+        self.n_received = 0
+        self.n_folded = 0
+        self.n_flushes = 0
+        self.staleness_sum = 0.0
+
+    # ------------------------------------------------------------- intake --
+    @property
+    def version(self) -> int:
+        """Server model version = rounds folded into the live state."""
+        return int(self.state.round)
+
+    def staleness_weight(self, staleness: float) -> float:
+        s = self.staleness_fn(max(float(staleness), 0.0))
+        if not 0.0 < s <= 1.0:
+            raise ValueError(
+                f"staleness schedule returned {s} for tau={staleness}; "
+                "schedules must map into (0, 1]")
+        return s
+
+    def submit(self, update: ClientUpdate, model_version: int | None = None,
+               now: float = 0.0) -> bool:
+        """Receive one client update; fold or buffer it.
+
+        ``model_version`` is the server version the client pulled before
+        training (``None`` = fresh); staleness is ``version -
+        model_version``.  ``now`` is the service clock (any monotone unit)
+        used for deadline flushes.  Returns True when the state advanced.
+        """
+        tau = (0.0 if model_version is None
+               else max(0.0, float(self.version - model_version)))
+        weight = self.staleness_weight(tau) * float(update.n_examples)
+        self.n_received += 1
+        self.staleness_sum += tau
+        self.buffer.add(update, weight=weight, staleness=tau, now=now)
+        if self.buffer.due(now):
+            self.flush(now=now)
+            return True
+        return False
+
+    def maybe_flush(self, now: float) -> bool:
+        """Deadline check for the event loop: flush if the oldest buffered
+        update has waited past the deadline."""
+        if len(self.buffer) and self.buffer.due(now):
+            self.flush(now=now)
+            return True
+        return False
+
+    def next_deadline(self) -> float | None:
+        """When the buffered remainder becomes due (see
+        :meth:`UpdateBuffer.next_deadline`); drive :meth:`maybe_flush`
+        at this time if no upload arrives first."""
+        return self.buffer.next_deadline()
+
+    # -------------------------------------------------------------- drain --
+    def flush(self, now: float = 0.0) -> ServerState:
+        """Aggregate everything buffered into the live state."""
+        batch = self.buffer.pop()
+        if not batch:
+            return self.state
+        self.n_flushes += 1
+        if self.buffer.size == 1 and len(batch) == 1:
+            self._fold_one(batch[0].update, batch[0].weight)
+        else:
+            # semi-async mini-cohort: one joint aggregate, staleness
+            # already folded into the weights
+            self.state = self.strategy.aggregate(
+                self.state, [b.update for b in batch],
+                weights=[b.weight for b in batch], backend=self.backend)
+            self.n_folded += len(batch)
+            # a flush is a macro-round boundary: re-anchor the per-update
+            # machinery at the new state
+            self._anchor = self.state
+            self._replay.clear()
+            self._fold_state = self.strategy.init_fold(self.state)
+        return self.state
+
+    def _fold_one(self, update: ClientUpdate, weight: float) -> None:
+        if self.strategy.supports_incremental:
+            self.state, self._fold_state = self.strategy.fold(
+                self.state, update, weight, fold_state=self._fold_state,
+                backend=self.backend)
+        else:
+            # replay: recompute the joint aggregate of every update since
+            # the anchor -- exact for any strategy (flora's stacked ranks,
+            # svd's truncation, rbla_norm's rescale) at O(window) cost
+            if len(self._replay) >= self.replay_window:
+                self._anchor = self.state
+                self._replay.clear()
+            self._replay.append((update, weight))
+            out = self.strategy.aggregate(
+                self._anchor, [u for u, _ in self._replay],
+                weights=[w for _, w in self._replay], backend=self.backend)
+            self.state = dataclasses.replace(out,
+                                             round=self.state.round + 1)
+        self.n_folded += 1
+
+    # ---------------------------------------------------------- reporting --
+    def mean_staleness(self) -> float:
+        return self.staleness_sum / max(self.n_received, 1)
+
+
+__all__ = ["AsyncAggregator", "STALENESS_SCHEDULES", "make_staleness_fn"]

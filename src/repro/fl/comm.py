@@ -1,17 +1,23 @@
-"""Communication-cost accounting for FL rounds (paper motivation: LoRA
-cuts per-round bytes; RBLA keeps that benefit while fixing aggregation).
+"""Communication layer: per-round cost accounting and the async server's
+upload buffer.
 
-Counts the bytes a client uploads per round (and the server broadcast),
-per aggregation method:
+Cost accounting (paper motivation: LoRA cuts per-round bytes; RBLA keeps
+that benefit while fixing aggregation) counts the bytes a client uploads
+per round (and the server broadcast), per aggregation method:
 
 * lora methods (rbla / zeropad / variants): the padded adapter tree --
   but a client of rank r only needs to ship its live rows, so the honest
   per-client cost is the rank-sliced adapter (+ the non-LoRA trainables);
   we report both padded and sliced numbers.
 * fft: the full parameter tree.
+
+:class:`UpdateBuffer` is the buffered semi-async server's intake queue:
+uploads accumulate and flush as one mini-cohort on size K or deadline
+(see ``repro.fl.async_agg`` / ``docs/async.md``).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Mapping
 
 import jax
@@ -20,6 +26,69 @@ import numpy as np
 from repro.lora import is_pair, tree_map_pairs
 
 PyTree = Any
+
+
+# ---------------------------------------------------- semi-async buffering --
+@dataclasses.dataclass
+class BufferedUpdate:
+    """One upload waiting in the semi-async buffer."""
+    update: Any                 # repro.core.ClientUpdate
+    weight: float               # effective mass (staleness already applied)
+    staleness: float = 0.0      # server versions behind at arrival
+    arrived: float = 0.0        # service clock at arrival
+
+
+class UpdateBuffer:
+    """Flush-on-K-or-deadline intake queue for the async server.
+
+    ``size=1`` means fully-async (every add is immediately due);
+    ``deadline`` (same clock units the caller passes as ``now``) bounds
+    how long the oldest buffered upload may wait before a flush is due
+    even if the buffer is not full -- stragglers cannot stall the round,
+    and quick clients cannot starve the stragglers out of it.
+    """
+
+    def __init__(self, size: int = 1, deadline: float | None = None):
+        if size < 1:
+            raise ValueError(f"buffer size must be >= 1, got {size}")
+        if deadline is not None and deadline <= 0:
+            raise ValueError(f"deadline must be > 0, got {deadline}")
+        self.size = int(size)
+        self.deadline = deadline
+        self._items: list[BufferedUpdate] = []
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def add(self, update, weight: float, staleness: float = 0.0,
+            now: float = 0.0) -> None:
+        self._items.append(BufferedUpdate(update=update,
+                                          weight=float(weight),
+                                          staleness=float(staleness),
+                                          arrived=float(now)))
+
+    def due(self, now: float = 0.0) -> bool:
+        """Is a flush due -- K updates waiting, or the oldest past the
+        deadline?"""
+        if not self._items:
+            return False
+        if len(self._items) >= self.size:
+            return True
+        return (self.deadline is not None
+                and now - self._items[0].arrived >= self.deadline)
+
+    def next_deadline(self) -> float | None:
+        """Clock time at which the oldest buffered update makes a flush
+        due (None when empty or no deadline is configured) -- event loops
+        schedule their deadline check here."""
+        if self.deadline is None or not self._items:
+            return None
+        return self._items[0].arrived + self.deadline
+
+    def pop(self) -> list[BufferedUpdate]:
+        """Drain the buffer in arrival order."""
+        items, self._items = self._items, []
+        return items
 
 
 def _leaf_bytes(x) -> int:

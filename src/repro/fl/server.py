@@ -34,9 +34,12 @@ def aggregate_adapters(client_adapters: Sequence[PyTree], weights: Array,
     """Aggregate per-client adapter trees into the global adapter.
 
     ``method``: any registered strategy name ('rbla' | 'zeropad' |
-    'fedavg' | 'rbla_ranked' | 'rbla_norm' | 'svd' | ...).  The global
-    adapter's live rank is reset to r_max (the server keeps the full
-    stack; clients re-slice per Alg. 2).  ``prev_global``: under partial
+    'fedavg' | 'rbla_ranked' | 'rbla_norm' | 'svd' | 'flora' | ...).
+    Fixed-rank strategies reset the global adapter's live rank to r_max
+    (the server keeps the full stack; clients re-slice per Alg. 2);
+    rank-changing ones (``rank_contract="stacked"``, e.g. flora) write a
+    cohort-dependent live rank instead -- read it from the output pairs.
+    ``prev_global``: under partial
     participation, rank-rows owned by no participant retain the server's
     current value instead of being zeroed (strategies with
     ``retains_prev``).

@@ -4,22 +4,43 @@ One simulation = (dataset, model, aggregation method, participation) ->
 per-round global-model test accuracy.  Seeded (42, like the paper) and
 deterministic.  The same simulator backs the unit tests, the paper-repro
 benchmarks (Table 1, Figs. 5-10) and the examples.
+
+Two drivers share one rig:
+
+* :func:`run_simulation` -- synchronous cohort rounds (paper Alg. 1): the
+  server waits for every selected client, aggregates once per round.
+* :func:`run_async_simulation` -- event-driven FLaaS mode: each client
+  reports on its own clock (log-normal latencies with a straggler tail,
+  :class:`~repro.fl.selection.ClientLatencyModel`) and the server folds
+  updates as they arrive through an
+  :class:`~repro.fl.async_agg.AsyncAggregator`, discounting stale ones.
+  The staleness clock is the server *version* (folds published), not
+  wall time.  See ``docs/async.md``.
+
+The aggregate's live rank follows the strategy's declared
+``rank_contract``: fixed-rank methods serve at ``r_max`` every round,
+while rank-changing ones (flora) grow and shrink it round to round --
+clients always re-slice to their own rank at ``r_max`` storage, so one
+compiled ``local_fit`` serves every round either way.
 """
 from __future__ import annotations
 
+import heapq
 import time
 from dataclasses import dataclass, field
-from typing import Any, Sequence
+from types import SimpleNamespace
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.strategy import ClientUpdate, ServerState, get_strategy
-from repro.data import ClientData, make_dataset, staircase_partition
+from repro.data import make_dataset, staircase_partition
+from repro.fl.async_agg import AsyncAggregator
 from repro.fl.client import (make_local_fit, merge_base_params,
                              split_base_params)
-from repro.fl.selection import select_clients
+from repro.fl.selection import ClientLatencyModel, select_clients
 from repro.lora import init_adapters, set_ranks
 from repro.models.paper_nets import PAPER_MODELS
 from repro.optim import adam, sgd
@@ -56,10 +77,38 @@ class FLConfig:
 
 
 @dataclass
+class AsyncFLConfig(FLConfig):
+    """Event-driven FLaaS simulation (see ``docs/async.md``).
+
+    ``buffer_size=1`` is fully async (every arrival folds immediately);
+    ``buffer_size=K > 1`` and/or ``buffer_deadline_s`` is buffered
+    semi-async (flush a mini-cohort on K or deadline).  Latencies are the
+    two-level log-normal of :class:`~repro.fl.selection.ClientLatencyModel`;
+    staleness is measured in server versions.
+    """
+    staleness: str = "polynomial"      # constant | polynomial | hinge
+    staleness_a: float = 0.5           # decay strength (exponent / slope)
+    staleness_b: float = 4.0           # hinge grace period (versions)
+    buffer_size: int = 1               # semi-async: flush at K updates
+    buffer_deadline_s: float | None = None   # ... or on deadline (sim s)
+    latency_median_s: float = 1.0      # fleet-median report latency
+    latency_sigma: float = 0.25        # per-upload jitter (log-normal)
+    straggler_sigma: float = 1.0       # device heterogeneity (log-normal)
+    total_updates: int | None = None   # stop after this many uploads
+                                       # (None -> rounds * n_clients)
+    eval_every: int | None = None      # eval cadence in uploads
+                                       # (None -> n_clients)
+
+
+@dataclass
 class FLHistory:
     test_acc: list[float] = field(default_factory=list)
     train_loss: list[float] = field(default_factory=list)
     round_time_s: list[float] = field(default_factory=list)
+    # async-mode extras (empty for sync runs): simulated service clock at
+    # each eval point, and the mean staleness of the interval's uploads
+    sim_time_s: list[float] = field(default_factory=list)
+    mean_staleness: list[float] = field(default_factory=list)
 
     def rounds_to_target(self, target: float) -> int | None:
         for i, a in enumerate(self.test_acc):
@@ -68,7 +117,9 @@ class FLHistory:
         return None
 
 
-def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
+def _build_sim(cfg: FLConfig) -> SimpleNamespace:
+    """Everything both drivers share: strategy, data, model, server
+    state, the compiled local fit, and the eval closure."""
     # "fft" resolves to the fedavg strategy (full-parameter FedAvg); every
     # other method name resolves through the registry, so a
     # register_strategy'd class is immediately runnable from FLConfig.
@@ -121,14 +172,27 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
 
     test_x, test_y = jnp.asarray(test.x), jnp.asarray(test.y)
 
-    def evaluate():
+    def evaluate(base_trainable, adapters):
         correct = 0
         for i in range(0, len(test_x), cfg.eval_batch):
-            logits = eval_logits(frozen_base, base_trainable,
-                                 global_adapters, test_x[i:i + cfg.eval_batch])
+            logits = eval_logits(frozen_base, base_trainable, adapters,
+                                 test_x[i:i + cfg.eval_batch])
             correct += int(jnp.sum(jnp.argmax(logits, -1) ==
                                    test_y[i:i + cfg.eval_batch]))
         return correct / len(test_x)
+
+    return SimpleNamespace(strategy=strategy, model=model, mode=mode,
+                           clients=clients, frozen_base=frozen_base,
+                           state=state, local_fit=local_fit,
+                           client_x=client_x, client_y=client_y,
+                           evaluate=evaluate)
+
+
+def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
+    rig = _build_sim(cfg)
+    strategy, clients = rig.strategy, rig.clients
+    state = rig.state
+    base_trainable, global_adapters = state.base_trainable, state.adapters
 
     hist = FLHistory()
     rng = np.random.default_rng(cfg.seed)
@@ -147,11 +211,11 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
             # -- a client must never alias the server's adapter storage
             local_ad = set_ranks(global_adapters, c.rank,
                                  r_storage=cfg.r_max)
-            res = local_fit(frozen_base, base_trainable, local_ad,
-                            client_x[ci], client_y[ci],
-                            jnp.asarray(c.n, jnp.int32), fit_key)
+            res = rig.local_fit(rig.frozen_base, base_trainable, local_ad,
+                                rig.client_x[ci], rig.client_y[ci],
+                                jnp.asarray(c.n, jnp.int32), fit_key)
             updates.append(ClientUpdate(
-                adapters=res.adapters if mode == "lora" else None,
+                adapters=res.adapters if rig.mode == "lora" else None,
                 base_trainable=res.base_trainable,
                 n_examples=float(max(c.n, 1)), rank=c.rank))
             losses.append(float(res.loss))
@@ -159,13 +223,108 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
         state = strategy.aggregate(state, updates,
                                    backend=cfg.agg_backend)
         base_trainable = state.base_trainable
-        if mode == "lora":
+        if rig.mode == "lora":
             global_adapters = state.adapters
-        acc = evaluate()
+        acc = rig.evaluate(base_trainable, global_adapters)
         hist.test_acc.append(acc)
         hist.train_loss.append(float(np.mean(losses)))
         hist.round_time_s.append(time.time() - t0)
         if verbose:
             print(f"[{cfg.method:>11s}] round {rnd + 1:3d} "
                   f"acc={acc:.4f} loss={hist.train_loss[-1]:.4f}")
+    return hist
+
+
+def run_async_simulation(cfg: AsyncFLConfig,
+                         verbose: bool = False) -> FLHistory:
+    """Event-driven FLaaS loop: clients report on their own clocks.
+
+    Each client perpetually (pull global -> local fit -> upload); the
+    upload lands ``latency`` simulated seconds after dispatch and is
+    folded (or buffered) by an :class:`AsyncAggregator` with its
+    staleness discount.  Stops after ``total_updates`` uploads; evaluates
+    every ``eval_every`` uploads, logging the simulated clock and the
+    interval's mean staleness alongside accuracy.
+    """
+    rig = _build_sim(cfg)
+    clients = rig.clients
+    agg = AsyncAggregator(
+        rig.strategy, rig.state, staleness=cfg.staleness,
+        staleness_a=cfg.staleness_a, staleness_b=cfg.staleness_b,
+        buffer_size=cfg.buffer_size, deadline=cfg.buffer_deadline_s,
+        backend=cfg.agg_backend)
+    latency = ClientLatencyModel(
+        cfg.n_clients, median_s=cfg.latency_median_s,
+        sigma=cfg.latency_sigma, straggler_sigma=cfg.straggler_sigma,
+        seed=cfg.seed)
+
+    total = cfg.total_updates or cfg.rounds * cfg.n_clients
+    eval_every = cfg.eval_every or cfg.n_clients
+    rng = np.random.default_rng(cfg.seed)
+    heap: list = []     # (done_time, tiebreak, client, version, snapshot)
+    seq = 0
+
+    def dispatch(ci: int, now: float) -> None:
+        nonlocal seq
+        # the client trains on the global it pulls NOW; by the time its
+        # update lands the server may have moved on -- that gap is the
+        # staleness the aggregator discounts
+        local_ad = None
+        if rig.mode == "lora":
+            local_ad = set_ranks(agg.state.adapters, clients[ci].rank,
+                                 r_storage=cfg.r_max)
+        snapshot = (local_ad, agg.state.base_trainable)
+        heapq.heappush(heap, (now + latency.sample(ci), seq, ci,
+                              agg.version, snapshot))
+        seq += 1
+
+    for ci in range(cfg.n_clients):
+        dispatch(ci, 0.0)
+
+    hist = FLHistory()
+    losses: list[float] = []
+    stale_mark = 0.0
+    eval_mark = 0                  # uploads already covered by an eval
+    received = 0
+    t_wall = time.time()
+    while received < total:
+        now, _, ci, version, (local_ad, base_snap) = heapq.heappop(heap)
+        # a buffered deadline may fall before this arrival: honor it at
+        # its own simulated time, not piggy-backed on the next upload
+        due_t = agg.next_deadline()
+        if due_t is not None and due_t < now:
+            agg.maybe_flush(now=due_t)
+        c = clients[ci]
+        fit_key = jax.random.PRNGKey(int(rng.integers(0, 2 ** 31)))
+        res = rig.local_fit(rig.frozen_base, base_snap, local_ad,
+                            rig.client_x[ci], rig.client_y[ci],
+                            jnp.asarray(c.n, jnp.int32), fit_key)
+        agg.submit(ClientUpdate(
+            adapters=res.adapters if rig.mode == "lora" else None,
+            base_trainable=res.base_trainable,
+            n_examples=float(max(c.n, 1)), rank=c.rank),
+            model_version=version, now=now)
+        losses.append(float(res.loss))
+        received += 1
+        dispatch(ci, now)
+
+        if received % eval_every == 0 or received == total:
+            if received == total:
+                agg.flush(now=now)      # drain any semi-async remainder
+            acc = rig.evaluate(agg.state.base_trainable,
+                               agg.state.adapters)
+            interval = received - eval_mark   # the final one may be short
+            hist.test_acc.append(acc)
+            hist.train_loss.append(float(np.mean(losses[eval_mark:])))
+            hist.round_time_s.append(time.time() - t_wall)
+            hist.sim_time_s.append(now)
+            hist.mean_staleness.append(
+                (agg.staleness_sum - stale_mark) / max(interval, 1))
+            stale_mark = agg.staleness_sum
+            eval_mark = received
+            t_wall = time.time()
+            if verbose:
+                print(f"[{cfg.method:>11s}/async] upload {received:4d} "
+                      f"t={now:8.1f}s acc={acc:.4f} "
+                      f"stale={hist.mean_staleness[-1]:.2f}")
     return hist

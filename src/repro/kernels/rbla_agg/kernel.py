@@ -101,6 +101,51 @@ def flora_stack_pallas(x, scales, *, segs: tuple[int, ...], out_rows: int,
     )(scales.astype(jnp.float32), x)
 
 
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    """Staleness-weighted fold: o = y + alpha_row * (x - y).
+
+    ``alpha`` rides along as a per-row (br,) f32 vector so the same kernel
+    serves both the scalar server-mixing fold (uniform alpha) and RBLA's
+    per-rank-row running masked mean (row-dependent alpha: rows the client
+    does not own get alpha 0 and pass ``y`` through untouched).
+    """
+    a = alpha_ref[...][:, None]                              # (br, 1)
+    y = y_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = (y + a * (x - y)).astype(o_ref.dtype)
+
+
+def axpy_fold_pallas(y, x, alpha, *, br=DEFAULT_BR, bd=DEFAULT_BD,
+                     interpret=True):
+    """y, x: (R, D); alpha: (R,) f32 -> (R, D) = y + alpha[:, None]*(x-y).
+
+    The async server's hot loop: one arriving client update folded into
+    the live global in a single pass.  Bandwidth-bound like ``rbla_agg``
+    but reads 2*R*D and writes R*D with no client axis at all -- the
+    per-update cost of fully-async aggregation is independent of the
+    cohort size.
+    """
+    r, d = y.shape
+    if x.shape != y.shape:
+        raise ValueError(f"axpy_fold: x {x.shape} vs y {y.shape}")
+    if alpha.shape != (r,):
+        raise ValueError(f"axpy_fold: alpha {alpha.shape} != ({r},)")
+    br, bd = min(br, r), min(bd, d)
+    grid = (pl.cdiv(r, br), pl.cdiv(d, bd))
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br,), lambda i, j: (i,)),
+            pl.BlockSpec((br, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bd), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, d), y.dtype),
+        interpret=interpret,
+    )(alpha.astype(jnp.float32), x, y)
+
+
 def rbla_agg_pallas(x, ranks, weights, *, norm_by: str = "mask",
                     br=DEFAULT_BR, bd=DEFAULT_BD, interpret=True):
     """x: (N, R, D); ranks: (N,) int32; weights: (N,) f32 -> (R, D).

@@ -7,8 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from ..runtime import auto_interpret
-from .kernel import flora_stack_pallas, rbla_agg_pallas
-from .ref import flora_stack_ref, rbla_agg_ref
+from .kernel import axpy_fold_pallas, flora_stack_pallas, rbla_agg_pallas
+from .ref import axpy_fold_ref, flora_stack_ref, rbla_agg_ref
 
 
 def _pad_to(v: int, mult: int) -> int:
@@ -78,4 +78,34 @@ def flora_stack(x, scales, *, segs: tuple[int, ...], out_rows: int,
     return out[:out_rows, :d].reshape((out_rows,) + lead)
 
 
-__all__ = ["rbla_agg", "rbla_agg_ref", "flora_stack", "flora_stack_ref"]
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def axpy_fold(y, x, alpha, *, interpret=None):
+    """Fold one update into the live state: ``y + alpha * (x - y)``.
+
+    y, x: (R, *dims) with the rank-row axis leading; ``alpha`` is a scalar
+    (uniform server mixing, FedAsync-style) or an (R,) vector (per-row
+    mixing -- RBLA's running masked mean folds only the rows the arriving
+    client owns).  Trailing dims are flattened into D; sublane/lane
+    padding is stripped from the result.  This is the async aggregation
+    service's per-update hot path: cost is O(R*D) regardless of how many
+    clients ever reported.
+    """
+    interpret = auto_interpret(interpret)
+    r = y.shape[0]
+    lead = y.shape[1:]
+    d = 1
+    for v in lead:
+        d *= v
+    a = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (r,))
+    y2 = y.reshape(r, d)
+    x2 = x.reshape(r, d)
+    rp, dp = _pad_to(max(r, 1), 8), _pad_to(max(d, 1), 128)
+    y2 = jnp.pad(y2, ((0, rp - r), (0, dp - d)))
+    x2 = jnp.pad(x2, ((0, rp - r), (0, dp - d)))
+    a = jnp.pad(a, (0, rp - r))
+    out = axpy_fold_pallas(y2, x2, a, interpret=interpret)
+    return out[:r, :d].reshape((r,) + lead)
+
+
+__all__ = ["rbla_agg", "rbla_agg_ref", "flora_stack", "flora_stack_ref",
+           "axpy_fold", "axpy_fold_ref"]

@@ -9,6 +9,16 @@ from repro.core import rbla_leaf, stacked_rank_masks, zeropad_leaf
 _REF_FNS = {"rbla": rbla_leaf, "zeropad": zeropad_leaf}
 
 
+def axpy_fold_ref(y, x, alpha):
+    """Oracle for the async fold kernel: y, x (R, *dims); alpha scalar or
+    (R,) -> y + alpha*(x-y) with alpha broadcast over trailing dims."""
+    a = jnp.asarray(alpha, jnp.float32)
+    if a.ndim == 1:
+        a = a.reshape((y.shape[0],) + (1,) * (y.ndim - 1))
+    yf = y.astype(jnp.float32)
+    return (yf + a * (x.astype(jnp.float32) - yf)).astype(y.dtype)
+
+
 def flora_stack_ref(x, scales, segs, out_rows: int):
     """Oracle for the FLoRA stacking kernel: x (N, R, D), scales (N,),
     static segs -> (out_rows, D) ragged concat of scaled leading rows."""

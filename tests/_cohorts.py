@@ -1,0 +1,47 @@
+"""Shared heterogeneous-rank cohort fixtures for the strategy suites.
+
+One place builds the noisy hetero-rank adapter cohorts and compares
+pytrees, so tolerance semantics and cohort construction cannot silently
+diverge between `tests/test_strategy.py` and `tests/test_async_agg.py`.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.lora import init_adapters, set_ranks
+
+SPECS = {"fc1": (12, 16), "fc2": (10, 12)}
+R_MAX = 8
+
+
+def hetero_cohort(n=5, seed=0, r_lo=1, r_hi=R_MAX, with_bases=False):
+    """n clients with random ranks in [r_lo, r_hi], noisy A and B.
+
+    Returns ``(adapters, ranks, weights)`` -- plus a list of small
+    non-LoRA base-trainable trees when ``with_bases`` (the async suite
+    folds those too).
+    """
+    rng = np.random.default_rng(seed)
+    ranks = rng.integers(r_lo, r_hi + 1, n)
+    adapters, keys = [], jax.random.split(jax.random.PRNGKey(seed), n)
+    for i in range(n):
+        ad = init_adapters(keys[i], SPECS, R_MAX, int(ranks[i]))
+        ad = jax.tree.map(     # B inits to zero: randomize both factors
+            lambda x: x + jnp.asarray(rng.normal(size=x.shape), x.dtype)
+            if x.dtype == jnp.float32 else x, ad)
+        adapters.append(set_ranks(ad, int(ranks[i])))   # re-mask padding
+    weights = jnp.asarray(rng.uniform(0.5, 2.0, n), jnp.float32)
+    if with_bases:
+        bases = [{"b": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+                 for _ in range(n)]
+        return adapters, jnp.asarray(ranks, jnp.int32), weights, bases
+    return adapters, jnp.asarray(ranks, jnp.int32), weights
+
+
+def assert_trees_close(a, b, rtol=1e-4, atol=1e-5, msg=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), msg
+    for x, y in zip(la, lb):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32),
+                                   rtol=rtol, atol=atol, err_msg=msg)

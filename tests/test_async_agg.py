@@ -1,0 +1,307 @@
+"""Async aggregation service tests.
+
+The load-bearing guarantee is the **parity gate**: for every registered
+strategy, folding a cohort's updates one at a time through the
+:class:`AsyncAggregator` with zero staleness reproduces the one-shot
+``aggregate(state, updates, weights)`` -- exactly (up to float
+reassociation) on the ref backend, and within the strategy parity
+tolerance or with the documented refusal on pallas/distributed.  Plus:
+staleness schedules are monotone discounts, the semi-async buffer
+flushes on K and on deadline, staleness actually down-weights (flora
+keeps the stale contributor), and the event-driven simulator is finite
+and deterministic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.strategy import ClientUpdate, ServerState, get_strategy
+from repro.fl import (AsyncAggregator, AsyncFLConfig, STALENESS_SCHEDULES,
+                      UpdateBuffer, make_staleness_fn, run_async_simulation,
+                      run_simulation)
+from repro.fl.simulator import FLConfig
+from repro.lora import init_adapters
+
+from _cohorts import R_MAX, SPECS, assert_trees_close, hetero_cohort
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_state(strategy, seed=99):
+    r_storage = strategy.server_storage_rank(R_MAX) or R_MAX
+    prev = init_adapters(jax.random.PRNGKey(seed), SPECS, r_storage, R_MAX)
+    base = {"b": jnp.zeros((4,), jnp.float32)}
+    return ServerState(adapters=prev, base_trainable=base, r_max=R_MAX)
+
+
+def configured(method):
+    s = get_strategy(method)
+    if s.rank_contract == "stacked":
+        s = s.with_options(stack_r_cap=256)   # wide: no mid-test reproject
+    return s
+
+
+# ------------------------------------------------------------ parity gate --
+ALL_METHODS = ["rbla", "zeropad", "fedavg", "rbla_ranked", "rbla_norm",
+               "svd", "flora"]
+
+
+def fold_cohort(strategy, backend):
+    """Fold the cohort one update at a time; return (async, sync) states."""
+    adapters, ranks, w, bases = hetero_cohort(5, seed=3, with_bases=True)
+    updates = [ClientUpdate(adapters=adapters[i], base_trainable=bases[i],
+                            n_examples=float(w[i]), rank=int(ranks[i]))
+               for i in range(len(ranks))]
+    sync = strategy.aggregate(make_state(strategy), updates, weights=w,
+                              backend=backend)
+    agg = AsyncAggregator(strategy, make_state(strategy),
+                          staleness="constant", backend=backend)
+    for u in updates:
+        agg.submit(u)                      # model_version=None: staleness 0
+    return agg.state, sync
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+def test_zero_staleness_fold_matches_sync_aggregate_ref(method):
+    """THE parity gate (ref backend, tight tolerance): one-at-a-time
+    folding with zero staleness == the one-shot cohort aggregate."""
+    got, want = fold_cohort(configured(method), "ref")
+    assert_trees_close(got.adapters, want.adapters, 2e-5, 2e-6, method)
+    assert_trees_close(got.base_trainable, want.base_trainable,
+                       2e-5, 2e-6, method)
+
+
+@pytest.mark.parametrize("method", ALL_METHODS)
+@pytest.mark.parametrize("backend", ["pallas", "distributed"])
+def test_fold_backend_parity_or_documented_refusal(method, backend):
+    """Parity-or-refusal, matching the registry convention: backends the
+    strategy supports agree within parity tolerance; unsupported ones
+    raise the documented NotImplementedError."""
+    s = configured(method)
+    supported = (s.supports_pallas if backend == "pallas"
+                 else s.supports_distributed)
+    if not supported:
+        with pytest.raises(NotImplementedError, match=method):
+            fold_cohort(s, backend)
+        return
+    got, want = fold_cohort(s, backend)
+    assert_trees_close(got.adapters, want.adapters, 1e-4, 1e-5,
+                       f"{method}/{backend}")
+
+
+def test_fold_hook_direct_matches_async_service():
+    """The strategy-level fold hook is what the service drives: calling
+    it directly reproduces the AsyncAggregator's fully-async state."""
+    s = get_strategy("rbla")
+    adapters, ranks, w, bases = hetero_cohort(4, seed=7, with_bases=True)
+    updates = [ClientUpdate(adapters=adapters[i], base_trainable=bases[i],
+                            n_examples=float(w[i]), rank=int(ranks[i]))
+               for i in range(len(ranks))]
+    agg = AsyncAggregator(s, make_state(s), staleness="constant")
+    st, fs = make_state(s), s.init_fold(make_state(s))
+    for u in updates:
+        agg.submit(u)
+        st, fs = s.fold(st, u, fold_state=fs, backend="ref")
+    assert_trees_close(agg.state.adapters, st.adapters, 1e-6, 1e-7)
+
+
+# ------------------------------------------------------ staleness schedules --
+@pytest.mark.parametrize("name", sorted(STALENESS_SCHEDULES))
+def test_staleness_schedules_are_monotone_discounts(name):
+    """Every schedule: s(0) == 1, s in (0, 1], monotone non-increasing."""
+    fn = make_staleness_fn(name, a=0.5, b=4.0)
+    taus = np.arange(0, 50)
+    vals = np.asarray([fn(float(t)) for t in taus])
+    assert vals[0] == pytest.approx(1.0)
+    assert np.all(vals > 0) and np.all(vals <= 1.0)
+    assert np.all(np.diff(vals) <= 1e-12)
+
+
+def test_polynomial_and_hinge_shapes():
+    poly = make_staleness_fn("polynomial", a=0.5)
+    assert poly(3.0) == pytest.approx((1 + 3.0) ** -0.5)
+    hinge = make_staleness_fn("hinge", a=2.0, b=4.0)
+    assert hinge(4.0) == pytest.approx(1.0)      # inside the grace period
+    assert hinge(6.0) == pytest.approx(1.0 / (2.0 * 2.0 + 1.0))
+
+
+def test_unknown_schedule_and_bad_params_raise():
+    with pytest.raises(ValueError, match="unknown staleness"):
+        make_staleness_fn("exponential_not_a_schedule")
+    with pytest.raises(ValueError, match="decay"):
+        make_staleness_fn("polynomial", a=0.0)
+    fn = make_staleness_fn(lambda tau: 0.5)      # callables pass through
+    assert fn(0) == 0.5
+
+
+def test_stale_update_moves_state_less_than_fresh():
+    """The same update folded at staleness 10 must move the server less
+    than at staleness 0 (the whole point of the discount)."""
+    s = get_strategy("rbla")
+    adapters, ranks, w, bases = hetero_cohort(2, seed=11, r_lo=R_MAX,
+                                              with_bases=True)
+    mk = lambda: make_state(s)
+    upd = ClientUpdate(adapters=adapters[1], base_trainable=bases[1],
+                       n_examples=4.0, rank=int(ranks[1]))
+    warm = ClientUpdate(adapters=adapters[0], base_trainable=bases[0],
+                        n_examples=4.0, rank=int(ranks[0]))
+
+    def drift(tau):
+        agg = AsyncAggregator(s, mk(), staleness="polynomial",
+                              staleness_a=0.5)
+        agg.submit(warm)                          # version -> 1
+        before = agg.state.adapters["fc1"]["A"]
+        # a client that pulled at version 1 - tau reports now
+        agg.submit(upd, model_version=agg.version - int(tau))
+        return float(jnp.linalg.norm(agg.state.adapters["fc1"]["A"]
+                                     - before))
+    assert drift(10) < drift(0)
+
+
+def test_flora_stale_contributor_downweighted_not_dropped():
+    """flora's async contract: a stale client still lands in the stack
+    (rank grows by its rank) but its B-column mass shrinks."""
+    s = configured("flora")
+    adapters, ranks, w, bases = hetero_cohort(2, seed=13, r_lo=2, r_hi=4,
+                                              with_bases=True)
+    upd = ClientUpdate(adapters=adapters[1], base_trainable=bases[1],
+                       n_examples=1.0, rank=int(ranks[1]))
+    warm = ClientUpdate(adapters=adapters[0], base_trainable=bases[0],
+                        n_examples=1.0, rank=int(ranks[0]))
+
+    def stacked_mass(tau):
+        agg = AsyncAggregator(s, make_state(s), staleness="polynomial",
+                              staleness_a=1.0)
+        agg.submit(warm)
+        r_before = int(agg.state.adapters["fc1"]["rank"])
+        agg.submit(upd, model_version=agg.version - int(tau))
+        r_after = int(agg.state.adapters["fc1"]["rank"])
+        assert r_after == r_before + int(ranks[1])     # stacked, not dropped
+        # the stale contributor's rows are the trailing ones (arrival order)
+        B = agg.state.adapters["fc1"]["B"]
+        return float(jnp.linalg.norm(B[:, r_before:r_after]))
+    assert stacked_mass(20) < stacked_mass(0)
+
+
+def test_flora_direct_fold_streaming_form():
+    """FloraStrategy.fold called directly (the documented streaming
+    approximation): every fold stacks the arrival (rank grows by its
+    rank), and with uniform masses the prev bookkeeping coincides with
+    the one-shot cohort aggregate, so streaming == joint exactly."""
+    s = configured("flora")
+    adapters, ranks, w, bases = hetero_cohort(3, seed=23, with_bases=True)
+    updates = [ClientUpdate(adapters=adapters[i], base_trainable=bases[i],
+                            n_examples=2.0, rank=int(ranks[i]))
+               for i in range(len(ranks))]
+    st, fs = make_state(s), s.init_fold(make_state(s))
+    live = R_MAX                               # prev global's live rank
+    for i, u in enumerate(updates):
+        st, fs = s.fold(st, u, fold_state=fs, backend="ref")
+        live += int(ranks[i])
+        assert int(st.adapters["fc1"]["rank"]) == live
+        assert fs.n_folds == i + 1
+    want = s.aggregate(make_state(s), updates, weights=[2.0] * 3,
+                       backend="ref")
+    assert_trees_close(st.adapters, want.adapters, 1e-5, 1e-6,
+                       "flora streaming vs joint (uniform masses)")
+
+
+# ------------------------------------------------------- semi-async buffer --
+def test_update_buffer_flushes_on_size_and_deadline():
+    buf = UpdateBuffer(size=3, deadline=5.0)
+    buf.add("u1", weight=1.0, now=0.0)
+    assert not buf.due(now=1.0)
+    buf.add("u2", weight=1.0, now=1.0)
+    assert not buf.due(now=2.0)
+    assert buf.due(now=5.0)                  # oldest waited >= deadline
+    buf.add("u3", weight=1.0, now=2.0)
+    assert buf.due(now=2.0)                  # size reached
+    items = buf.pop()
+    assert [b.update for b in items] == ["u1", "u2", "u3"]
+    assert len(buf) == 0 and not buf.due(now=100.0)
+    with pytest.raises(ValueError, match="size"):
+        UpdateBuffer(size=0)
+    with pytest.raises(ValueError, match="deadline"):
+        UpdateBuffer(size=2, deadline=-1.0)
+
+
+def test_semiasync_single_flush_is_one_sync_round():
+    """buffer_size == cohort size, zero staleness: the one flush must be
+    exactly the classic synchronous aggregate."""
+    s = get_strategy("rbla")
+    adapters, ranks, w, bases = hetero_cohort(4, seed=17, with_bases=True)
+    updates = [ClientUpdate(adapters=adapters[i], base_trainable=bases[i],
+                            n_examples=float(w[i]), rank=int(ranks[i]))
+               for i in range(len(ranks))]
+    want = s.aggregate(make_state(s), updates, weights=w, backend="ref")
+    agg = AsyncAggregator(s, make_state(s), buffer_size=len(updates),
+                          backend="ref")
+    for u in updates[:-1]:
+        assert not agg.submit(u)             # buffering, no state change
+        assert agg.version == 0
+    assert agg.submit(updates[-1])           # K reached -> flush
+    assert agg.version == 1 and agg.n_flushes == 1
+    assert_trees_close(agg.state.adapters, want.adapters, 1e-6, 1e-7)
+
+
+def test_replay_window_reanchors():
+    """Non-incremental strategies re-anchor after replay_window folds and
+    keep folding from the accumulated state (bounded memory)."""
+    s = configured("flora")
+    adapters, ranks, w, bases = hetero_cohort(5, seed=19, r_lo=1, r_hi=2, with_bases=True)
+    agg = AsyncAggregator(s, make_state(s), replay_window=2)
+    for i in range(len(ranks)):
+        agg.submit(ClientUpdate(adapters=adapters[i],
+                                base_trainable=bases[i],
+                                n_examples=float(w[i]),
+                                rank=int(ranks[i])))
+    assert agg.n_folded == 5 and agg.version == 5
+    assert len(agg._replay) <= 2
+    assert np.isfinite(np.asarray(agg.state.adapters["fc1"]["A"])).all()
+
+
+# --------------------------------------------------- event-driven simulator --
+ASYNC_SMOKE_KW = dict(dataset="mnist", model="mlp", rounds=2, n_clients=3,
+                      n_per_class=12, n_test_per_class=6, batch_size=16,
+                      r_max=4, lr=0.01, seed=42)
+
+
+@pytest.mark.parametrize("method", ["rbla", "zeropad", "flora", "fft"])
+def test_async_simulation_smoke_and_determinism(method):
+    extra = {"stack_r_cap": 16} if method == "flora" else {}
+    cfg = AsyncFLConfig(method=method, staleness="polynomial", **extra,
+                        **ASYNC_SMOKE_KW)
+    h = run_async_simulation(cfg)
+    assert len(h.test_acc) == 2              # rounds * n_clients uploads,
+    assert len(h.sim_time_s) == 2            # eval every n_clients
+    assert np.isfinite(h.train_loss).all()
+    assert all(0.0 <= a <= 1.0 for a in h.test_acc)
+    assert all(t >= 0 for t in h.mean_staleness)
+    assert h.sim_time_s == sorted(h.sim_time_s)
+    h2 = run_async_simulation(cfg)
+    assert h.test_acc == h2.test_acc, "same seed must be bit-identical"
+
+
+def test_async_vs_sync_same_config_both_learn():
+    """Async folding with a straggler distribution must not wreck the
+     3-round tiny run the sync path survives (same budget of uploads)."""
+    sync = run_simulation(FLConfig(method="rbla", **ASYNC_SMOKE_KW))
+    async_h = run_async_simulation(
+        AsyncFLConfig(method="rbla", straggler_sigma=1.5,
+                      **ASYNC_SMOKE_KW))
+    assert np.isfinite(async_h.train_loss).all()
+    assert async_h.test_acc[-1] >= sync.test_acc[-1] - 0.25
+
+
+def test_client_latency_model_straggler_tail_and_determinism():
+    from repro.fl import ClientLatencyModel
+    lat = ClientLatencyModel(8, median_s=1.0, sigma=0.25,
+                             straggler_sigma=1.0, seed=0)
+    lat2 = ClientLatencyModel(8, median_s=1.0, sigma=0.25,
+                              straggler_sigma=1.0, seed=0)
+    draws = [lat.sample(i) for i in range(8)]
+    assert draws == [lat2.sample(i) for i in range(8)]   # per-client streams
+    assert all(d > 0 for d in draws)
+    med = lat.client_median_s
+    assert med.max() / med.min() > 2.0       # heterogeneity is real

@@ -1,0 +1,39 @@
+"""Docs stay wired: required pages exist and intra-repo links resolve.
+
+The CI docs leg runs ``scripts/check_docs_links.py`` standalone; this
+wrapper keeps the same check in the tier-1 suite so a broken link fails
+locally too.
+"""
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _checker():
+    sys.path.insert(0, str(REPO / "scripts"))
+    try:
+        import check_docs_links
+    finally:
+        sys.path.pop(0)
+    return check_docs_links
+
+
+def test_required_docs_exist():
+    for p in ("README.md", "docs/async.md", "docs/strategies.md",
+              "ROADMAP.md", "CHANGES.md"):
+        assert (REPO / p).exists(), f"missing {p}"
+
+
+def test_no_broken_intra_repo_links():
+    mod = _checker()
+    failures = {str(md): mod.broken_links(md) for md in mod.doc_files()}
+    failures = {k: v for k, v in failures.items() if v}
+    assert not failures, f"broken doc links: {failures}"
+
+
+def test_checker_flags_a_broken_link(tmp_path):
+    mod = _checker()
+    md = tmp_path / "bad.md"
+    md.write_text("[gone](does/not/exist.md) and [ok](https://x.org)")
+    assert mod.broken_links(md) == ["does/not/exist.md"]

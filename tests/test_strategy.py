@@ -15,34 +15,9 @@ from repro.core.strategy import (AggregationStrategy, ClientUpdate,
                                  stack_trees)
 from repro.lora import init_adapters, mask_adapters, set_ranks
 
+from _cohorts import R_MAX, SPECS, assert_trees_close, hetero_cohort
+
 jax.config.update("jax_platform_name", "cpu")
-
-SPECS = {"fc1": (12, 16), "fc2": (10, 12)}
-R_MAX = 8
-
-
-def hetero_cohort(n=5, seed=0, r_lo=1, r_hi=R_MAX):
-    """n clients with random ranks in [r_lo, r_hi], noisy A and B."""
-    rng = np.random.default_rng(seed)
-    ranks = rng.integers(r_lo, r_hi + 1, n)
-    adapters, keys = [], jax.random.split(jax.random.PRNGKey(seed), n)
-    for i in range(n):
-        ad = init_adapters(keys[i], SPECS, R_MAX, int(ranks[i]))
-        ad = jax.tree.map(     # B inits to zero: randomize both factors
-            lambda x: x + jnp.asarray(rng.normal(size=x.shape), x.dtype)
-            if x.dtype == jnp.float32 else x, ad)
-        adapters.append(set_ranks(ad, int(ranks[i])))   # re-mask padding
-    weights = jnp.asarray(rng.uniform(0.5, 2.0, n), jnp.float32)
-    return adapters, jnp.asarray(ranks, jnp.int32), weights
-
-
-def assert_trees_close(a, b, rtol=1e-4, atol=1e-5):
-    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
-    assert len(la) == len(lb)
-    for x, y in zip(la, lb):
-        np.testing.assert_allclose(np.asarray(x, np.float32),
-                                   np.asarray(y, np.float32),
-                                   rtol=rtol, atol=atol)
 
 
 # ---------------------------------------------------------------- registry --
