@@ -1,99 +1,213 @@
-"""Server aggregation throughput across strategies and backends.
+"""Server aggregation throughput: compiled plans vs the per-leaf path.
 
-Every registered aggregation strategy is benchmarked on its reference
-(jnp) tree path; strategies with a kernel path are also benchmarked on
-``backend="pallas"`` (interpreter mode on CPU -- relative numbers document
-the harness; absolute TPU numbers require hardware).
+One FL round used to walk the adapter tree in Python, issuing one device
+computation (two Pallas launches) per LoRA pair -- O(pairs x clients)
+host dispatch.  The compiled :class:`~repro.core.plan.CompiledRound`
+packs the cohort into (width, dtype) buckets and lowers the whole round
+into one jitted call with one fused launch per bucket.  This bench
+measures both paths on a transformer-sized adapter tree with a mixed-rank
+cohort and reports, per strategy x backend:
 
-The paper motivates RBLA partly by zero-padding's wasted compute on
-structural zeros; this bench quantifies server-side aggregation cost per
-round as adapter stacks grow.
+* round latency (legacy vs plan) and the speedup,
+* tracked dispatches per round (legacy pallas: 2 x pairs; plan: 1 call)
+  and the reduction factor,
+* plan-cache hit rate and the plan's fused-launch count,
+* a plan-vs-legacy numerical parity check (the CI smoke gate).
+
+``--json PATH`` writes the machine-readable ``BENCH_agg.json`` so the
+perf trajectory is tracked across PRs; ``--smoke`` runs a tiny case and
+exits non-zero if the plan path and the legacy shim disagree beyond
+tolerance or the dispatch reduction falls under 5x.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import get_strategy, list_strategies, stacked_rank_masks
-from repro.kernels import flora_stack, rbla_agg
+from repro.core import get_strategy, list_strategies
+from repro.core.plan import dispatch_counter
+from repro.lora import init_adapters, set_ranks
 
-CASES = [
-    # (n_clients, r_max, fan_in, n_tensors)
-    (10, 64, 1024, 8),
-    (10, 128, 4096, 8),
-    (32, 64, 1024, 8),
-]
+BENCH_METHODS = ("rbla", "zeropad", "fedavg", "rbla_ranked", "flora")
 
-BENCH_METHODS = ("rbla", "zeropad", "fedavg", "rbla_ranked")
+#: transformer-sized adapter tree: {path: (fan_out, fan_in)}
+FULL_SPECS = {
+    "attn_q": (512, 512), "attn_k": (512, 512), "attn_v": (512, 512),
+    "attn_o": (512, 512), "mlp_up": (2048, 512), "mlp_gate": (2048, 512),
+    "mlp_down": (512, 2048), "head": (512, 512),
+}
+SMOKE_SPECS = {"fc1": (24, 16), "fc2": (16, 24), "fc3": (24, 16),
+               "fc4": (16, 24)}
 
 
-def bench(fn, *args, iters=5):
-    fn(*args)  # compile
-    t0 = time.time()
-    for _ in range(iters):
-        out = fn(*args)
+def build_cohort(specs, n, r_max, seed=0):
+    """n clients, mixed ranks in [1, r_max], both factors randomized."""
+    rng = np.random.default_rng(seed)
+    ranks = rng.integers(1, r_max + 1, n)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+    cohort = []
+    for i in range(n):
+        ad = init_adapters(keys[i], specs, r_max, int(ranks[i]))
+        ad = jax.tree.map(
+            lambda x: x + jnp.asarray(rng.normal(size=x.shape) * 0.1,
+                                      x.dtype)
+            if x.dtype == jnp.float32 else x, ad)
+        cohort.append(set_ranks(ad, int(ranks[i])))
+    w = jnp.asarray(rng.uniform(0.5, 2.0, n), jnp.float32)
+    return cohort, jnp.asarray(ranks, jnp.int32), w
+
+
+def bench(fn, iters=3):
+    out = fn()                                  # compile / first trace
     jax.block_until_ready(out)
-    return (time.time() - t0) / iters * 1e6
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6, out
 
 
-def main():
-    rng = np.random.default_rng(0)
+def count_dispatches(fn):
+    dispatch_counter.reset()
+    out = fn()
+    jax.block_until_ready(out)
+    return dispatch_counter.reset(), out
+
+
+def max_abs_diff(a, b):
+    return max((float(jnp.max(jnp.abs(
+        jnp.asarray(x, jnp.float32) - jnp.asarray(y, jnp.float32))))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))),
+        default=0.0)
+
+
+def configured(method, ranks, r_max):
+    # always a with_options copy: each strategy x backend row gets its
+    # own (empty) plan cache, so the reported hit/miss stats are per-row
+    # rather than contaminated across rows / earlier in-process use
+    s = get_strategy(method)
+    if s.rank_contract == "stacked":
+        return s.with_options(
+            stack_r_cap=int(np.asarray(ranks).sum()) + r_max)
+    return s.with_options()
+
+
+def run_case(specs, n, r_max, iters, tol):
+    cohort, ranks, w = build_cohort(specs, n, r_max)
+    results, failures = [], []
+    for method in BENCH_METHODS:
+        for backend in ("ref", "pallas"):
+            s = configured(method, ranks, r_max)
+
+            def legacy():
+                return s.aggregate_adapters(
+                    cohort, w, r_max=r_max, client_ranks=ranks,
+                    backend=backend, use_plan=False)
+
+            def plan():
+                return s.aggregate_adapters(
+                    cohort, w, r_max=r_max, client_ranks=ranks,
+                    backend=backend)
+
+            legacy_disp, legacy_out = count_dispatches(legacy)
+            plan_disp, plan_out = count_dispatches(plan)
+            diff = max_abs_diff(legacy_out, plan_out)
+            legacy_us, _ = bench(legacy, iters)
+            plan_us, _ = bench(plan, iters)
+            rounds = list(s.__dict__.get("_plan_cache", {}).values())
+            rd = next(r for r in rounds if r.spec.kind == backend)
+            stats = dict(s.__dict__.get("plan_stats",
+                                        {"hits": 0, "misses": 0}))
+            row = {
+                "strategy": method, "backend": backend,
+                "legacy_us": round(legacy_us, 1),
+                "plan_us": round(plan_us, 1),
+                "speedup": round(legacy_us / max(plan_us, 1e-9), 2),
+                "legacy_dispatches": legacy_disp or None,
+                "plan_dispatches": plan_disp,
+                "dispatch_reduction": (
+                    round(legacy_disp / max(plan_disp, 1), 1)
+                    if legacy_disp else None),
+                "plan_kind": rd.kind,
+                "kernel_launches": rd.n_kernel_launches,
+                "fallback_pairs": rd.n_fallback_pairs,
+                "plan_cache": stats,
+                "max_abs_diff": diff,
+            }
+            results.append(row)
+            mode = ("pallas" if jax.default_backend() in ("tpu", "gpu")
+                    else "pallas-interpret") if backend == "pallas" \
+                else "core-ref"
+            print(f"agg/{method}/{backend}/n{n}_r{r_max}_p{len(specs)},"
+                  f"{plan_us:.0f},plan-{mode}")
+            print(f"agg/{method}/{backend}/n{n}_r{r_max}_p{len(specs)},"
+                  f"{legacy_us:.0f},legacy-{mode}")
+            if diff > tol:
+                failures.append(
+                    f"{method}/{backend}: plan vs legacy diff {diff:.2e} "
+                    f"> tol {tol:.0e}")
+    return results, failures
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny case + hard parity/dispatch gate (CI)")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write machine-readable results (BENCH_agg.json)")
+    p.add_argument("--iters", type=int, default=3)
+    p.add_argument("--tol", type=float, default=5e-4,
+                   help="max abs plan-vs-legacy deviation tolerated")
+    args = p.parse_args(argv)
+
+    specs = SMOKE_SPECS if args.smoke else FULL_SPECS
+    n = 6 if args.smoke else 32
+    r_max = 8 if args.smoke else 32
     print(f"# registered strategies: {','.join(list_strategies())}")
-    for n, r, d, nt in CASES:
-        ranks = jnp.asarray(rng.integers(1, r + 1, n), jnp.int32)
-        masks = stacked_rank_masks(r, ranks)[:, :, None]
-        tree = {f"t{i}": jnp.asarray(
-            rng.normal(size=(n, r, d)), jnp.float32) * masks
-            for i in range(nt)}
-        mtree = {f"t{i}": masks for i in range(nt)}
-        w = jnp.ones(n)
+    results, failures = run_case(specs, n, r_max, args.iters, args.tol)
 
-        for method in BENCH_METHODS:
-            s = get_strategy(method)
-            f = jax.jit(lambda t, m, ww, s=s: s.aggregate_tree(
-                t, m, ww, client_ranks=ranks))
-            us = bench(f, tree, mtree, w)
-            print(f"agg/{method}/n{n}_r{r}_d{d}x{nt},{us:.0f},core-ref")
+    pallas_rows = [r for r in results
+                   if r["backend"] == "pallas" and r["dispatch_reduction"]]
+    ref_rows = [r for r in results if r["backend"] == "ref"]
+    summary = {
+        "min_dispatch_reduction": min(
+            (r["dispatch_reduction"] for r in pallas_rows), default=None),
+        "mean_ref_wall_clock_speedup": round(float(np.mean(
+            [r["speedup"] for r in ref_rows])), 2) if ref_rows else None,
+        "max_abs_diff": max(r["max_abs_diff"] for r in results),
+    }
+    print(f"# summary: {json.dumps(summary)}")
 
-        # flora is pair-structured and rank-changing: bench it on whole
-        # adapter pairs (ref tree path) and its copy/scale kernel, which
-        # reads sum(ranks)*d vs the reduction kernels' n*r*d
-        pairs = [{"A": jnp.asarray(rng.normal(size=(r, d)), jnp.float32),
-                  "B": jnp.asarray(rng.normal(size=(d, r)), jnp.float32),
-                  "rank": jnp.asarray(int(ranks[i]), jnp.int32)}
-                 for i in range(n)]
-        flora = get_strategy("flora").with_options(
-            stack_r_cap=int(np.asarray(ranks).sum()) + r)
-        us = bench(lambda: flora.aggregate_adapters(
-            [{"t": p} for p in pairs], w, r_max=r,
-            client_ranks=ranks, backend="ref"), iters=3)
-        print(f"agg/flora/n{n}_r{r}_d{d}x1,{us:.0f},core-ref")
+    if args.json:
+        payload = {
+            "bench": "agg_throughput",
+            "backend": jax.default_backend(),
+            "smoke": bool(args.smoke),
+            "case": {"n_clients": n, "r_max": r_max,
+                     "n_pairs": len(specs)},
+            "results": results,
+            "summary": summary,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}")
 
-        segs = tuple(int(v) for v in np.asarray(ranks))
-        xs = tree["t0"]
-        us = bench(lambda: flora_stack(
-            xs, jnp.ones(n), segs=segs, out_rows=sum(segs)), iters=3)
-        mode = "pallas" if jax.default_backend() in ("tpu", "gpu") \
-            else "pallas-interpret"
-        print(f"agg/flora_stack_kernel/n{n}_r{r}_d{d}x1,{us:.0f},{mode}")
-
-        x0 = tree["t0"]
-        for method in BENCH_METHODS:
-            s = get_strategy(method)
-            if not s.supports_pallas:
-                continue
-            wt = s.transform_weights(w, ranks)
-            # mirror the strategy's kernel call: fedavg (use_mask=False)
-            # runs the kernel with full-rank masks
-            kranks = ranks if s.use_mask else jnp.full((n,), r, jnp.int32)
-            us = bench(lambda x, ww, s=s, kr=kranks: rbla_agg(
-                x, kr, ww, method=s.pallas_method), x0, wt)
-            mode = "pallas" if jax.default_backend() in ("tpu", "gpu") \
-                else "pallas-interpret"
-            print(f"agg/{method}_kernel/n{n}_r{r}_d{d}x1,{us:.0f},{mode}")
+    if failures:
+        for msg in failures:
+            print(f"# PARITY FAILURE: {msg}")
+        raise SystemExit(1)
+    if args.smoke:
+        bad = [r for r in pallas_rows if r["dispatch_reduction"] < 5]
+        if bad:
+            print(f"# DISPATCH GATE FAILURE: {bad}")
+            raise SystemExit(1)
+        print("# smoke gate OK: plan==shim within tolerance, "
+              "dispatch reduction >= 5x")
 
 
 if __name__ == "__main__":

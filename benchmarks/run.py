@@ -3,6 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV lines (plus markdown tables where
 a bench renders one).  Heavy paper-scale settings are opt-in via each
 bench's CLI; the defaults here finish on a CPU container.
+
+``--json`` additionally writes ``BENCH_agg.json`` (per-strategy /
+per-backend round latency, dispatch counts, plan-cache hit rate from the
+aggregation-throughput bench) so the perf trajectory is tracked across
+PRs.
 """
 from __future__ import annotations
 
@@ -26,6 +31,7 @@ def _run(name, fn):
 
 def main() -> None:
     ok = True
+    write_json = "--json" in sys.argv
 
     def table1():
         from benchmarks import bench_table1
@@ -41,7 +47,8 @@ def main() -> None:
 
     def agg():
         from benchmarks import bench_agg_throughput
-        bench_agg_throughput.main()
+        bench_agg_throughput.main(
+            ["--json", "BENCH_agg.json"] if write_json else [])
 
     def kernels():
         from benchmarks import bench_kernels

@@ -15,6 +15,8 @@ from .strategy import (AggregationStrategy, ClientUpdate, FoldState,
                        ServerState, BACKENDS, adapter_live_ranks,
                        get_strategy, list_strategies, register_strategy,
                        resolve_backend, stack_trees)
+from .plan import (CohortSpec, CompiledRound, PlanUnavailable,
+                   build_cohort_spec, dispatch_counter)
 from .distributed import (make_distributed_aggregator, rbla_allreduce,
                           rbla_tree_allreduce)
 
@@ -26,6 +28,8 @@ __all__ = [
     "rbla_norm_leaf", "svd_project_pair", "AggregationStrategy",
     "ClientUpdate", "FoldState", "ServerState", "BACKENDS",
     "adapter_live_ranks",
+    "CohortSpec", "CompiledRound", "PlanUnavailable", "build_cohort_spec",
+    "dispatch_counter",
     "get_strategy",
     "list_strategies", "register_strategy", "resolve_backend",
     "stack_trees",

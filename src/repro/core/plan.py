@@ -1,0 +1,1026 @@
+"""Compiled aggregation plans: packed cohort buffers, fused round launches.
+
+Eager strategy execution walks the adapter pytree in Python and issues one
+device computation (or one Pallas launch) per LoRA pair -- O(layers x
+clients) host dispatch per FL round, the dominant server cost at scale.
+This module turns a round into a **compiled plan**:
+
+1. **Pack.**  All adapter pairs of a cohort are flattened into a small
+   number of packed ``(n_clients, rows, width)`` buffers **bucketed by
+   (row width, dtype)**.  A factors contribute their rank rows directly;
+   B factors ride transposed so the rank axis leads everywhere.  Each
+   packed row carries its owner metadata -- the delta_{i,r} rank-row mask
+   column -- which is *static* given the cohort's rank multiset, so the
+   whole (n, rows) owner-mask matrix is precomputed on the host once per
+   plan.  Layer-stacked (leading-dim) pairs pack like everything else:
+   layer ``l`` of a pair occupies its own row range with its own per-layer
+   mask column, which is how the long-standing layer-stacked Pallas
+   fallback disappears.
+2. **Lower.**  The whole round -- leaf math, ``prev_global`` retention,
+   the strategy's weight transform, finalize bookkeeping -- becomes a
+   single jitted function issuing **one fused computation per bucket**
+   (the ``packed_agg`` / ``packed_stack`` Pallas kernels on the pallas
+   backend, a fused einsum on ref, one shard_map on distributed) instead
+   of one launch per pair.  Server-state buffers can be **donated**.
+3. **Cache.**  Plans are cached on the strategy instance keyed by the
+   :class:`CohortSpec` -- tree structure, leaf shapes/dtypes, the rank
+   multiset, backend, mesh -- the way ``make_distributed_aggregator``
+   already caches per-mesh fns.  ``AggregationStrategy.plan(state, spec)``
+   is the public entry; ``aggregate_adapters`` routes through it
+   automatically and falls back to the per-leaf reference path only when
+   the cohort cannot be described host-side (traced values, bare leaves).
+
+The per-leaf ``aggregate_tree*`` methods remain as the plan's oracles:
+every packed plan must reproduce them allclose (see ``tests/test_plan.py``
+and the parity/property suites, which now exercise plans end to end).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aggregation import _EPS
+from .compat import shard_map_no_check
+
+PyTree = Any
+
+
+class PlanUnavailable(Exception):
+    """A compiled plan cannot be built for these inputs (traced values,
+    bare leaves, mismatched prev shapes); callers fall back to the
+    per-leaf reference path, which handles everything."""
+
+
+class DispatchCounter:
+    """Counts host->device computation dispatches issued by the tracked
+    entry points: every Pallas kernel wrapper call (``repro.kernels``)
+    and every :class:`CompiledRound` execution.  The aggregation
+    benchmarks read this to report dispatches per round."""
+
+    def __init__(self):
+        self.count = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.count += n
+
+    def reset(self) -> int:
+        prev, self.count = self.count, 0
+        return prev
+
+
+dispatch_counter = DispatchCounter()
+
+
+# ------------------------------------------------------------- cohort spec --
+def _is_pair(node) -> bool:
+    return (isinstance(node, Mapping) and "A" in node and "B" in node
+            and "rank" in node)
+
+
+def _walk_pairs(tree, path=()):
+    """Yield ``(path, pair)`` for every LoRA pair; raise
+    :class:`PlanUnavailable` on bare array leaves (plans pack whole
+    pairs; generic leaf trees stay on the reference path)."""
+    if _is_pair(tree):
+        yield path, tree
+        return
+    if isinstance(tree, Mapping):
+        for k, v in tree.items():
+            yield from _walk_pairs(v, path + (k,))
+        return
+    if isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            yield from _walk_pairs(v, path + (i,))
+        return
+    if tree is None:
+        return
+    raise PlanUnavailable(
+        f"bare leaf of type {type(tree).__name__} at {path}; plans pack "
+        "whole LoRA pairs")
+
+
+def _concrete(x, what: str) -> np.ndarray:
+    if isinstance(x, jax.core.Tracer):
+        raise PlanUnavailable(f"{what} is traced; plans are host-built")
+    return np.asarray(jax.device_get(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class PairMeta:
+    """Static description of one stacked LoRA pair in a cohort."""
+    path: tuple
+    a_shape: tuple
+    a_dtype: str
+    b_shape: tuple
+    b_dtype: str
+    rank_shape: tuple          # stacked rank leaf shape, incl. client axis
+    ranks: tuple               # flattened concrete stacked rank values
+    prev_a_shape: tuple | None = None
+    prev_b_shape: tuple | None = None
+    prev_rank_shape: tuple | None = None
+    prev_ranks: tuple | None = None
+
+    def rank_values(self) -> np.ndarray:
+        return np.asarray(self.ranks, np.int64).reshape(self.rank_shape)
+
+    def prev_rank_values(self) -> np.ndarray | None:
+        if self.prev_ranks is None:
+            return None
+        return np.asarray(self.prev_ranks,
+                          np.int64).reshape(self.prev_rank_shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortSpec:
+    """Hashable plan-cache key: everything a compiled round closes over.
+
+    Two cohorts with the same spec share one compiled plan; a new rank
+    multiset, tree structure, backend, mesh, or prev layout builds (and
+    caches) a new one.
+    """
+    n_clients: int
+    kind: str                       # resolved backend: ref|pallas|distributed
+    r_max: int | None
+    pairs: tuple[PairMeta, ...]
+    client_ranks: tuple | None
+    has_prev: bool
+    interpret: bool | None = None
+    mesh: Any = None
+    client_axis: str = "clients"
+
+    def client_ranks_array(self):
+        if self.client_ranks is None:
+            return None
+        return jnp.asarray(self.client_ranks, jnp.int32)
+
+
+def build_cohort_spec(stacked_tree: PyTree, *, kind: str,
+                      r_max: int | None = None, client_ranks=None,
+                      prev_tree: PyTree | None = None,
+                      interpret: bool | None = None, mesh=None,
+                      client_axis: str = "clients") -> CohortSpec:
+    """Describe a stacked cohort host-side.  Raises
+    :class:`PlanUnavailable` when the description needs values tracing
+    hides (rank leaves, weights under jit) or the tree has bare leaves."""
+    if client_ranks is not None:
+        client_ranks = tuple(
+            int(v) for v in _concrete(client_ranks, "client_ranks").ravel())
+    prev_pairs = (dict(_walk_pairs(prev_tree))
+                  if prev_tree is not None else {})
+    pairs = []
+    n = None
+    for path, pair in _walk_pairs(stacked_tree):
+        A, B, rank = pair["A"], pair["B"], pair["rank"]
+        if isinstance(A, jax.core.Tracer) or isinstance(B, jax.core.Tracer):
+            raise PlanUnavailable("cohort leaves are traced")
+        if A.ndim < 3 or B.ndim < 3:
+            raise PlanUnavailable(
+                f"pair at {path} is not stacked over clients")
+        if n is None:
+            n = int(A.shape[0])
+        rk = _concrete(rank, f"rank leaf at {path}")
+        meta = dict(path=path, a_shape=tuple(A.shape), a_dtype=str(A.dtype),
+                    b_shape=tuple(B.shape), b_dtype=str(B.dtype),
+                    rank_shape=tuple(rk.shape),
+                    ranks=tuple(int(v) for v in rk.ravel()))
+        if prev_tree is not None:
+            if path not in prev_pairs:
+                raise PlanUnavailable(f"prev tree missing pair at {path}")
+            pp = prev_pairs[path]
+            prk = _concrete(pp["rank"], f"prev rank leaf at {path}")
+            meta.update(prev_a_shape=tuple(pp["A"].shape),
+                        prev_b_shape=tuple(pp["B"].shape),
+                        prev_rank_shape=tuple(prk.shape),
+                        prev_ranks=tuple(int(v) for v in prk.ravel()))
+        pairs.append(PairMeta(**meta))
+    if not pairs:
+        raise PlanUnavailable("no LoRA pairs in the cohort tree")
+    return CohortSpec(n_clients=n, kind=kind, r_max=r_max,
+                      pairs=tuple(pairs), client_ranks=client_ranks,
+                      has_prev=prev_tree is not None, interpret=interpret,
+                      mesh=mesh if kind == "distributed" else None,
+                      client_axis=client_axis)
+
+
+# ---------------------------------------------------------- packed layout --
+@dataclasses.dataclass
+class Slot:
+    """One pair side's home inside a packed bucket."""
+    pair_idx: int
+    side: str                  # "A" | "B"
+    lead: tuple                # leading (layer/expert) dims
+    r_st: int                  # storage rank rows per lead index
+    rows: int                  # prod(lead) * r_st
+    width: int
+    dtype: str
+    offset: int = 0            # row offset inside the bucket
+
+
+@dataclasses.dataclass
+class Bucket:
+    """All slots sharing (row width, dtype): one fused launch per round."""
+    width: int
+    dtype: str
+    slots: list
+    rows: int = 0
+    mask: np.ndarray | None = None     # (n, rows) owner mask, host-built
+
+
+def _side_geometry(meta: PairMeta, side: str):
+    shape = meta.a_shape if side == "A" else meta.b_shape
+    lead = tuple(shape[1:-2])
+    if side == "A":
+        r_st, width = shape[-2], shape[-1]
+        dtype = meta.a_dtype
+    else:
+        r_st, width = shape[-1], shape[-2]
+        dtype = meta.b_dtype
+    rows = int(np.prod(lead, dtype=np.int64)) * r_st if lead else r_st
+    return lead, int(r_st), int(rows), int(width), dtype
+
+
+def _slot_mask(meta: PairMeta, slot: Slot, n: int,
+               use_mask: bool) -> np.ndarray:
+    """Per-row owner mask (n, rows): row (l, j) of client i is owned iff
+    j < rank_i[l] -- the delta_{i,r} indicator in packed-row form."""
+    if not use_mask:
+        return np.ones((n, slot.rows), np.float32)
+    rk = meta.rank_values()                      # (n, *rank_leaf_shape)
+    mid = len(slot.lead) - (rk.ndim - 1)
+    r = rk.reshape(rk.shape + (1,) * mid + (1,))
+    m = np.arange(slot.r_st).reshape((1,) * (1 + len(slot.lead))
+                                     + (slot.r_st,)) < r
+    m = np.broadcast_to(m, (n,) + slot.lead + (slot.r_st,))
+    return np.ascontiguousarray(
+        m.reshape(n, slot.rows).astype(np.float32))
+
+
+def _make_buckets(spec: CohortSpec, use_mask: bool) -> list:
+    buckets: dict = {}
+    for pi, meta in enumerate(spec.pairs):
+        for side in ("A", "B"):
+            lead, r_st, rows, width, dtype = _side_geometry(meta, side)
+            key = (width, dtype)
+            b = buckets.setdefault(key, Bucket(width=width, dtype=dtype,
+                                               slots=[]))
+            b.slots.append(Slot(pair_idx=pi, side=side, lead=lead,
+                                r_st=r_st, rows=rows, width=width,
+                                dtype=dtype, offset=b.rows))
+            b.rows += rows
+    out = list(buckets.values())
+    for b in out:
+        b.mask = np.concatenate(
+            [_slot_mask(spec.pairs[s.pair_idx], s, spec.n_clients, use_mask)
+             for s in b.slots], axis=1)
+    return out
+
+
+def _pack_side(x, slot: Slot):
+    """(n, *lead, ...) leaf -> (n, rows, width) f32, rank axis leading."""
+    if slot.side == "B":
+        x = jnp.swapaxes(x, -1, -2)
+    return x.reshape(x.shape[:1] + (slot.rows, slot.width)).astype(
+        jnp.float32)
+
+
+def _pack_prev_side(x, slot: Slot):
+    """Like :func:`_pack_side` for an unstacked (server-state) leaf."""
+    if slot.side == "B":
+        x = jnp.swapaxes(x, -1, -2)
+    return x.reshape((slot.rows, slot.width)).astype(jnp.float32)
+
+
+def _unpack_slot(out, slot: Slot, meta: PairMeta):
+    """(rows, width) f32 block -> the slot's original leaf layout."""
+    y = out[slot.offset:slot.offset + slot.rows]
+    y = y.reshape(slot.lead + (slot.r_st, slot.width))
+    if slot.side == "B":
+        y = jnp.swapaxes(y, -1, -2)
+    return y.astype(slot.dtype)
+
+
+# ------------------------------------------------------- tree (re)building --
+def _make_rebuilder(tree) -> Callable:
+    """Recipe to rebuild ``tree``'s container structure from a flat list
+    of per-pair replacements (in :func:`_walk_pairs` order)."""
+    counter = [0]
+
+    def recipe(t):
+        if _is_pair(t):
+            i = counter[0]
+            counter[0] += 1
+            return ("pair", i)
+        if isinstance(t, Mapping):
+            return ("map", {k: recipe(v) for k, v in t.items()})
+        if isinstance(t, (tuple, list)):
+            return ("seq", type(t), [recipe(v) for v in t])
+        return ("leaf", t)
+
+    r = recipe(tree)
+
+    def rebuild(pairs: Sequence):
+        def go(node):
+            tag = node[0]
+            if tag == "pair":
+                return pairs[node[1]]
+            if tag == "map":
+                return {k: go(v) for k, v in node[1].items()}
+            if tag == "seq":
+                return node[1](go(v) for v in node[2])
+            return node[1]
+        return go(r)
+    return rebuild
+
+
+def _ab_list(tree) -> list:
+    return [{"A": p["A"], "B": p["B"]} for _, p in _walk_pairs(tree)]
+
+
+# ------------------------------------------------------------ the product --
+class CompiledRound:
+    """One compiled aggregation round for a fixed :class:`CohortSpec`.
+
+    ``__call__(stacked_tree, weights, prev_tree, donate=False)`` runs the
+    round; with ``donate=True`` the previous global's A/B buffers are
+    donated to XLA (the caller must not touch them afterwards -- jax
+    raises on any use of a donated buffer).
+
+    Attributes the benchmarks and tests read:
+
+    ``kind``
+        "packed" (fused buckets), "jit" (whole-round jit over the
+        reference math), or "eager" (legacy per-leaf execution --
+        unknown strategies and paths with their own caching).
+    ``n_kernel_launches``
+        fused device computations issued per round (packed plans:
+        #buckets; others: best-effort 1 / None).
+    ``n_fallback_pairs``
+        pairs a packed plan still routes through reference pair math
+        (e.g. flora's over-cap SVD re-projection).
+    """
+
+    def __init__(self, strategy, spec: CohortSpec, kind: str,
+                 execute: Callable, *, n_kernel_launches: int | None = None,
+                 n_fallback_pairs: int = 0):
+        self.strategy = strategy
+        self.spec = spec
+        self.kind = kind
+        self._execute = execute
+        self.n_kernel_launches = n_kernel_launches
+        self.n_fallback_pairs = n_fallback_pairs
+        self.n_calls = 0
+
+    def __call__(self, stacked_tree: PyTree, weights, prev_tree=None,
+                 donate: bool = False) -> PyTree:
+        dispatch_counter.inc()
+        self.n_calls += 1
+        return self._execute(stacked_tree, jnp.asarray(weights, jnp.float32),
+                             prev_tree, donate)
+
+    def describe(self) -> str:
+        return (f"CompiledRound({self.strategy.name}/{self.spec.kind}, "
+                f"kind={self.kind}, launches={self.n_kernel_launches}, "
+                f"fallback_pairs={self.n_fallback_pairs})")
+
+
+def _out_rank_leaves(spec: CohortSpec, r_out_per_pair=None):
+    """Finalized rank leaves, host-built: fixed-rank plans write r_max
+    (or the storage rank) directly; stack plans write each pair's static
+    output rank."""
+    leaves = []
+    for i, meta in enumerate(spec.pairs):
+        shape = tuple(meta.rank_shape[1:])
+        if r_out_per_pair is not None:
+            val = int(r_out_per_pair[i])
+        else:
+            val = int(spec.r_max if spec.r_max is not None
+                      else meta.a_shape[-2])
+        leaves.append(jnp.full(shape, val, jnp.int32))
+    return leaves
+
+
+# ------------------------------------------------------ packed mean plans --
+def _bucket_mean_ref(x, mask_const, wt, prev, norm_by: str,
+                     norm_restore: bool):
+    """Fused reference math for one bucket: the packed-row form of
+    rbla/zeropad/fedavg leaf math (+ rbla_norm's per-row norm restore)."""
+    m = mask_const
+    num = jnp.einsum("n,nr,nrd->rd", wt, m, x)
+    if norm_by == "mask":
+        den = jnp.einsum("n,nr->r", wt, m)[:, None]
+        fb = prev if prev is not None else jnp.zeros_like(num)
+        out = jnp.where(den > 0, num / (den + _EPS), fb)
+    else:
+        out = num / (jnp.sum(wt) + _EPS)
+    if norm_restore:
+        xm = m[:, :, None] * x
+        row_norms = jnp.sqrt(jnp.einsum("nrd,nrd->nr", xm, xm))
+        w_rows = (m > 0).astype(jnp.float32) * wt[:, None]
+        target = (jnp.sum(w_rows * row_norms, axis=0)
+                  / (jnp.sum(w_rows, axis=0) + _EPS))
+        agg_norms = jnp.sqrt(jnp.sum(out ** 2, axis=1))
+        scale = jnp.where(agg_norms > _EPS, target / (agg_norms + _EPS),
+                          1.0)
+        out = out * scale[:, None]
+    return out
+
+
+def _shape_key(spec: CohortSpec) -> tuple:
+    """Everything a mean-mode *executor* (the jitted function) depends
+    on: shapes, dtypes, backend, prev presence -- but NOT the rank
+    multiset.  Owner masks and client ranks enter as runtime data, so
+    one compiled executor serves every cohort with this layout and a new
+    rank multiset costs a new (cheap) plan, not a new XLA compile."""
+    return (spec.kind, spec.n_clients, spec.has_prev, spec.interpret,
+            spec.mesh, spec.client_axis,
+            tuple((m.a_shape, m.a_dtype, m.b_shape, m.b_dtype)
+                  for m in spec.pairs))
+
+
+def _build_mean_round(strategy, spec: CohortSpec,
+                      norm_restore: bool = False) -> CompiledRound:
+    buckets = _make_buckets(spec, strategy.use_mask)
+    retains = strategy.retains_prev and spec.has_prev
+    if retains:
+        for meta in spec.pairs:       # mean plans overlay prev in place
+            if (meta.prev_a_shape != meta.a_shape[1:]
+                    or meta.prev_b_shape != meta.b_shape[1:]):
+                raise PlanUnavailable(
+                    "prev leaf shapes differ from the cohort's")
+    cr = spec.client_ranks_array()
+    norm_by = strategy.norm_by
+    rank_leaves = _out_rank_leaves(spec)
+    masks = [jnp.asarray(b.mask) for b in buckets]
+
+    if spec.kind == "distributed":
+        return _build_mean_distributed(strategy, spec, buckets, masks,
+                                       rank_leaves, retains)
+
+    exec_cache = strategy.__dict__.setdefault("_plan_exec_cache", {})
+    key = ("mean", norm_restore, _shape_key(spec))
+    fns = exec_cache.get(key)
+    if fns is None:
+        def round_fn(ab, wt_raw, prev_ab, ms, crv):
+            wt = strategy.transform_weights(wt_raw, crv)
+            outs = []
+            for bi, b in enumerate(buckets):
+                x = jnp.concatenate(
+                    [_pack_side(ab[s.pair_idx][s.side], s)
+                     for s in b.slots],
+                    axis=1) if len(b.slots) > 1 else _pack_side(
+                        ab[b.slots[0].pair_idx][b.slots[0].side],
+                        b.slots[0])
+                prev = None
+                if retains:
+                    parts = [_pack_prev_side(prev_ab[s.pair_idx][s.side],
+                                             s) for s in b.slots]
+                    prev = (jnp.concatenate(parts, axis=0)
+                            if len(parts) > 1 else parts[0])
+                if spec.kind == "pallas":
+                    from repro.kernels.rbla_agg.ops import packed_agg_inline
+                    out = packed_agg_inline(x, ms[bi], wt, prev,
+                                            norm_by=norm_by,
+                                            interpret=spec.interpret)
+                else:
+                    out = _bucket_mean_ref(x, ms[bi], wt, prev,
+                                           norm_by, norm_restore)
+                outs.append(out)
+            return [
+                {s.side: _unpack_slot(outs[bi], s, spec.pairs[s.pair_idx])
+                 for bi, b in enumerate(buckets) for s in b.slots
+                 if s.pair_idx == pi}
+                for pi in range(len(spec.pairs))]
+
+        fns = (jax.jit(round_fn), jax.jit(round_fn, donate_argnums=(2,)))
+        exec_cache[key] = fns
+    fn, fn_donate = fns
+    rebuild = [None]
+
+    def execute(stacked_tree, w, prev_tree, donate):
+        if rebuild[0] is None:
+            rebuild[0] = _make_rebuilder(stacked_tree)
+        ab = _ab_list(stacked_tree)
+        prev_ab = _ab_list(prev_tree) if retains else None
+        run = fn_donate if (donate and retains) else fn
+        outs = run(ab, w, prev_ab, masks, cr)
+        pairs = [{"A": o["A"], "B": o["B"], "rank": rank_leaves[i]}
+                 for i, o in enumerate(outs)]
+        return rebuild[0](pairs)
+
+    return CompiledRound(strategy, spec, "packed", execute,
+                         n_kernel_launches=len(buckets))
+
+
+def _build_mean_distributed(strategy, spec, buckets, masks_const,
+                            rank_leaves, retains) -> CompiledRound:
+    """Packed shard_map: one collective round over the bucket buffers
+    (clients sharded over the mesh axis, masks ride along sharded, the
+    combine + prev retention computed replicated)."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    n = spec.n_clients
+    mesh = spec.mesh
+    ax = spec.client_axis
+    if mesh is None:
+        devs = jax.devices()
+        k = max(i for i in range(1, len(devs) + 1) if n % i == 0)
+        mesh = Mesh(np.asarray(devs[:k]), (ax,))
+    cr = spec.client_ranks_array()
+    norm_by = strategy.norm_by
+    nb = len(buckets)
+
+    exec_cache = strategy.__dict__.setdefault("_plan_exec_cache", {})
+    key = ("mean_dist", _shape_key(spec))
+    shard_fn = exec_cache.get(key)
+    if shard_fn is None:
+        def body(xs, ms, wt, prevs):
+            outs = []
+            for bi in range(nb):
+                x, m = xs[bi], ms[bi]
+                num = jax.lax.psum(jnp.einsum("n,nr,nrd->rd", wt, m, x),
+                                   ax)
+                if norm_by == "mask":
+                    den = jax.lax.psum(jnp.einsum("n,nr->r", wt, m),
+                                       ax)[:, None]
+                    fb = prevs[bi] if retains else jnp.zeros_like(num)
+                    outs.append(jnp.where(den > 0, num / (den + _EPS), fb))
+                else:
+                    den = jax.lax.psum(jnp.sum(wt), ax)
+                    outs.append(num / (den + _EPS))
+            return outs
+
+        shard_fn = jax.jit(shard_map_no_check(
+            body, mesh,
+            in_specs=([P(ax)] * nb, [P(ax)] * nb, P(ax),
+                      [P()] * nb if retains else []),
+            out_specs=[P()] * nb))
+        exec_cache[key] = shard_fn
+
+    def round_fn(ab, wt_raw, prev_ab):
+        wt = strategy.transform_weights(wt_raw, cr)
+        xs = []
+        for b in buckets:
+            parts = [_pack_side(ab[s.pair_idx][s.side], s) for s in b.slots]
+            xs.append(jnp.concatenate(parts, axis=1)
+                      if len(parts) > 1 else parts[0])
+        prevs = []
+        if retains:
+            for b in buckets:
+                parts = [_pack_prev_side(prev_ab[s.pair_idx][s.side], s)
+                         for s in b.slots]
+                prevs.append(jnp.concatenate(parts, axis=0)
+                             if len(parts) > 1 else parts[0])
+        outs = shard_fn(xs, masks_const, wt, prevs)
+        return [
+            {s.side: _unpack_slot(outs[bi], s, spec.pairs[s.pair_idx])
+             for bi, b in enumerate(buckets) for s in b.slots
+             if s.pair_idx == pi}
+            for pi in range(len(spec.pairs))]
+
+    rebuild = [None]
+
+    def execute(stacked_tree, w, prev_tree, donate):
+        if rebuild[0] is None:
+            rebuild[0] = _make_rebuilder(stacked_tree)
+        ab = _ab_list(stacked_tree)
+        prev_ab = _ab_list(prev_tree) if retains else None
+        outs = round_fn(ab, w, prev_ab)
+        pairs = [{"A": o["A"], "B": o["B"], "rank": rank_leaves[i]}
+                 for i, o in enumerate(outs)]
+        return rebuild[0](pairs)
+
+    return CompiledRound(strategy, spec, "packed", execute,
+                         n_kernel_launches=len(buckets))
+
+
+# ----------------------------------------------------- packed stack plans --
+def _build_stack_round(strategy, spec: CohortSpec) -> CompiledRound:
+    """flora's pallas plan: the whole stacking round is copies/scales at
+    static offsets, fused into one ``packed_stack`` launch per bucket.
+    Pairs whose stacked rank exceeds the cap fall back to the reference
+    pair math (SVD re-projection) inside the same jitted round."""
+    n = spec.n_clients
+
+    # ---- static per-pair stacking geometry ------------------------------
+    plans = []                       # one entry per pair
+    for meta in spec.pairs:
+        ranks = meta.rank_values()
+        if ranks.ndim > 1:           # layer-stacked: flora needs uniform
+            flat = ranks.reshape(n, -1)
+            if not np.all(flat == flat[:, :1]):
+                raise PlanUnavailable(
+                    "flora packs layer-stacked pairs only with uniform "
+                    "per-client ranks")
+            ranks = flat[:, 0]
+        ranks = ranks.reshape(-1).astype(np.int64)
+        lead_a, r_st_a, _, _, _ = _side_geometry(meta, "A")
+        cap = strategy.resolve_cap(spec.r_max, r_storage=r_st_a)
+        strategy._validate_cap(cap, ranks, spec.r_max)
+        prev_rank = 0
+        prev_r_st = 0
+        if spec.has_prev and meta.prev_ranks is not None:
+            prev_rank = int(np.max(meta.prev_rank_values()))
+            prev_r_st = int(meta.prev_a_shape[-2])
+        live = [i for i in range(n) if int(ranks[i]) > 0]
+        seg_ranks = ([prev_rank] if prev_rank else []) \
+            + [int(ranks[i]) for i in live]
+        r_total = int(sum(seg_ranks))
+        plans.append(dict(ranks=ranks, cap=cap, prev_rank=prev_rank,
+                          prev_r_st=prev_r_st, live=live,
+                          seg_ranks=seg_ranks, r_total=r_total,
+                          packable=r_total <= cap))
+
+    def _capped_r_out(p, meta):
+        # mirrors _stack_pair's over-cap branch exactly
+        base = (spec.r_max if spec.r_max is not None
+                else meta.a_shape[-2])
+        return min(int(base), p["cap"])
+
+    rank_leaves = _out_rank_leaves(
+        spec, [p["r_total"] if p["packable"] else _capped_r_out(p, m)
+               for p, m in zip(plans, spec.pairs)])
+
+    # ---- bucket the packable pairs; out layout = lead x cap per slot ----
+    buckets: dict = {}
+    for pi, meta in enumerate(spec.pairs):
+        if not plans[pi]["packable"]:
+            continue
+        for side in ("A", "B"):
+            lead, r_st, rows, width, dtype = _side_geometry(meta, side)
+            key = (width, dtype)
+            b = buckets.setdefault(
+                key, Bucket(width=width, dtype=dtype, slots=[]))
+            b.slots.append(Slot(pair_idx=pi, side=side, lead=lead,
+                                r_st=r_st, rows=rows, width=width,
+                                dtype=dtype))
+    buckets = list(buckets.values())
+
+    # scale vector layout: entry 0 is the constant 1.0 (A rows pass
+    # verbatim); then one entry per (packable pair, segment) for B
+    scale_slots: list = []           # (pair_idx, seg_index) in vector order
+    for pi, p in enumerate(plans):
+        if p["packable"]:
+            for j in range(len(p["seg_ranks"])):
+                scale_slots.append((pi, j))
+    scale_index = {ps: 1 + k for k, ps in enumerate(scale_slots)}
+
+    bucket_meta = []
+    for b in buckets:
+        in_off = 0
+        prev_off = 0
+        out_off = 0
+        copies_x: list = []
+        copies_prev: list = []
+        for s in b.slots:
+            p = plans[s.pair_idx]
+            nlayers = int(np.prod(s.lead, dtype=np.int64)) if s.lead else 1
+            cap = p["cap"]
+            prev_r_st = p["prev_r_st"]
+            for l in range(nlayers):
+                dst = out_off + l * cap
+                seg = 0
+                if p["prev_rank"]:
+                    si = (scale_index[(s.pair_idx, seg)]
+                          if s.side == "B" else 0)
+                    copies_prev.append((prev_off + l * prev_r_st, dst,
+                                        p["prev_rank"], si))
+                    dst += p["prev_rank"]
+                    seg += 1
+                for i in p["live"]:
+                    r_i = int(p["ranks"][i])
+                    si = (scale_index[(s.pair_idx, seg)]
+                          if s.side == "B" else 0)
+                    copies_x.append((i, in_off + l * s.r_st, dst, r_i, si))
+                    dst += r_i
+                    seg += 1
+            s.offset = out_off
+            out_off += nlayers * cap
+            in_off += s.rows
+            prev_off += nlayers * prev_r_st
+        bucket_meta.append(dict(out_rows=out_off,
+                                copies_x=tuple(copies_x),
+                                copies_prev=tuple(copies_prev)))
+
+    fallback = [pi for pi, p in enumerate(plans) if not p["packable"]]
+    n_scales = 1 + len(scale_slots)
+
+    def round_fn(ab, wt_raw, prev_ab):
+        wt = wt_raw
+        mean_w = jnp.mean(wt)
+        # per-(pair, segment) B-column scales: mhat_i * r_out / r_i
+        scales = [jnp.float32(1.0)]
+        for pi, p in enumerate(plans):
+            if not p["packable"]:
+                continue
+            masses = []
+            if p["prev_rank"]:
+                masses.append(strategy.prev_weight * mean_w)
+            masses.extend(wt[i] for i in p["live"])
+            m = jnp.stack(masses)
+            mhat = m / (jnp.sum(m) + _EPS)
+            r_out = jnp.float32(p["r_total"])
+            for j, rj in enumerate(p["seg_ranks"]):
+                scales.append(mhat[j] * r_out / jnp.float32(rj))
+        scales = jnp.stack(scales)
+        assert scales.shape[0] == n_scales
+
+        outs = []
+        for bi, b in enumerate(buckets):
+            from repro.kernels.rbla_agg.ops import packed_stack_inline
+            x = jnp.concatenate(
+                [_pack_side(ab[s.pair_idx][s.side], s) for s in b.slots],
+                axis=1) if len(b.slots) > 1 else _pack_side(
+                    ab[b.slots[0].pair_idx][b.slots[0].side], b.slots[0])
+            prev = None
+            if bucket_meta[bi]["copies_prev"]:
+                parts = []
+                for s in b.slots:
+                    p = plans[s.pair_idx]
+                    if p["prev_r_st"]:
+                        parts.append(_pack_prev_side(
+                            prev_ab[s.pair_idx][s.side],
+                            dataclasses.replace(
+                                s, r_st=p["prev_r_st"],
+                                rows=(s.rows // s.r_st) * p["prev_r_st"])))
+                prev = (jnp.concatenate(parts, axis=0)
+                        if len(parts) > 1 else parts[0])
+            outs.append(packed_stack_inline(
+                x, scales, prev,
+                copies_x=bucket_meta[bi]["copies_x"],
+                copies_prev=bucket_meta[bi]["copies_prev"],
+                out_rows=bucket_meta[bi]["out_rows"],
+                interpret=spec.interpret))
+
+        results: dict = {}
+        for bi, b in enumerate(buckets):
+            for s in b.slots:
+                cap = plans[s.pair_idx]["cap"]
+                y = outs[bi][s.offset:s.offset
+                             + (s.rows // s.r_st) * cap]
+                y = y.reshape(s.lead + (cap, s.width))
+                if s.side == "B":
+                    y = jnp.swapaxes(y, -1, -2)
+                results[(s.pair_idx, s.side)] = y.astype(s.dtype)
+        # over-cap pairs: reference SVD re-projection, same jitted round
+        for pi in fallback:
+            meta, p = spec.pairs[pi], plans[pi]
+            pA = pB = None
+            if spec.has_prev and p["prev_rank"]:
+                pA, pB = prev_ab[pi]["A"], prev_ab[pi]["B"]
+            A_out, B_out, _ = strategy._stack_pair(
+                ab[pi]["A"], ab[pi]["B"], p["ranks"], wt, pA, pB,
+                p["prev_rank"] or None, spec.r_max)
+            results[(pi, "A")] = A_out
+            results[(pi, "B")] = B_out
+        return [{"A": results[(pi, "A")], "B": results[(pi, "B")]}
+                for pi in range(len(spec.pairs))]
+
+    fn = jax.jit(round_fn)
+    fn_donate = jax.jit(round_fn, donate_argnums=(2,))
+    rebuild = [None]
+    has_prev = spec.has_prev
+
+    def execute(stacked_tree, w, prev_tree, donate):
+        if rebuild[0] is None:
+            rebuild[0] = _make_rebuilder(stacked_tree)
+        ab = _ab_list(stacked_tree)
+        prev_ab = _ab_list(prev_tree) if has_prev else None
+        run = fn_donate if (donate and has_prev) else fn
+        outs = run(ab, w, prev_ab)
+        pairs = [{"A": o["A"], "B": o["B"], "rank": rank_leaves[i]}
+                 for i, o in enumerate(outs)]
+        return rebuild[0](pairs)
+
+    return CompiledRound(strategy, spec, "packed", execute,
+                         n_kernel_launches=len(buckets) + len(fallback),
+                         n_fallback_pairs=len(fallback))
+
+
+# ----------------------------------------------------------- legacy plans --
+def _build_jit_round(strategy, spec: CohortSpec) -> CompiledRound:
+    """Whole-round jit over the strategy's reference tree path: ranks and
+    the cohort layout are closed over as constants, so host dispatch is
+    one call per round even where no packed kernel applies (svd's
+    per-pair SVDs, flora's ref backend)."""
+    retains = strategy.retains_prev and spec.has_prev
+    cr = spec.client_ranks_array()
+    rank_consts = [jnp.asarray(m.rank_values().astype(np.int32))
+                   for m in spec.pairs]
+    prev_rank_consts = [
+        None if m.prev_ranks is None
+        else jnp.asarray(m.prev_rank_values().astype(np.int32))
+        for m in spec.pairs]
+    rebuild = [None]
+
+    def round_fn(ab, wt, prev_ab):
+        from repro.lora import pair_masks
+        pairs = [{"A": p["A"], "B": p["B"], "rank": rank_consts[i]}
+                 for i, p in enumerate(ab)]
+        stacked = rebuild[0](pairs)
+        prev = None
+        if retains:
+            prev = rebuild[0](
+                [{"A": p["A"], "B": p["B"], "rank": prev_rank_consts[i]}
+                 for i, p in enumerate(prev_ab)])
+        if spec.kind == "pallas":
+            out = strategy.aggregate_tree_pallas(
+                stacked, wt, cr, prev, r_max=spec.r_max,
+                interpret=spec.interpret)
+        else:
+            masks = _map_pairs_like(pair_masks, stacked)
+            out = strategy.aggregate_tree(stacked, masks, wt, prev,
+                                          r_max=spec.r_max,
+                                          client_ranks=cr)
+        return [{"A": p["A"], "B": p["B"], "rank": p["rank"]}
+                for _, p in _walk_pairs(out)]
+
+    fn = jax.jit(round_fn)
+    fn_donate = jax.jit(round_fn, donate_argnums=(2,))
+
+    def execute(stacked_tree, w, prev_tree, donate):
+        if rebuild[0] is None:
+            rebuild[0] = _make_rebuilder(stacked_tree)
+        ab = _ab_list(stacked_tree)
+        prev_ab = _ab_list(prev_tree) if retains else None
+        run = fn_donate if (donate and retains) else fn
+        outs = run(ab, w, prev_ab)
+        out_tree = rebuild[0](
+            [{"A": o["A"], "B": o["B"], "rank": o["rank"]} for o in outs])
+        return strategy.finalize_tree(out_tree, spec.r_max)
+
+    return CompiledRound(strategy, spec, "jit", execute,
+                         n_kernel_launches=1)
+
+
+def _map_pairs_like(fn, tree):
+    if _is_pair(tree):
+        return fn(tree)
+    if isinstance(tree, Mapping):
+        return {k: _map_pairs_like(fn, v) for k, v in tree.items()}
+    if isinstance(tree, (tuple, list)):
+        return type(tree)(_map_pairs_like(fn, v) for v in tree)
+    return tree
+
+
+def _build_eager_round(strategy, spec: CohortSpec) -> CompiledRound:
+    """No-compilation wrapper: exactly the pre-plan execution (unknown
+    strategies whose leaf math we cannot assume, and paths that keep
+    their own caches, e.g. flora's ragged-concat distributed round)."""
+    cr = spec.client_ranks_array()
+
+    def execute(stacked_tree, w, prev_tree, donate):
+        from repro.lora import pair_masks
+        prev = prev_tree if strategy.retains_prev else None
+        if spec.kind == "pallas":
+            out = strategy.aggregate_tree_pallas(
+                stacked_tree, w, cr, prev, r_max=spec.r_max,
+                interpret=spec.interpret)
+        elif spec.kind == "distributed":
+            masks = _map_pairs_like(pair_masks, stacked_tree)
+            out = strategy.aggregate_tree_distributed(
+                stacked_tree, masks, w, prev, r_max=spec.r_max,
+                client_ranks=cr, mesh=spec.mesh,
+                client_axis=spec.client_axis)
+        else:
+            masks = _map_pairs_like(pair_masks, stacked_tree)
+            out = strategy.aggregate_tree(stacked_tree, masks, w, prev,
+                                          r_max=spec.r_max,
+                                          client_ranks=cr)
+        return strategy.finalize_tree(out, spec.r_max)
+
+    return CompiledRound(strategy, spec, "eager", execute)
+
+
+# -------------------------------------------------------------- dispatch --
+def build_plan(strategy, spec: CohortSpec) -> CompiledRound:
+    """Build the right :class:`CompiledRound` for ``strategy`` x ``spec``.
+
+    ``strategy.plan_mode`` declares how the strategy lowers:
+
+    * ``"mean"`` -- packed masked-mean buckets (fedavg / zeropad / rbla /
+      rbla_ranked) on every backend;
+    * ``"mean_norm"`` -- ditto plus rbla_norm's per-row norm restore
+      (scalar-rank pairs only; ref backend);
+    * ``"stack"`` -- flora: packed copy/scale stacking on pallas, whole-
+      round jit on ref, the cached ragged-concat collective when
+      distributed;
+    * ``"jit"`` -- whole-round jit of the reference math (svd);
+    * ``None`` -- eager legacy execution (registered strategies we know
+      nothing about).
+    """
+    mode = getattr(strategy, "plan_mode", None)
+    try:
+        if mode == "mean":
+            return _build_mean_round(strategy, spec)
+        if mode == "mean_norm":
+            if spec.kind != "ref" or any(
+                    len(m.a_shape) != 3 for m in spec.pairs):
+                return _build_eager_round(strategy, spec)
+            return _build_mean_round(strategy, spec, norm_restore=True)
+        if mode == "stack":
+            if spec.kind == "pallas":
+                return _build_stack_round(strategy, spec)
+            if spec.kind == "ref":
+                return _build_jit_round(strategy, spec)
+            return _build_eager_round(strategy, spec)
+        if mode == "jit" and spec.kind == "ref":
+            return _build_jit_round(strategy, spec)
+    except PlanUnavailable:
+        return _build_eager_round(strategy, spec)
+    return _build_eager_round(strategy, spec)
+
+
+# ------------------------------------------------------------- fold plans --
+def build_fold_plan(strategy, spec: CohortSpec):
+    """Packed per-update fold executor (the async hot path).
+
+    Reuses the cohort packing for a 1-element 'cohort': the server state
+    and the arriving update pack into the same (width, dtype) buckets and
+    fold in **one fused** ``axpy_fold`` **launch per bucket** -- cost
+    O(state), independent of how many pairs the tree has at the Python
+    level.  Returns ``fold_fn(state_ab, upd_ab, row_mass, wa, rank_leaves)
+    -> (new_ab, new_row_mass)`` (jitted; ``rank_leaves`` are the arriving
+    update's per-pair rank leaves, traced so one compilation serves every
+    client)."""
+    buckets = _make_buckets(spec, use_mask=True)
+
+    def fold_fn(state_ab, upd_ab, row_mass, wa, rank_leaves):
+        from repro.kernels.rbla_agg.ops import axpy_fold_inline
+        # per-pair owned-row indicators and packed alphas
+        alphas = {}
+        new_mass = []
+        for pi, meta in enumerate(spec.pairs):
+            r_st = meta.a_shape[-2]
+            rank = jnp.asarray(rank_leaves[pi], jnp.int32)
+            owned = (jax.lax.iota(jnp.int32, r_st)
+                     < rank[..., None]).astype(jnp.float32)
+            dmass = row_mass[pi]
+            alphas[pi] = jnp.where(owned > 0, wa / (dmass + wa), 0.0)
+            new_mass.append(dmass + wa * owned)
+        outs = []
+        for b in buckets:
+            y_parts = [_pack_prev_side(state_ab[s.pair_idx][s.side], s)
+                       for s in b.slots]
+            x_parts = [_pack_prev_side(upd_ab[s.pair_idx][s.side], s)
+                       for s in b.slots]
+            y = (jnp.concatenate(y_parts, axis=0)
+                 if len(y_parts) > 1 else y_parts[0])
+            x = (jnp.concatenate(x_parts, axis=0)
+                 if len(x_parts) > 1 else x_parts[0])
+            a_parts = []
+            for s in b.slots:
+                al = alphas[s.pair_idx]
+                mid = len(s.lead) - (al.ndim - 1)
+                al = jnp.broadcast_to(
+                    al.reshape(al.shape[:-1] + (1,) * mid + (al.shape[-1],)),
+                    s.lead + (s.r_st,))
+                a_parts.append(al.reshape(s.rows))
+            a = (jnp.concatenate(a_parts)
+                 if len(a_parts) > 1 else a_parts[0])
+            outs.append(axpy_fold_inline(y, x, a,
+                                         interpret=spec.interpret))
+        new_ab = [
+            {s.side: _unpack_slot(outs[bi], s, spec.pairs[s.pair_idx])
+             for bi, b in enumerate(buckets) for s in b.slots
+             if s.pair_idx == pi}
+            for pi in range(len(spec.pairs))]
+        return new_ab, new_mass
+
+    return jax.jit(fold_fn), len(buckets)
+
+
+def build_state_spec(adapters: PyTree, *, interpret=None) -> CohortSpec:
+    """A :class:`CohortSpec` for a *server state* tree (no client axis):
+    the fold plan's cache key.  Rank values are not part of the key --
+    folds take them as data so one compiled fold serves every client."""
+    pairs = []
+    for path, pair in _walk_pairs(adapters):
+        A, B = pair["A"], pair["B"]
+        if isinstance(A, jax.core.Tracer) or isinstance(B, jax.core.Tracer):
+            raise PlanUnavailable("state leaves are traced")
+        rk_shape = tuple(np.shape(jax.device_get(pair["rank"]))) \
+            if not isinstance(pair["rank"], jax.core.Tracer) else None
+        if rk_shape is None:
+            raise PlanUnavailable("state rank leaf is traced")
+        pairs.append(PairMeta(
+            path=path, a_shape=(1,) + tuple(A.shape), a_dtype=str(A.dtype),
+            b_shape=(1,) + tuple(B.shape), b_dtype=str(B.dtype),
+            rank_shape=(1,) + rk_shape,
+            ranks=tuple(0 for _ in range(int(np.prod(rk_shape,
+                                                     dtype=np.int64))))))
+    if not pairs:
+        raise PlanUnavailable("no LoRA pairs in the state tree")
+    return CohortSpec(n_clients=1, kind="pallas", r_max=None,
+                      pairs=tuple(pairs), client_ranks=None,
+                      has_prev=False, interpret=interpret)
+
+
+__all__ = [
+    "CohortSpec", "PairMeta", "CompiledRound", "PlanUnavailable",
+    "build_cohort_spec", "build_plan", "build_fold_plan",
+    "build_state_spec", "dispatch_counter", "DispatchCounter",
+]

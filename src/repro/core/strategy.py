@@ -56,6 +56,12 @@ PyTree = Any
 
 BACKENDS = ("auto", "ref", "pallas", "distributed")
 
+#: per-strategy-instance LRU bound on cached CompiledRounds (plans are
+#: keyed by cohort rank multiset among other things, and a random-cohort
+#: service sees many multisets; the expensive XLA executables underneath
+#: are shared across multisets and are NOT evicted with the plan)
+PLAN_CACHE_SIZE = 128
+
 
 # ------------------------------------------------------------ server state --
 @dataclasses.dataclass
@@ -105,10 +111,16 @@ class FoldState:
         ``None`` for strategies that don't need it.
     ``n_folds``
         how many updates have been folded since the anchor.
+    ``extra``
+        strategy-private streaming bookkeeping (flora keeps its stacked
+        segment ledger here -- per-pair segment ranks, masses, and the
+        B-column scales currently applied -- so folds can re-scale in
+        place instead of replaying from the anchor).
     """
     mass: float = 0.0
     row_mass: PyTree | None = None
     n_folds: int = 0
+    extra: Any = None
 
 
 # ---------------------------------------------------------------- registry --
@@ -206,6 +218,25 @@ def _map_pairs(fn, tree, *rest, strict: bool = False):
     return tree
 
 
+def _flat_pair_values(tree: PyTree) -> list:
+    """Values sitting at pair positions of a ``_map_pairs`` output whose
+    pairs were replaced by bare values (e.g. a ``row_mass`` tree), in
+    ``_map_pairs`` traversal order."""
+    vals: list = []
+
+    def go(t):
+        if isinstance(t, Mapping) and not _is_pair(t):
+            for v in t.values():
+                go(v)
+        elif isinstance(t, (tuple, list)):
+            for v in t:
+                go(v)
+        elif t is not None:
+            vals.append(t)
+    go(tree)
+    return vals
+
+
 def _fix_rank(tree: PyTree, r_max: int | None) -> PyTree:
     """Reset every pair's live rank to r_max: the server keeps the full
     stack; clients re-slice per Alg. 2."""
@@ -298,6 +329,12 @@ class AggregationStrategy:
     #: mixing) and exact async semantics need the replay path
     #: (:class:`repro.fl.AsyncAggregator` handles this automatically).
     supports_incremental: bool = False
+    #: how :meth:`plan` lowers a round (see ``repro.core.plan``):
+    #: "mean" = packed masked-mean buckets, "mean_norm" = + per-row norm
+    #: restore, "stack" = flora's copy/scale stacking, "jit" = whole-round
+    #: jit of the reference math, None = eager legacy execution (the safe
+    #: default for strategies whose leaf math the planner cannot assume)
+    plan_mode: str | None = None
 
     def with_options(self, **options) -> "AggregationStrategy":
         """Return a configured copy of this strategy.
@@ -308,7 +345,10 @@ class AggregationStrategy:
         """
         import copy
         inst = copy.copy(self)
-        inst.__dict__.pop("_dist_agg_cache", None)  # fns close over self
+        # compiled artifacts close over self and its options: never share
+        for cached in ("_dist_agg_cache", "_plan_cache", "plan_stats",
+                       "_fold_plan_cache", "_plan_exec_cache"):
+            inst.__dict__.pop(cached, None)
         for k, v in options.items():
             if not hasattr(inst, k) or k.startswith("_"):
                 raise ValueError(
@@ -321,6 +361,67 @@ class AggregationStrategy:
         Fixed-rank strategies store exactly ``r_max``; rank-growing ones
         (flora) need headroom up to their cap."""
         return r_max
+
+    # ------------------------------------------------------ compiled plans --
+    def plan(self, state, cohort_spec):
+        """Compiled round for ``cohort_spec``: ``plan(state, spec) ->
+        CompiledRound`` (see ``repro.core.plan``).
+
+        The round packs the cohort's pairs into (width, dtype) buckets,
+        lowers leaf math + prev retention + weight transform into one
+        jitted function issuing one fused launch per bucket, and is
+        cached on this instance keyed by the spec (tree structure, rank
+        multiset, backend, mesh) -- :attr:`plan_stats` counts hits and
+        misses.  The cache is a bounded LRU (`PLAN_CACHE_SIZE`): a
+        long-lived service with random cohort selection sees a new rank
+        multiset most rounds, and while plans are cheap (mean-mode XLA
+        executables are shared across multisets -- owner masks are
+        runtime data), their host-side mask matrices should not
+        accumulate forever.  ``state`` may carry the server state whose
+        adapters the round retains; the spec already encodes its layout,
+        so ``None`` is accepted.  Unsupported backends raise the same
+        ``NotImplementedError`` the per-leaf paths raise.
+        """
+        from .plan import build_plan
+        if cohort_spec.kind == "pallas" and not self.supports_pallas:
+            raise NotImplementedError(
+                f"strategy {self.name!r} has no Pallas kernel path; "
+                "use backend='ref'")
+        if (cohort_spec.kind == "distributed"
+                and not self.supports_distributed):
+            raise NotImplementedError(
+                f"strategy {self.name!r} has no distributed path; "
+                "use backend='ref'")
+        from collections import OrderedDict
+        cache = self.__dict__.setdefault("_plan_cache", OrderedDict())
+        stats = self.__dict__.setdefault("plan_stats",
+                                         {"hits": 0, "misses": 0})
+        got = cache.get(cohort_spec)
+        if got is not None:
+            stats["hits"] += 1
+            cache.move_to_end(cohort_spec)
+            return got
+        stats["misses"] += 1
+        built = build_plan(self, cohort_spec)
+        cache[cohort_spec] = built
+        while len(cache) > PLAN_CACHE_SIZE:
+            cache.popitem(last=False)
+        return built
+
+    def _plan_round(self, stacked, kind, *, r_max, client_ranks, prev,
+                    mesh, client_axis, interpret):
+        """Best-effort plan for an already-stacked cohort; ``None`` when
+        the cohort cannot be described host-side (traced leaves, bare
+        leaves) -- the caller then runs the in-trace legacy path."""
+        from .plan import PlanUnavailable, build_cohort_spec
+        try:
+            spec = build_cohort_spec(
+                stacked, kind=kind, r_max=r_max, client_ranks=client_ranks,
+                prev_tree=prev, interpret=interpret, mesh=mesh,
+                client_axis=client_axis)
+        except PlanUnavailable:
+            return None
+        return self.plan(None, spec)
 
     # ------------------------------------------------------ (a) leaf math --
     def leaf(self, stacked: Array, mask: Array | None, weights: Array,
@@ -510,15 +611,24 @@ class AggregationStrategy:
                            prev_global: PyTree | None = None,
                            backend: str = "auto", mesh=None,
                            client_axis: str = "clients",
-                           interpret: bool | None = None) -> PyTree:
+                           interpret: bool | None = None,
+                           use_plan: bool = True,
+                           donate: bool = False) -> PyTree:
         """Aggregate per-client adapter trees into the global adapter.
 
-        Stacks the uploads, builds delta_{i,r} masks, applies the
-        strategy's weight transform, dispatches to the selected backend,
-        and runs :meth:`finalize_tree`: fixed-rank strategies reset the
-        live rank to ``r_max`` there (clients re-slice, Alg. 2), while
-        rank-changing ones (``rank_contract="stacked"``) keep the live
-        rank their aggregation wrote -- read it from the output pairs.
+        Stacks the uploads and routes the round through a cached
+        :class:`~repro.core.plan.CompiledRound` (packed buffers, one
+        fused launch per bucket -- see :meth:`plan`); the per-leaf
+        ``aggregate_tree*`` paths remain the plan's oracles and the
+        in-trace fallback (``use_plan=False``, or leaves/ranks hidden by
+        jit tracing).  ``donate=True`` donates ``prev_global``'s A/B
+        buffers to the round -- the caller must not touch them after.
+
+        Output rank bookkeeping follows :meth:`finalize_tree`: fixed-rank
+        strategies reset the live rank to ``r_max`` (clients re-slice,
+        Alg. 2), while rank-changing ones (``rank_contract="stacked"``)
+        keep the live rank their aggregation wrote -- read it from the
+        output pairs.
         """
         from repro.lora import adapter_masks
 
@@ -528,6 +638,13 @@ class AggregationStrategy:
         w = jnp.asarray(weights, jnp.float32)
         prev = prev_global if self.retains_prev else None
         kind = resolve_backend(backend, self)
+        if use_plan:
+            round_ = self._plan_round(
+                stacked, kind, r_max=r_max, client_ranks=client_ranks,
+                prev=prev, mesh=mesh, client_axis=client_axis,
+                interpret=interpret)
+            if round_ is not None:
+                return round_(stacked, w, prev, donate=donate)
         if kind == "pallas":
             out = self.aggregate_tree_pallas(stacked, w, client_ranks, prev,
                                              r_max=r_max,
@@ -717,6 +834,7 @@ class FedAvgStrategy(AggregationStrategy):
     pallas_method = "zeropad"          # full-rank masks => weighted mean
     # the default fold IS the exact streaming form of a weighted mean
     supports_incremental = True
+    plan_mode = "mean"
 
     def leaf(self, stacked, mask, weights, prev=None):
         return fedavg_leaf(stacked, weights)
@@ -730,6 +848,7 @@ class ZeropadStrategy(AggregationStrategy):
     norm_by = "weight"
     supports_pallas = True
     pallas_method = "zeropad"
+    plan_mode = "mean"
     # zeropad = weighted mean of masked uploads, so the default fold's
     # running mix streams it exactly (a single-element aggregate is the
     # masked upload; rows nobody owns stay exactly zero through mixing)
@@ -749,6 +868,7 @@ class RBLAStrategy(AggregationStrategy):
     supports_pallas = True
     pallas_method = "rbla"
     supports_incremental = True
+    plan_mode = "mean"
 
     def leaf(self, stacked, mask, weights, prev=None):
         return rbla_leaf(stacked, mask, weights, prev)
@@ -771,6 +891,45 @@ class RBLAStrategy(AggregationStrategy):
             return jnp.zeros(shape, jnp.float32)
         return FoldState(row_mass=_map_pairs(zeros, state.adapters))
 
+    def _packed_fold(self, adapters, upd, row_mass, wa, interpret):
+        """Fold via the packed layout: the state's pairs bucket by
+        (width, dtype) exactly like a cohort plan, and the whole update
+        folds in one jitted call issuing one fused ``axpy_fold`` per
+        bucket -- instead of two launches per pair.  Returns
+        ``(new_adapters, new_row_mass)`` or ``None`` when the layout
+        cannot be packed (the per-pair path handles everything)."""
+        from .plan import (PlanUnavailable, _make_rebuilder, _walk_pairs,
+                           build_fold_plan, build_state_spec)
+        try:
+            spec = build_state_spec(adapters, interpret=interpret)
+            state_pairs = list(_walk_pairs(adapters))
+            upd_pairs = list(_walk_pairs(upd))
+        except PlanUnavailable:
+            return None
+        if len(state_pairs) != len(upd_pairs) or any(
+                sp["A"].shape != up["A"].shape
+                or sp["B"].shape != up["B"].shape
+                for (_, sp), (_, up) in zip(state_pairs, upd_pairs)):
+            return None
+        cache = self.__dict__.setdefault("_fold_plan_cache", {})
+        entry = cache.get(spec)
+        if entry is None:
+            entry = build_fold_plan(self, spec)
+            cache[spec] = entry
+        fold_fn, _ = entry
+        state_ab = [{"A": p["A"], "B": p["B"]} for _, p in state_pairs]
+        upd_ab = [{"A": p["A"], "B": p["B"]} for _, p in upd_pairs]
+        rank_leaves = [jnp.asarray(p["rank"], jnp.int32)
+                       for _, p in upd_pairs]
+        mass_leaves = _flat_pair_values(row_mass)
+        new_ab, new_mass = fold_fn(state_ab, upd_ab, mass_leaves,
+                                   jnp.float32(wa), rank_leaves)
+        rebuild = _make_rebuilder(adapters)
+        new_adapters = rebuild(
+            [{"A": o["A"], "B": o["B"], "rank": p["rank"]}
+             for o, (_, p) in zip(new_ab, state_pairs)])
+        return new_adapters, rebuild(new_mass)
+
     def fold(self, state, update, weight=None, *, fold_state=None,
              backend="auto", interpret=None):
         """Exact streaming RBLA: Eq. 7's per-rank-row weighted mean in
@@ -791,6 +950,7 @@ class RBLAStrategy(AggregationStrategy):
         new_adapters, new_row_mass = state.adapters, fs.row_mass
         rank_seen = update.rank
         wa = w
+        packed = None
         if state.adapters is not None and update.adapters is not None:
             upd = update.adapters
             if rank_seen is None:
@@ -799,6 +959,14 @@ class RBLAStrategy(AggregationStrategy):
                     jax.device_get(p["rank"]))))) or p, upd)
                 rank_seen = max(ranks) if ranks else None
             wa = self._fold_adapter_weight(update, w, int(rank_seen or 1))
+            if kind == "pallas":
+                # packed hot path: one fused axpy_fold launch per
+                # (width, dtype) bucket instead of two per pair
+                packed = self._packed_fold(state.adapters, upd,
+                                           fs.row_mass, wa, interpret)
+        if packed is not None:
+            new_adapters, new_row_mass = packed
+        elif state.adapters is not None and update.adapters is not None:
             masses: list[Array] = []
 
             def fold_pair(pair, upd_pair, dmass):
@@ -888,6 +1056,9 @@ class RBLANormStrategy(AggregationStrategy):
     # homogeneous cohorts do NOT degenerate to FedAvg: the per-row norm
     # restoration rescales even fully-shared rows (that is the point)
     fedavg_equivalence = None
+    # packed masked mean + per-row norm restore; layer-stacked pairs stay
+    # on the (refusing) reference path
+    plan_mode = "mean_norm"
 
     def leaf(self, stacked, mask, weights, prev=None):
         return rbla_leaf(stacked, mask, weights, prev)
@@ -924,6 +1095,7 @@ class SVDStrategy(AggregationStrategy):
     name = "svd"
     norm_by = "mask"
     supports_distributed = False
+    plan_mode = "jit"                  # per-pair SVDs, one jitted round
     # FedAvg-equivalence holds in product space only when the truncated
     # SVD is lossless (sum of client ranks <= r_out), which a random
     # cohort does not guarantee -- declared None; the exactness case is
@@ -992,6 +1164,12 @@ class FloraStrategy(AggregationStrategy):
     supports_pallas = True
     supports_distributed = True
     norm_by = "weight"
+    plan_mode = "stack"
+    # exact streaming below the cap: fold keeps a per-pair segment ledger
+    # (FoldState.extra) and re-scales B columns in place, so one-at-a-time
+    # folding reproduces the one-shot cohort stack bit-for-allclose; at a
+    # cap crossing it re-projects in product space (see fold's docstring)
+    supports_incremental = True
     stack_r_cap: int | None = None     # None -> 2 * r_max at aggregation
     prev_weight: float = 1.0           # prev global mass / mean client mass
 
@@ -1135,28 +1313,203 @@ class FloraStrategy(AggregationStrategy):
         return out                       # live ranks already written
 
     # ---------------------------------------------------- per-update fold --
+    def init_fold(self, state: ServerState) -> FoldState:
+        """Open a per-pair segment ledger anchored at ``state``: the
+        anchor enters the stream as the prev contributor (its B columns
+        currently carry scale 1)."""
+        if state.adapters is None:
+            return FoldState()
+        pairs = []
+
+        def grab(pair):
+            r_live = int(np.max(np.asarray(jax.device_get(pair["rank"]))))
+            pairs.append({
+                "prev_rank": r_live,       # anchor segment rows
+                "seg_ranks": [],           # client segment ranks, in order
+                "seg_w": [],               # client segment masses
+                # applied B-column scales, [prev] + clients, aligned with
+                # the segment order; the anchor starts unscaled
+                "applied": [1.0] if r_live else [],
+                "anchor_mass": None,       # set after a cap re-projection
+            })
+            return pair
+        _map_pairs(grab, state.adapters)
+        return FoldState(extra={"w_list": [], "pairs": pairs})
+
     def fold(self, state, update, weight=None, *, fold_state=None,
              backend="auto", interpret=None):
-        """Streaming stack: the current global enters as the prev
-        contributor with mass equal to everything folded so far, and the
-        arriving client is stacked after it -- a stale contributor is
-        *down-weighted* (small ``w`` shrinks its B-column scale), never
-        dropped.  Approximate vs the one-shot cohort aggregate only in
-        the original prev's mass bookkeeping (one-shot uses
-        ``prev_weight x mean cohort mass``, which streaming cannot know
-        up front); :class:`repro.fl.AsyncAggregator` replays the round
-        buffer when exact parity is required.
+        """Exact streaming stack (below the cap): every contributor owns
+        a disjoint B-column segment, and the one-shot scales
+        ``m_i_hat * R_out / r_i`` change *multiplicatively* as the cohort
+        grows -- so the fold keeps a per-pair ledger of segment ranks,
+        masses, and currently-applied scales (:class:`FoldState.extra`)
+        and re-scales existing columns by ``desired / applied`` before
+        writing the arriving client's rows at the next static offset.
+        Folding a cohort one update at a time therefore reproduces the
+        one-shot cohort :meth:`aggregate` exactly (the anchor's mass is
+        re-derived as ``prev_weight x mean of the weights seen so far``,
+        which at the last fold equals the one-shot bookkeeping).
+
+        A stale update is *down-weighted* -- its small effective mass
+        shrinks its segment's scale -- never dropped.
+
+        When a fold would cross ``stack_r_cap``, the ledgered stack is
+        re-projected in product space back to ``r_max`` (the same SVD the
+        one-shot over-cap path runs, on the mathematically identical
+        matrix) and the re-projected state becomes a fresh anchor whose
+        mass is everything folded so far; streaming after a mid-stream
+        crossing can differ from a one-shot that truncated only once.
         """
         fs = fold_state if fold_state is not None else self.init_fold(state)
+        if fs.extra is None:
+            fs = dataclasses.replace(self.init_fold(state), mass=fs.mass,
+                                     n_folds=fs.n_folds)
         w = float(update.n_examples if weight is None else weight)
         if w <= 0:
             raise ValueError(f"fold needs a positive weight, got {w}")
-        prev_mass = fs.mass if fs.n_folds else self.prev_weight * w
-        strat = self.with_options(prev_weight=prev_mass / w)
-        new_state = strat.aggregate(state, [update], weights=[w],
-                                    backend=backend)
-        return new_state, FoldState(mass=prev_mass + w,
-                                    n_folds=fs.n_folds + 1)
+
+        new_adapters = state.adapters
+        extra = fs.extra
+        rank_seen = update.rank
+        if state.adapters is not None and update.adapters is not None:
+            w_list = extra["w_list"] + [w]
+            mean_w = sum(w_list) / len(w_list)
+            idx = [0]
+            new_pairs = []
+
+            def fold_pair(pair, upd_pair):
+                meta = extra["pairs"][idx[0]]
+                idx[0] += 1
+                rk = np.asarray(jax.device_get(upd_pair["rank"]))
+                if rk.size > 1 and not np.all(rk == rk.flat[0]):
+                    # same contract the one-shot path enforces in
+                    # _concrete_ranks: segment offsets must be shared
+                    # across layers
+                    raise NotImplementedError(
+                        "flora supports layer-stacked pairs only when "
+                        "each client's rank is uniform across layers")
+                r_upd = int(rk.max()) if rk.size else 0
+                storage = pair["A"].shape[-2]
+                cap = self.resolve_cap(state.r_max, r_storage=storage)
+                self._validate_cap(cap, np.asarray([r_upd]), state.r_max)
+                prev_rank = meta["prev_rank"]
+                prev_mass = (meta["anchor_mass"]
+                             if meta["anchor_mass"] is not None
+                             else self.prev_weight * mean_w)
+                seg_ranks = (([prev_rank] if prev_rank else [])
+                             + meta["seg_ranks"]
+                             + ([r_upd] if r_upd else []))
+                masses = (([prev_mass] if prev_rank else [])
+                          + meta["seg_w"] + ([w] if r_upd else []))
+                if not seg_ranks:
+                    raise ValueError("flora: empty fold (rank 0 update "
+                                     "into an empty state)")
+                r_out = int(sum(seg_ranks))
+                m = np.asarray(masses, np.float64)
+                mhat = m / (m.sum() + _EPS)
+                A, B = pair["A"], pair["B"]
+                off = r_out - r_upd        # the new segment's row offset
+
+                if r_out <= cap:
+                    desired = mhat * (float(r_out)
+                                      / np.asarray(seg_ranks, np.float64))
+                    # re-scale every existing segment's B columns in place
+                    applied = meta["applied"] + ([1.0] if r_upd else [])
+                    colscale = np.ones(storage, np.float32)
+                    o = 0
+                    for j, rj in enumerate(seg_ranks):
+                        colscale[o:o + rj] = desired[j] / applied[j]
+                        o += rj
+                    B = B.astype(jnp.float32) * jnp.asarray(colscale)
+                    if r_upd:
+                        B = B.at[..., :, off:off + r_upd].set(
+                            jnp.float32(desired[-1])
+                            * upd_pair["B"][..., :, :r_upd].astype(
+                                jnp.float32))
+                        A = A.at[..., off:off + r_upd, :].set(
+                            upd_pair["A"][..., :r_upd, :].astype(A.dtype))
+                    new_pairs.append({
+                        "prev_rank": prev_rank,
+                        "seg_ranks": meta["seg_ranks"]
+                        + ([r_upd] if r_upd else []),
+                        "seg_w": meta["seg_w"] + ([w] if r_upd else []),
+                        "applied": list(desired),
+                        "anchor_mass": meta["anchor_mass"],
+                    })
+                    rank_out = r_out
+                else:
+                    # cap crossing: product-space re-projection to r_max,
+                    # over the mathematically identical matrix the
+                    # one-shot over-cap path builds
+                    r_t = min(int(state.r_max if state.r_max is not None
+                                  else storage), cap)
+                    desired = mhat * (float(r_t)
+                                      / np.asarray(seg_ranks, np.float64))
+                    applied = meta["applied"] + ([1.0] if r_upd else [])
+                    colscale = np.zeros(storage, np.float32)
+                    o = 0
+                    n_old = len(seg_ranks) - (1 if r_upd else 0)
+                    for j in range(n_old):
+                        rj = seg_ranks[j]
+                        colscale[o:o + rj] = desired[j] / applied[j]
+                        o += rj
+                    Bs = B.astype(jnp.float32) * jnp.asarray(colscale)
+                    delta = jnp.einsum("...or,...ri->...oi", Bs,
+                                       A.astype(jnp.float32))
+                    if r_upd:
+                        delta = delta + jnp.float32(desired[-1]) * \
+                            jnp.einsum(
+                                "...or,...ri->...oi",
+                                upd_pair["B"][..., :, :r_upd].astype(
+                                    jnp.float32),
+                                upd_pair["A"][..., :r_upd, :].astype(
+                                    jnp.float32))
+                    u, s, vt = jnp.linalg.svd(delta, full_matrices=False)
+                    u, s, vt = (u[..., :, :r_t], s[..., :r_t],
+                                vt[..., :r_t, :])
+                    sq = jnp.sqrt(s)
+                    B = pad_to_rank((u * sq[..., None, :]).astype(B.dtype),
+                                    -1, storage)
+                    A = pad_to_rank((sq[..., :, None] * vt).astype(A.dtype),
+                                    -2, storage)
+                    new_pairs.append({
+                        "prev_rank": r_t, "seg_ranks": [], "seg_w": [],
+                        "applied": [1.0],
+                        "anchor_mass": float(m.sum()),
+                    })
+                    rank_out = r_t
+                return {"A": A, "B": B.astype(pair["B"].dtype),
+                        "rank": jnp.full_like(
+                            jnp.asarray(pair["rank"], jnp.int32),
+                            rank_out)}
+
+            new_adapters = _map_pairs(fold_pair, state.adapters,
+                                      update.adapters, strict=True)
+            extra = {"w_list": w_list, "pairs": new_pairs}
+            if rank_seen is None:
+                rank_seen = max((p["seg_ranks"][-1] for p in new_pairs
+                                 if p["seg_ranks"]), default=None)
+
+        kind = resolve_backend(backend, self)
+        if kind == "distributed":      # one update: nothing to distribute
+            kind = "ref"
+        new_base = state.base_trainable
+        if jax.tree.leaves(update.base_trainable):
+            new_base = _mix_trees(state.base_trainable,
+                                  update.base_trainable,
+                                  w / (fs.mass + w), kind=kind,
+                                  interpret=interpret)
+
+        new_fs = FoldState(mass=fs.mass + w, n_folds=fs.n_folds + 1,
+                           extra=extra)
+        current_rank = (adapter_live_ranks(new_adapters)
+                        if new_adapters is not None else state.current_rank)
+        return ServerState(
+            adapters=new_adapters, base_trainable=new_base,
+            round=state.round + 1, r_max=state.r_max,
+            client_ranks=(jnp.asarray([rank_seen], jnp.int32)
+                          if rank_seen is not None else state.client_ranks),
+            current_rank=current_rank), new_fs
 
     # ------------------------------------------------- (b) tree traversal --
     def aggregate_tree(self, stacked_tree, mask_tree, weights,

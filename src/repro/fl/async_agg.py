@@ -8,7 +8,9 @@ service** instead of a pure per-round function: an
 folds individual :class:`~repro.core.ClientUpdate` objects into it as they
 arrive, discounting each update by how *stale* it is -- how many server
 versions were published between the global the client trained on and the
-moment its update lands.
+moment its update lands (``staleness_clock="version"``), or how much
+service-clock time elapsed since the client pulled
+(``staleness_clock="wall"``).
 
 Staleness weighting follows FedAsync (Xie et al., 2019): the update's
 mass ``n_examples`` is scaled by a schedule ``s(tau)`` in ``(0, 1]``:
@@ -99,6 +101,13 @@ class AsyncAggregator:
         or when the oldest buffered update has waited ``deadline`` clock
         units (checked on :meth:`submit` / :meth:`maybe_flush` -- the
         event loop supplies the clock).  ``buffer_size=1`` is fully async.
+    staleness_clock
+        What ``tau`` measures: ``"version"`` (default) counts server
+        versions published between the client's pull and its upload
+        (FedAsync's discrete clock); ``"wall"`` measures elapsed service
+        clock -- ``now - pulled_at`` -- so a schedule's decay ``a`` /
+        grace ``b`` are in the event loop's time units and slow *wall
+        time*, not fold churn, is what discounts an update.
     backend
         Execution backend for the underlying strategy paths
         (``auto | ref | pallas | distributed``).
@@ -109,9 +118,12 @@ class AsyncAggregator:
         accumulated state the new retention baseline).
     """
 
+    STALENESS_CLOCKS = ("version", "wall")
+
     def __init__(self, strategy, state: ServerState, *,
                  staleness="constant", staleness_a: float = 0.5,
-                 staleness_b: float = 4.0, buffer_size: int = 1,
+                 staleness_b: float = 4.0, staleness_clock: str = "version",
+                 buffer_size: int = 1,
                  deadline: float | None = None, backend: str = "auto",
                  replay_window: int = 64):
         if buffer_size < 1:
@@ -119,9 +131,14 @@ class AsyncAggregator:
         if replay_window < 1:
             raise ValueError(
                 f"replay_window must be >= 1, got {replay_window}")
+        if staleness_clock not in self.STALENESS_CLOCKS:
+            raise ValueError(
+                f"unknown staleness_clock {staleness_clock!r}; options: "
+                f"{self.STALENESS_CLOCKS}")
         self.strategy = get_strategy(strategy)
         self.state = state
         self.backend = backend
+        self.staleness_clock = staleness_clock
         self.staleness_fn = make_staleness_fn(
             staleness, a=staleness_a, b=staleness_b)
         self.buffer = UpdateBuffer(size=buffer_size, deadline=deadline)
@@ -150,16 +167,22 @@ class AsyncAggregator:
         return s
 
     def submit(self, update: ClientUpdate, model_version: int | None = None,
-               now: float = 0.0) -> bool:
+               now: float = 0.0, pulled_at: float | None = None) -> bool:
         """Receive one client update; fold or buffer it.
 
-        ``model_version`` is the server version the client pulled before
-        training (``None`` = fresh); staleness is ``version -
-        model_version``.  ``now`` is the service clock (any monotone unit)
+        Staleness follows :attr:`staleness_clock`: on ``"version"`` it is
+        ``version - model_version`` (the server version the client pulled
+        before training; ``None`` = fresh), on ``"wall"`` it is ``now -
+        pulled_at`` (the service clock when the client pulled; ``None`` =
+        fresh).  ``now`` is the service clock (any monotone unit), also
         used for deadline flushes.  Returns True when the state advanced.
         """
-        tau = (0.0 if model_version is None
-               else max(0.0, float(self.version - model_version)))
+        if self.staleness_clock == "wall":
+            tau = (0.0 if pulled_at is None
+                   else max(0.0, float(now) - float(pulled_at)))
+        else:
+            tau = (0.0 if model_version is None
+                   else max(0.0, float(self.version - model_version)))
         weight = self.staleness_weight(tau) * float(update.n_examples)
         self.n_received += 1
         self.staleness_sum += tau

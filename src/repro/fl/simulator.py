@@ -88,7 +88,9 @@ class AsyncFLConfig(FLConfig):
     """
     staleness: str = "polynomial"      # constant | polynomial | hinge
     staleness_a: float = 0.5           # decay strength (exponent / slope)
-    staleness_b: float = 4.0           # hinge grace period (versions)
+    staleness_b: float = 4.0           # hinge grace period (versions / s)
+    staleness_clock: str = "version"   # version (folds behind) | wall
+                                       # (simulated seconds since pull)
     buffer_size: int = 1               # semi-async: flush at K updates
     buffer_deadline_s: float | None = None   # ... or on deadline (sim s)
     latency_median_s: float = 1.0      # fleet-median report latency
@@ -251,6 +253,7 @@ def run_async_simulation(cfg: AsyncFLConfig,
     agg = AsyncAggregator(
         rig.strategy, rig.state, staleness=cfg.staleness,
         staleness_a=cfg.staleness_a, staleness_b=cfg.staleness_b,
+        staleness_clock=cfg.staleness_clock,
         buffer_size=cfg.buffer_size, deadline=cfg.buffer_deadline_s,
         backend=cfg.agg_backend)
     latency = ClientLatencyModel(
@@ -261,21 +264,23 @@ def run_async_simulation(cfg: AsyncFLConfig,
     total = cfg.total_updates or cfg.rounds * cfg.n_clients
     eval_every = cfg.eval_every or cfg.n_clients
     rng = np.random.default_rng(cfg.seed)
-    heap: list = []     # (done_time, tiebreak, client, version, snapshot)
+    # (done_time, tiebreak, client, version, pull_time, snapshot)
+    heap: list = []
     seq = 0
 
     def dispatch(ci: int, now: float) -> None:
         nonlocal seq
         # the client trains on the global it pulls NOW; by the time its
         # update lands the server may have moved on -- that gap is the
-        # staleness the aggregator discounts
+        # staleness the aggregator discounts (in versions or sim-seconds,
+        # per cfg.staleness_clock)
         local_ad = None
         if rig.mode == "lora":
             local_ad = set_ranks(agg.state.adapters, clients[ci].rank,
                                  r_storage=cfg.r_max)
         snapshot = (local_ad, agg.state.base_trainable)
         heapq.heappush(heap, (now + latency.sample(ci), seq, ci,
-                              agg.version, snapshot))
+                              agg.version, now, snapshot))
         seq += 1
 
     for ci in range(cfg.n_clients):
@@ -288,7 +293,8 @@ def run_async_simulation(cfg: AsyncFLConfig,
     received = 0
     t_wall = time.time()
     while received < total:
-        now, _, ci, version, (local_ad, base_snap) = heapq.heappop(heap)
+        (now, _, ci, version, pulled_at,
+         (local_ad, base_snap)) = heapq.heappop(heap)
         # a buffered deadline may fall before this arrival: honor it at
         # its own simulated time, not piggy-backed on the next upload
         due_t = agg.next_deadline()
@@ -303,7 +309,7 @@ def run_async_simulation(cfg: AsyncFLConfig,
             adapters=res.adapters if rig.mode == "lora" else None,
             base_trainable=res.base_trainable,
             n_examples=float(max(c.n, 1)), rank=c.rank),
-            model_version=version, now=now)
+            model_version=version, now=now, pulled_at=pulled_at)
         losses.append(float(res.loss))
         received += 1
         dispatch(ci, now)

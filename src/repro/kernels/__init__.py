@@ -6,11 +6,14 @@ against the ref.py oracles; pass ``interpret=False`` to force compilation.
 """
 from .lora_matmul.ops import lora_dense_apply, lora_matmul
 from .lora_matmul.ref import lora_matmul_ref
-from .rbla_agg.ops import axpy_fold, flora_stack, rbla_agg
-from .rbla_agg.ref import axpy_fold_ref, flora_stack_ref, rbla_agg_ref
+from .rbla_agg.ops import (axpy_fold, flora_stack, packed_agg,
+                           packed_stack, rbla_agg)
+from .rbla_agg.ref import (axpy_fold_ref, flora_stack_ref, packed_agg_ref,
+                           rbla_agg_ref)
 from .ssd_scan.ops import ssd_scan
 from .ssd_scan.ref import ssd_scan_ref
 
 __all__ = ["lora_dense_apply", "lora_matmul", "lora_matmul_ref",
            "axpy_fold", "axpy_fold_ref", "flora_stack", "flora_stack_ref",
+           "packed_agg", "packed_agg_ref", "packed_stack",
            "rbla_agg", "rbla_agg_ref", "ssd_scan", "ssd_scan_ref"]

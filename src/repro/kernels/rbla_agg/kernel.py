@@ -49,6 +49,139 @@ def _kernel(ranks_ref, weights_ref, x_ref, o_ref, *, n_clients: int,
     o_ref[...] = out.astype(o_ref.dtype)
 
 
+def _packed_kernel(weights_ref, masks_ref, x_ref, *rest, n_clients: int,
+                   norm_by: str, has_prev: bool):
+    """Fused whole-round aggregation over a packed bucket (plan path).
+
+    ``x``: (N, R, D) packed rows from *every* pair of the cohort that
+    shares this bucket's (width, dtype); ``masks``: (N, R) per-row owner
+    indicators precomputed on the host from the cohort's rank multiset
+    (delta_{i,r} in packed-row form -- layer-stacked pairs just occupy
+    more rows); optional ``prev``: (R, D) packed previous global, the
+    fallback for rows no participant owns.  One launch aggregates what
+    the per-pair path spread over 2 x n_pairs launches.
+    """
+    if has_prev:
+        prev_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+    br = x_ref.shape[1]
+    num = jnp.zeros(o_ref.shape, jnp.float32)
+    den = jnp.zeros((br, 1), jnp.float32)
+    wtot = jnp.zeros((), jnp.float32)
+    for nix in range(n_clients):                     # static unroll
+        m = masks_ref[nix][:, None]                  # (br, 1)
+        w = weights_ref[nix]
+        num = num + (w * m) * x_ref[nix].astype(jnp.float32)
+        den = den + w * m
+        wtot = wtot + w
+    if norm_by == "mask":
+        fb = (prev_ref[...].astype(jnp.float32) if has_prev
+              else jnp.zeros_like(num))
+        out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), fb)
+    else:
+        out = num / wtot
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def packed_agg_pallas(x, masks, weights, prev=None, *,
+                      norm_by: str = "mask", br=DEFAULT_BR, bd=DEFAULT_BD,
+                      interpret=True):
+    """x: (N, R, D); masks: (N, R) f32; weights: (N,) f32; prev: (R, D)
+    or None -> (R, D).  The plan path's fused bucket reduction: like
+    :func:`rbla_agg_pallas` but with an explicit per-row owner-mask
+    matrix (packed rows span many pairs, so a single rank vector cannot
+    describe them) and prev-global retention fused in."""
+    n, r, d = x.shape
+    if masks.shape != (n, r):
+        raise ValueError(f"packed_agg: masks {masks.shape} != ({n}, {r})")
+    if prev is not None and prev.shape != (r, d):
+        raise ValueError(f"packed_agg: prev {prev.shape} != ({r}, {d})")
+    br, bd = min(br, r), min(bd, d)
+    grid = (pl.cdiv(r, br), pl.cdiv(d, bd))
+    in_specs = [
+        pl.BlockSpec((n,), lambda i, j: (0,)),
+        pl.BlockSpec((n, br), lambda i, j: (0, i)),
+        pl.BlockSpec((n, br, bd), lambda i, j: (0, i, j)),
+    ]
+    args = [weights.astype(jnp.float32), masks.astype(jnp.float32), x]
+    if prev is not None:
+        in_specs.append(pl.BlockSpec((br, bd), lambda i, j: (i, j)))
+        args.append(prev)
+    return pl.pallas_call(
+        functools.partial(_packed_kernel, n_clients=n, norm_by=norm_by,
+                          has_prev=prev is not None),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(*args)
+
+
+def _packed_stack_kernel(scales_ref, x_ref, *rest, copies_x, copies_prev,
+                         has_prev: bool):
+    """Fused FLoRA stacking over a packed bucket: every (pair, layer,
+    contributor) placement is one static sliced copy/scale.  ``copies_x``
+    entries are ``(client, src_row, dst_row, rows, scale_idx)``;
+    ``copies_prev`` drop the client index and read the packed previous
+    global.  Rows no copy touches stay zero (the cap padding)."""
+    if has_prev:
+        prev_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+    o_ref[...] = jnp.zeros(o_ref.shape, o_ref.dtype)
+    for (src, s0, d0, nr, si) in copies_x:
+        o_ref[d0:d0 + nr, :] = (
+            scales_ref[si] * x_ref[src, s0:s0 + nr, :].astype(jnp.float32)
+        ).astype(o_ref.dtype)
+    for (s0, d0, nr, si) in copies_prev:
+        o_ref[d0:d0 + nr, :] = (
+            scales_ref[si] * prev_ref[s0:s0 + nr, :].astype(jnp.float32)
+        ).astype(o_ref.dtype)
+
+
+def packed_stack_pallas(x, scales, prev=None, *, copies_x=(),
+                        copies_prev=(), out_rows: int, bd=DEFAULT_BD,
+                        interpret=True):
+    """x: (N, R_in, D); scales: (S,) f32; prev: (R_prev, D) or None ->
+    (out_rows, D).  One launch stacks every packable pair of the cohort
+    (the plan path's flora bucket); :func:`flora_stack_pallas` remains
+    the single-pair form."""
+    n, r_in, d = x.shape
+    for (src, s0, d0, nr, si) in copies_x:
+        if not (0 <= src < n and 0 <= s0 and s0 + nr <= r_in
+                and 0 <= d0 and d0 + nr <= out_rows and 0 <= si):
+            raise ValueError(f"packed_stack: bad copy {(src, s0, d0, nr, si)}")
+    if copies_prev and prev is None:
+        raise ValueError("packed_stack: prev copies but no prev buffer")
+    for (s0, d0, nr, si) in copies_prev:
+        if not (0 <= s0 and s0 + nr <= prev.shape[0]
+                and 0 <= d0 and d0 + nr <= out_rows):
+            raise ValueError(f"packed_stack: bad prev copy {(s0, d0, nr, si)}")
+    bd = min(bd, d)
+    grid = (pl.cdiv(d, bd),)
+    in_specs = [
+        pl.BlockSpec((scales.shape[0],), lambda j: (0,)),
+        pl.BlockSpec((n, r_in, bd), lambda j: (0, 0, j)),
+    ]
+    args = [scales.astype(jnp.float32), x]
+    if prev is not None:
+        in_specs.append(pl.BlockSpec((prev.shape[0], bd), lambda j: (0, j)))
+        args.append(prev)
+    return pl.pallas_call(
+        functools.partial(_packed_stack_kernel,
+                          copies_x=tuple(copies_x),
+                          copies_prev=tuple(copies_prev),
+                          has_prev=prev is not None),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((out_rows, bd), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((out_rows, d), x.dtype),
+        interpret=interpret,
+    )(*args)
+
+
 def _stack_kernel(scales_ref, x_ref, o_ref, *, segs, offs):
     """FLoRA stacking: pure copy/scale, no reduction.
 

@@ -1,4 +1,15 @@
-"""jit'd wrapper: pad to tile alignment, flatten trailing dims, dispatch."""
+"""jit'd wrappers: pad to tile alignment, flatten trailing dims, dispatch.
+
+Two tiers:
+
+* the public entry points (``rbla_agg``, ``flora_stack``, ``axpy_fold``,
+  ``packed_agg``, ``packed_stack``) are jitted and **count as one tracked
+  dispatch each** (``repro.core.plan.dispatch_counter``) -- they are the
+  per-pair legacy path the aggregation benchmarks compare against;
+* the ``*_inline`` variants run un-jitted for use *inside* an already
+  compiled plan round (``repro.core.plan``), where a whole FL round is a
+  single traced function and extra jit layers would only add overhead.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,12 +18,20 @@ import jax
 import jax.numpy as jnp
 
 from ..runtime import auto_interpret
-from .kernel import axpy_fold_pallas, flora_stack_pallas, rbla_agg_pallas
-from .ref import axpy_fold_ref, flora_stack_ref, rbla_agg_ref
+from .kernel import (axpy_fold_pallas, flora_stack_pallas,
+                     packed_agg_pallas, packed_stack_pallas,
+                     rbla_agg_pallas)
+from .ref import (axpy_fold_ref, flora_stack_ref, packed_agg_ref,
+                  rbla_agg_ref)
 
 
 def _pad_to(v: int, mult: int) -> int:
     return (v + mult - 1) // mult * mult
+
+
+def _count_dispatch(n: int = 1) -> None:
+    from repro.core.plan import dispatch_counter
+    dispatch_counter.inc(n)
 
 
 #: legacy method names -> the kernel's two normalization modes.  FedAvg at
@@ -20,15 +39,9 @@ def _pad_to(v: int, mult: int) -> int:
 _NORM_BY = {"rbla": "mask", "zeropad": "weight"}
 
 
-@functools.partial(jax.jit, static_argnames=("method", "interpret"))
-def rbla_agg(x, ranks, weights, *, method: str = "rbla", interpret=None):
-    """Aggregate stacked client tensors (N, R, *dims) with rank-row masks.
-
-    Trailing dims are flattened into D; padding rows/cols are masked out of
-    the result.  Matches ``repro.core.rbla_leaf`` semantics.
-    ``interpret=None`` auto-detects: compiled on TPU/GPU, interpreter on
-    CPU.
-    """
+def rbla_agg_inline(x, ranks, weights, *, method: str = "rbla",
+                    interpret=None):
+    """Un-jitted :func:`rbla_agg` body (for use inside compiled plans)."""
     interpret = auto_interpret(interpret)
     try:
         norm_by = _NORM_BY[method]
@@ -49,20 +62,114 @@ def rbla_agg(x, ranks, weights, *, method: str = "rbla", interpret=None):
     return out[:r, :d].reshape((r,) + lead)
 
 
-@functools.partial(jax.jit, static_argnames=("segs", "out_rows",
-                                             "interpret"))
-def flora_stack(x, scales, *, segs: tuple[int, ...], out_rows: int,
-                interpret=None):
-    """Stack contributors' leading rank rows (FLoRA aggregation):
+@functools.partial(jax.jit, static_argnames=("method", "interpret"))
+def _rbla_agg_jit(x, ranks, weights, *, method, interpret):
+    return rbla_agg_inline(x, ranks, weights, method=method,
+                           interpret=interpret)
 
-        out[off_i : off_i + segs[i]] = scales[i] * x[i, :segs[i]]
 
-    with ``off_i`` the running sum of ``segs`` -- a pure copy/scale, no
-    reduction.  x: (N, R, *dims); trailing dims are flattened into D and
-    restored; lane/sublane padding is stripped from the result.  ``segs``
-    must be static (the output layout depends on them); recompiles per
-    distinct cohort rank multiset.
+def rbla_agg(x, ranks, weights, *, method: str = "rbla", interpret=None):
+    """Aggregate stacked client tensors (N, R, *dims) with rank-row masks.
+
+    Trailing dims are flattened into D; padding rows/cols are masked out of
+    the result.  Matches ``repro.core.rbla_leaf`` semantics.
+    ``interpret=None`` auto-detects: compiled on TPU/GPU, interpreter on
+    CPU.
     """
+    _count_dispatch()
+    return _rbla_agg_jit(x, ranks, weights, method=method,
+                         interpret=interpret)
+
+
+def packed_agg_inline(x, masks, weights, prev=None, *,
+                      norm_by: str = "mask", interpret=None):
+    """Un-jitted fused-bucket aggregation (the compiled plan's hot op).
+
+    ``x``: (N, R, *dims) packed rows spanning many pairs; ``masks``:
+    (N, R) per-row owner indicators; ``prev``: (R, *dims) packed previous
+    global retained where no participant owns a row (``norm_by="mask"``
+    only).  Trailing dims flatten into D; padding is stripped.
+    """
+    interpret = auto_interpret(interpret)
+    n, r = x.shape[:2]
+    lead = x.shape[2:]
+    d = 1
+    for v in lead:
+        d *= v
+    x2 = x.reshape(n, r, d)
+    rp, dp = _pad_to(max(r, 1), 8), _pad_to(max(d, 1), 128)
+    x2 = jnp.pad(x2, ((0, 0), (0, rp - r), (0, dp - d)))
+    m2 = jnp.pad(jnp.asarray(masks, jnp.float32), ((0, 0), (0, rp - r)))
+    pv = None
+    if prev is not None:
+        pv = jnp.pad(prev.reshape(r, d).astype(x2.dtype),
+                     ((0, rp - r), (0, dp - d)))
+    out = packed_agg_pallas(x2, m2, jnp.asarray(weights, jnp.float32), pv,
+                            norm_by=norm_by, interpret=interpret)
+    return out[:r, :d].reshape((r,) + lead)
+
+
+@functools.partial(jax.jit, static_argnames=("norm_by", "interpret"))
+def _packed_agg_jit(x, masks, weights, prev, *, norm_by, interpret):
+    return packed_agg_inline(x, masks, weights, prev, norm_by=norm_by,
+                             interpret=interpret)
+
+
+def packed_agg(x, masks, weights, prev=None, *, norm_by: str = "mask",
+               interpret=None):
+    """Jitted :func:`packed_agg_inline` (standalone use and tests)."""
+    _count_dispatch()
+    return _packed_agg_jit(x, masks, weights, prev, norm_by=norm_by,
+                           interpret=interpret)
+
+
+def packed_stack_inline(x, scales, prev=None, *, copies_x=(),
+                        copies_prev=(), out_rows: int, interpret=None):
+    """Un-jitted fused stacking over a packed bucket (flora plan path).
+
+    ``x``: (N, R_in, D); ``scales``: (S,); ``prev``: (R_prev, D) or None;
+    the static ``copies_*`` describe every (pair, layer, contributor)
+    placement (see ``packed_stack_pallas``).  D is padded to lane
+    alignment and stripped; row padding never collides with copies.
+    """
+    interpret = auto_interpret(interpret)
+    n, r_in, d = x.shape
+    rp, dp = _pad_to(max(r_in, 1), 8), _pad_to(max(d, 1), 128)
+    op = _pad_to(max(out_rows, 1), 8)
+    x2 = jnp.pad(x, ((0, 0), (0, rp - r_in), (0, dp - d)))
+    pv = None
+    if prev is not None:
+        r_prev = prev.shape[0]
+        pv = jnp.pad(prev, ((0, _pad_to(max(r_prev, 1), 8) - r_prev),
+                            (0, dp - d)))
+    out = packed_stack_pallas(x2, jnp.asarray(scales, jnp.float32), pv,
+                              copies_x=tuple(copies_x),
+                              copies_prev=tuple(copies_prev),
+                              out_rows=op, interpret=interpret)
+    return out[:out_rows, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("copies_x", "copies_prev",
+                                             "out_rows", "interpret"))
+def _packed_stack_jit(x, scales, prev, *, copies_x, copies_prev, out_rows,
+                      interpret):
+    return packed_stack_inline(x, scales, prev, copies_x=copies_x,
+                               copies_prev=copies_prev, out_rows=out_rows,
+                               interpret=interpret)
+
+
+def packed_stack(x, scales, prev=None, *, copies_x=(), copies_prev=(),
+                 out_rows: int, interpret=None):
+    """Jitted :func:`packed_stack_inline` (standalone use and tests)."""
+    _count_dispatch()
+    return _packed_stack_jit(x, scales, prev, copies_x=tuple(copies_x),
+                             copies_prev=tuple(copies_prev),
+                             out_rows=out_rows, interpret=interpret)
+
+
+def flora_stack_inline(x, scales, *, segs: tuple[int, ...], out_rows: int,
+                       interpret=None):
+    """Un-jitted :func:`flora_stack` body."""
     interpret = auto_interpret(interpret)
     n, r = x.shape[:2]
     lead = x.shape[2:]
@@ -78,18 +185,33 @@ def flora_stack(x, scales, *, segs: tuple[int, ...], out_rows: int,
     return out[:out_rows, :d].reshape((out_rows,) + lead)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def axpy_fold(y, x, alpha, *, interpret=None):
-    """Fold one update into the live state: ``y + alpha * (x - y)``.
+@functools.partial(jax.jit, static_argnames=("segs", "out_rows",
+                                             "interpret"))
+def _flora_stack_jit(x, scales, *, segs, out_rows, interpret):
+    return flora_stack_inline(x, scales, segs=segs, out_rows=out_rows,
+                              interpret=interpret)
 
-    y, x: (R, *dims) with the rank-row axis leading; ``alpha`` is a scalar
-    (uniform server mixing, FedAsync-style) or an (R,) vector (per-row
-    mixing -- RBLA's running masked mean folds only the rows the arriving
-    client owns).  Trailing dims are flattened into D; sublane/lane
-    padding is stripped from the result.  This is the async aggregation
-    service's per-update hot path: cost is O(R*D) regardless of how many
-    clients ever reported.
+
+def flora_stack(x, scales, *, segs: tuple[int, ...], out_rows: int,
+                interpret=None):
+    """Stack contributors' leading rank rows (FLoRA aggregation):
+
+        out[off_i : off_i + segs[i]] = scales[i] * x[i, :segs[i]]
+
+    with ``off_i`` the running sum of ``segs`` -- a pure copy/scale, no
+    reduction.  x: (N, R, *dims); trailing dims are flattened into D and
+    restored; lane/sublane padding is stripped from the result.  ``segs``
+    must be static (the output layout depends on them); recompiles per
+    distinct cohort rank multiset.
     """
+    _count_dispatch()
+    return _flora_stack_jit(x, scales, segs=segs, out_rows=out_rows,
+                            interpret=interpret)
+
+
+def axpy_fold_inline(y, x, alpha, *, interpret=None):
+    """Un-jitted :func:`axpy_fold` body (for use inside compiled plans --
+    the packed per-update fold runs one of these per bucket)."""
     interpret = auto_interpret(interpret)
     r = y.shape[0]
     lead = y.shape[1:]
@@ -107,5 +229,28 @@ def axpy_fold(y, x, alpha, *, interpret=None):
     return out[:r, :d].reshape((r,) + lead)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _axpy_fold_jit(y, x, alpha, *, interpret):
+    return axpy_fold_inline(y, x, alpha, interpret=interpret)
+
+
+def axpy_fold(y, x, alpha, *, interpret=None):
+    """Fold one update into the live state: ``y + alpha * (x - y)``.
+
+    y, x: (R, *dims) with the rank-row axis leading; ``alpha`` is a scalar
+    (uniform server mixing, FedAsync-style) or an (R,) vector (per-row
+    mixing -- RBLA's running masked mean folds only the rows the arriving
+    client owns).  Trailing dims are flattened into D; sublane/lane
+    padding is stripped from the result.  This is the async aggregation
+    service's per-update hot path: cost is O(R*D) regardless of how many
+    clients ever reported.
+    """
+    _count_dispatch()
+    return _axpy_fold_jit(y, x, alpha, interpret=interpret)
+
+
 __all__ = ["rbla_agg", "rbla_agg_ref", "flora_stack", "flora_stack_ref",
-           "axpy_fold", "axpy_fold_ref"]
+           "axpy_fold", "axpy_fold_ref", "packed_agg", "packed_agg_ref",
+           "packed_stack", "rbla_agg_inline", "packed_agg_inline",
+           "packed_stack_inline", "flora_stack_inline",
+           "axpy_fold_inline"]

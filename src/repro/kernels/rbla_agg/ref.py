@@ -29,6 +29,24 @@ def flora_stack_ref(x, scales, segs, out_rows: int):
     return jnp.pad(stacked, ((0, pad), (0, 0))).astype(x.dtype)
 
 
+def packed_agg_ref(x, masks, weights, prev=None, norm_by: str = "mask"):
+    """Oracle for the fused-bucket kernel: x (N, R, D), masks (N, R),
+    weights (N,), prev (R, D) or None -> (R, D).  Matches the packed-row
+    form of rbla_leaf (``norm_by="mask"``: per-row owner-mass mean with
+    prev retention) / zeropad_leaf (``norm_by="weight"``: total-mass
+    dilution)."""
+    xf = x.astype(jnp.float32)
+    m = masks.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    num = jnp.einsum("n,nr,nrd->rd", w, m, xf)
+    if norm_by == "mask":
+        den = jnp.einsum("n,nr->r", w, m)[:, None]
+        fb = (jnp.zeros_like(num) if prev is None
+              else prev.astype(jnp.float32))
+        return jnp.where(den > 0, num / (den + 1e-12), fb).astype(x.dtype)
+    return (num / (jnp.sum(w) + 1e-12)).astype(x.dtype)
+
+
 def rbla_agg_ref(x, ranks, weights, method: str = "rbla"):
     """x: (N, R, D); ranks: (N,); weights: (N,) -> (R, D)."""
     try:

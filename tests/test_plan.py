@@ -1,0 +1,432 @@
+"""Compiled AggregationPlan tests: packing parity, caching, donation.
+
+The parity/property suites already drive every strategy through
+``aggregate_adapters`` (which routes through plans); this file covers the
+plan machinery itself: cache hit/miss keying, re-planning on
+``with_options``, buffer donation (no-use-after-donate), the fused
+layer-stacked path, the packed kernels against their oracles, the packed
+per-update fold, dispatch accounting, and the in-jit fallback.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.plan import (CohortSpec, PlanUnavailable, build_cohort_spec,
+                             dispatch_counter)
+from repro.core.strategy import (ClientUpdate, ServerState, get_strategy,
+                                 stack_trees)
+from repro.lora import init_adapters, init_pair, mask_pair, set_ranks
+
+from _cohorts import R_MAX, SPECS, assert_trees_close, hetero_cohort
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def fresh(method, **options):
+    """A configured copy with its own (empty) plan cache."""
+    s = get_strategy(method)
+    if s.rank_contract == "stacked" and "stack_r_cap" not in options:
+        options["stack_r_cap"] = 64
+    return s.with_options(**options) if options else s.with_options()
+
+
+def layer_stacked_cohort(n=4, L=3, r=8, fo=12, fi=16, seed=0):
+    rng = np.random.default_rng(seed)
+    ranks = rng.integers(1, r + 1, n)
+    cohort = []
+    for i in range(n):
+        p = init_pair(jax.random.PRNGKey(i), fo, fi, r, int(ranks[i]),
+                      leading=(L,))
+        p = {"A": p["A"] + jnp.asarray(rng.normal(size=p["A"].shape),
+                                       jnp.float32),
+             "B": p["B"] + jnp.asarray(rng.normal(size=p["B"].shape),
+                                       jnp.float32),
+             "rank": p["rank"]}
+        cohort.append({"blk": mask_pair(p)})
+    w = jnp.asarray(rng.uniform(0.5, 2.0, n), jnp.float32)
+    return cohort, jnp.asarray(ranks, jnp.int32), w
+
+
+# ------------------------------------------------------------ plan caching --
+def test_plan_cache_hits_on_same_cohort_spec():
+    s = fresh("rbla")
+    adapters, ranks, w = hetero_cohort(4, seed=1)
+    for _ in range(3):
+        s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                             backend="ref")
+    assert s.plan_stats == {"hits": 2, "misses": 1}
+
+
+def test_plan_cache_misses_on_rank_multiset_change():
+    s = fresh("rbla")
+    a1, r1, w1 = hetero_cohort(4, seed=1, r_lo=1, r_hi=3)
+    a2, r2, w2 = hetero_cohort(4, seed=2, r_lo=4, r_hi=R_MAX)
+    s.aggregate_adapters(a1, w1, r_max=R_MAX, client_ranks=r1,
+                         backend="ref")
+    s.aggregate_adapters(a2, w2, r_max=R_MAX, client_ranks=r2,
+                         backend="ref")
+    # different rank multisets are different specs -> two plans...
+    assert s.plan_stats == {"hits": 0, "misses": 2}
+    # ...and re-running either cohort hits its cached plan
+    s.aggregate_adapters(a1, w1, r_max=R_MAX, client_ranks=r1,
+                         backend="ref")
+    assert s.plan_stats == {"hits": 1, "misses": 2}
+
+
+def test_plan_cache_keys_on_backend_and_prev():
+    s = fresh("rbla")
+    adapters, ranks, w = hetero_cohort(3, seed=3)
+    prev = init_adapters(jax.random.PRNGKey(5), SPECS, R_MAX, R_MAX)
+    s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                         backend="ref")
+    s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                         backend="pallas")
+    s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                         prev_global=prev, backend="ref")
+    assert s.plan_stats["misses"] == 3 and s.plan_stats["hits"] == 0
+
+
+def test_with_options_drops_compiled_plans():
+    s = fresh("flora")
+    adapters, ranks, w = hetero_cohort(3, seed=4)
+    s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                         backend="ref")
+    assert s.plan_stats["misses"] == 1
+    s2 = s.with_options(stack_r_cap=48)
+    assert "_plan_cache" not in s2.__dict__
+    s2.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                          backend="ref")
+    assert s2.plan_stats == {"hits": 0, "misses": 1}
+    assert s.plan_stats["misses"] == 1       # original cache untouched
+
+
+def test_plan_api_direct_and_unsupported_backend_raises():
+    s = fresh("rbla")
+    adapters, ranks, w = hetero_cohort(3, seed=5)
+    stacked = stack_trees(adapters)
+    spec = build_cohort_spec(stacked, kind="ref", r_max=R_MAX,
+                            client_ranks=ranks)
+    round_ = s.plan(None, spec)
+    out = round_(stacked, w)
+    want = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                client_ranks=ranks, backend="ref",
+                                use_plan=False)
+    assert_trees_close(out, want)
+    with pytest.raises(NotImplementedError, match="rbla_norm"):
+        bad = build_cohort_spec(stacked, kind="pallas", r_max=R_MAX,
+                                client_ranks=ranks)
+        get_strategy("rbla_norm").plan(None, bad)
+
+
+def test_cohort_spec_is_hashable_and_value_keyed():
+    adapters, ranks, w = hetero_cohort(3, seed=6)
+    stacked = stack_trees(adapters)
+    s1 = build_cohort_spec(stacked, kind="ref", r_max=R_MAX,
+                           client_ranks=ranks)
+    s2 = build_cohort_spec(stack_trees(adapters), kind="ref", r_max=R_MAX,
+                           client_ranks=ranks)
+    assert isinstance(s1, CohortSpec) and s1 == s2 and hash(s1) == hash(s2)
+
+
+def test_spec_build_unavailable_under_tracing_and_on_bare_leaves():
+    adapters, ranks, w = hetero_cohort(2, seed=7)
+    stacked = stack_trees(adapters)
+    with pytest.raises(PlanUnavailable):
+        build_cohort_spec({"t": jnp.ones((2, 4, 3))}, kind="ref")
+
+    def traced(tree):
+        return build_cohort_spec(tree, kind="ref")
+    with pytest.raises(PlanUnavailable):
+        jax.eval_shape(lambda t: (traced(t), t)[1], stacked)
+
+
+def test_aggregate_adapters_inside_jit_falls_back_to_legacy():
+    """Under jit tracing the cohort cannot be described host-side; the
+    round must silently run the in-trace reference path and agree."""
+    adapters, ranks, w = hetero_cohort(3, seed=8)
+    s = fresh("rbla")
+
+    @jax.jit
+    def round_(ads, wv):
+        return s.aggregate_adapters(ads, wv, r_max=R_MAX,
+                                    client_ranks=ranks)
+    got = round_(adapters, w)
+    want = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                client_ranks=ranks, backend="ref",
+                                use_plan=False)
+    assert_trees_close(got, want)
+
+
+def test_mean_executor_shared_across_rank_multisets():
+    """A new rank multiset is a new (cheap) plan but NOT a new XLA
+    compile: mean-mode executors key on shapes only -- owner masks and
+    ranks enter as runtime data.  A long-lived service with random
+    cohort selection must not recompile every round."""
+    s = fresh("rbla")
+    for seed, (lo, hi) in enumerate([(1, 3), (4, R_MAX), (2, 5)]):
+        a, r, w = hetero_cohort(4, seed=seed, r_lo=lo, r_hi=hi)
+        s.aggregate_adapters(a, w, r_max=R_MAX, client_ranks=r,
+                             backend="ref")
+    assert s.plan_stats["misses"] == 3          # three plans...
+    assert len(s.__dict__["_plan_exec_cache"]) == 1   # ...one executor
+
+
+def test_plan_cache_is_bounded_lru():
+    from repro.core import strategy as strategy_mod
+    s = fresh("rbla")
+    old = strategy_mod.PLAN_CACHE_SIZE
+    strategy_mod.PLAN_CACHE_SIZE = 2
+    try:
+        for seed in range(4):
+            a, r, w = hetero_cohort(3, seed=seed)
+            s.aggregate_adapters(a, w, r_max=R_MAX, client_ranks=r,
+                                 backend="ref")
+        assert len(s.__dict__["_plan_cache"]) <= 2
+    finally:
+        strategy_mod.PLAN_CACHE_SIZE = old
+
+
+def test_flora_fold_rejects_nonuniform_layer_ranks():
+    """fold enforces the same uniform-per-layer contract the one-shot
+    path does, with the same actionable error (not a shape crash)."""
+    from repro.lora import init_pair, mask_pair
+    s = fresh("flora", stack_r_cap=64)
+    L, r, fo, fi = 2, 8, 12, 16
+    state_pair = init_pair(jax.random.PRNGKey(0), fo, fi, r, 4,
+                           leading=(L,))
+    upd_pair = dict(init_pair(jax.random.PRNGKey(1), fo, fi, r, 3,
+                              leading=(L,)))
+    upd_pair["rank"] = jnp.asarray([3, 1], jnp.int32)   # non-uniform
+    state = ServerState(adapters={"blk": mask_pair(state_pair)},
+                        base_trainable={}, r_max=r)
+    upd = ClientUpdate(adapters={"blk": mask_pair(upd_pair)},
+                       base_trainable={}, n_examples=1.0)
+    with pytest.raises(NotImplementedError, match="uniform"):
+        s.fold(state, upd, backend="ref")
+
+
+# --------------------------------------------------------------- donation --
+def test_donated_prev_buffers_are_consumed():
+    s = fresh("rbla")
+    adapters, ranks, w = hetero_cohort(4, seed=9, r_lo=2, r_hi=3)
+    prev = init_adapters(jax.random.PRNGKey(11), SPECS, R_MAX, R_MAX)
+    keep = jax.tree.map(lambda x: np.asarray(x), prev)   # host copy
+    out = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                               client_ranks=ranks, prev_global=prev,
+                               backend="ref", donate=True)
+    want = s.aggregate_adapters(
+        adapters, w, r_max=R_MAX, client_ranks=ranks,
+        prev_global=jax.tree.map(jnp.asarray, keep), backend="ref",
+        use_plan=False)
+    assert_trees_close(out, want)
+    # the no-use-after-donate guard: donated A/B buffers are dead, and
+    # touching them afterwards raises instead of reading stale memory
+    donated = prev["fc1"]["A"]
+    if donated.is_deleted():                 # backend supports donation
+        with pytest.raises(RuntimeError):
+            np.asarray(donated)
+
+
+def test_non_donating_call_leaves_prev_alive():
+    s = fresh("rbla")
+    adapters, ranks, w = hetero_cohort(4, seed=10, r_lo=2, r_hi=3)
+    prev = init_adapters(jax.random.PRNGKey(12), SPECS, R_MAX, R_MAX)
+    s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                         prev_global=prev, backend="ref")
+    assert not prev["fc1"]["A"].is_deleted()
+    np.asarray(prev["fc1"]["A"])             # still readable
+
+
+# -------------------------------------------------- layer-stacked packing --
+@pytest.mark.parametrize("method", ["rbla", "zeropad", "fedavg"])
+def test_layer_stacked_pairs_run_fused_on_pallas(method):
+    """The acceptance criterion: layer-stacked (leading-dim) pairs no
+    longer fall back to reference leaf math inside the Pallas backend --
+    they pack into buckets like everything else."""
+    cohort, ranks, w = layer_stacked_cohort()
+    s = fresh(method)
+    # oracle: the pre-plan path (whose layer-stacked pairs used the
+    # reference per-pair leaf math)
+    want = s.aggregate_adapters(cohort, w, r_max=8, client_ranks=ranks,
+                                backend="pallas", use_plan=False)
+    got = s.aggregate_adapters(cohort, w, r_max=8, client_ranks=ranks,
+                               backend="pallas")
+    assert_trees_close(want, got, msg=method)
+    rd = next(r for r in s.__dict__["_plan_cache"].values()
+              if r.spec.kind == "pallas")
+    assert rd.kind == "packed" and rd.n_fallback_pairs == 0
+
+
+def test_layer_stacked_flora_packs_into_stack_buckets():
+    cohort, ranks, w = layer_stacked_cohort(seed=3)
+    s = fresh("flora", stack_r_cap=64)
+    want = s.aggregate_adapters(cohort, w, r_max=8, client_ranks=ranks,
+                                backend="pallas", use_plan=False)
+    got = s.aggregate_adapters(cohort, w, r_max=8, client_ranks=ranks,
+                               backend="pallas")
+    assert_trees_close(want, got)
+    rd = next(r for r in s.__dict__["_plan_cache"].values()
+              if r.spec.kind == "pallas")
+    assert rd.kind == "packed" and rd.n_fallback_pairs == 0
+
+
+def test_flora_over_cap_pairs_fall_back_inside_the_plan():
+    adapters, ranks, w = hetero_cohort(4, seed=13, r_lo=4, r_hi=R_MAX)
+    s = fresh("flora", stack_r_cap=R_MAX)    # sum(ranks) certainly > cap
+    want = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                client_ranks=ranks, backend="pallas",
+                                use_plan=False)
+    got = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                               client_ranks=ranks, backend="pallas")
+    assert_trees_close(want, got, rtol=1e-3, atol=1e-4)
+    rd = next(r for r in s.__dict__["_plan_cache"].values()
+              if r.spec.kind == "pallas")
+    assert rd.n_fallback_pairs == len(SPECS)
+
+
+# ------------------------------------------------------ dispatch counting --
+def test_plan_round_is_one_tracked_dispatch():
+    s = fresh("rbla")
+    adapters, ranks, w = hetero_cohort(4, seed=14)
+    s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                         backend="pallas")              # build plan
+    dispatch_counter.reset()
+    s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                         backend="pallas")
+    assert dispatch_counter.reset() == 1
+
+
+def test_legacy_pallas_path_dispatches_per_pair():
+    s = fresh("rbla")
+    adapters, ranks, w = hetero_cohort(4, seed=14)
+    s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                         backend="pallas", use_plan=False)   # compile
+    dispatch_counter.reset()
+    s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=ranks,
+                         backend="pallas", use_plan=False)
+    # two kernel launches (A + B) per pair: the dispatch gap the plan
+    # closes (>= 5x for any tree with >= 3 pairs)
+    assert dispatch_counter.reset() == 2 * len(SPECS)
+
+
+# --------------------------------------------------------- packed kernels --
+def test_packed_agg_kernel_matches_oracle():
+    from repro.kernels import packed_agg, packed_agg_ref
+    rng = np.random.default_rng(0)
+    n, r, d = 5, 24, 40
+    x = jnp.asarray(rng.normal(size=(n, r, d)), jnp.float32)
+    masks = jnp.asarray(rng.integers(0, 2, (n, r)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, n), jnp.float32)
+    prev = jnp.asarray(rng.normal(size=(r, d)), jnp.float32)
+    for norm_by, pv in (("mask", prev), ("mask", None), ("weight", None)):
+        got = packed_agg(x, masks, w, pv, norm_by=norm_by, interpret=True)
+        want = packed_agg_ref(x, masks, w, pv, norm_by=norm_by)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{norm_by}/prev={pv is not None}")
+
+
+def test_packed_stack_kernel_places_and_scales():
+    from repro.kernels import packed_stack
+    rng = np.random.default_rng(1)
+    n, r_in, d = 3, 8, 17
+    x = jnp.asarray(rng.normal(size=(n, r_in, d)), jnp.float32)
+    prev = jnp.asarray(rng.normal(size=(4, d)), jnp.float32)
+    scales = jnp.asarray([1.0, 0.5, 2.0], jnp.float32)
+    #          (client, src_row, dst_row, rows, scale_idx)
+    copies_x = ((0, 0, 2, 3, 1), (2, 1, 5, 2, 2))
+    copies_prev = ((1, 0, 2, 0),)
+    out = packed_stack(x, scales, prev, copies_x=copies_x,
+                       copies_prev=copies_prev, out_rows=9, interpret=True)
+    want = np.zeros((9, d), np.float32)
+    want[2:5] = 0.5 * np.asarray(x)[0, 0:3]
+    want[5:7] = 2.0 * np.asarray(x)[2, 1:3]
+    want[0:2] = 1.0 * np.asarray(prev)[1:3]
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6, atol=1e-6)
+
+
+def test_packed_stack_rejects_bad_copies():
+    from repro.kernels import packed_stack
+    x = jnp.ones((2, 4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="bad copy"):
+        packed_stack(x, jnp.ones(1), copies_x=((0, 0, 0, 9, 0),),
+                     out_rows=4, interpret=True)
+    with pytest.raises(ValueError, match="no prev"):
+        packed_stack(x, jnp.ones(1), copies_prev=((0, 0, 2, 0),),
+                     out_rows=4, interpret=True)
+
+
+# -------------------------------------------------------- packed fold path --
+def test_rbla_packed_fold_matches_ref_fold_and_launch_count():
+    s = get_strategy("rbla")
+    adapters, ranks, w, bases = hetero_cohort(4, seed=15, with_bases=True)
+
+    def mk():
+        return ServerState(
+            adapters=init_adapters(jax.random.PRNGKey(2), SPECS, R_MAX,
+                                   R_MAX),
+            base_trainable={"b": jnp.zeros(4)}, r_max=R_MAX)
+    st_r, fs_r = mk(), s.init_fold(mk())
+    st_p, fs_p = mk(), s.init_fold(mk())
+    for i in range(4):
+        u = ClientUpdate(adapters=adapters[i], base_trainable=bases[i],
+                         n_examples=float(w[i]), rank=int(ranks[i]))
+        st_r, fs_r = s.fold(st_r, u, fold_state=fs_r, backend="ref")
+        st_p, fs_p = s.fold(st_p, u, fold_state=fs_p, backend="pallas")
+    assert_trees_close(st_r.adapters, st_p.adapters, 1e-4, 1e-5)
+    assert_trees_close(fs_r.row_mass, fs_p.row_mass, 1e-5, 1e-6)
+    # the packed fold buckets SPECS' two widths x (A, B) into <= 4 fused
+    # launches per fold, vs 2 launches per pair on the legacy path
+    entry = next(iter(s.__dict__["_fold_plan_cache"].values()))
+    assert entry[1] <= 2 * len(SPECS)
+
+
+def test_flora_streaming_fold_is_exact_below_cap_nonuniform():
+    """Satellite gate: flora's fold streams the one-shot stack exactly
+    below the cap -- non-uniform masses included (the old fold was only
+    exact for uniform ones)."""
+    s = fresh("flora", stack_r_cap=256)
+    adapters, ranks, w, bases = hetero_cohort(5, seed=16, with_bases=True)
+    updates = [ClientUpdate(adapters=adapters[i], base_trainable=bases[i],
+                            n_examples=float(w[i]), rank=int(ranks[i]))
+               for i in range(5)]
+
+    def mk():
+        rs = s.server_storage_rank(R_MAX)
+        return ServerState(
+            adapters=init_adapters(jax.random.PRNGKey(6), SPECS, rs, R_MAX),
+            base_trainable={"b": jnp.zeros(4)}, r_max=R_MAX)
+    st, fs = mk(), s.init_fold(mk())
+    for u in updates:
+        st, fs = s.fold(st, u, fold_state=fs, backend="ref")
+    want = s.aggregate(mk(), updates, weights=w, backend="ref")
+    assert_trees_close(st.adapters, want.adapters, 2e-5, 2e-6)
+    assert_trees_close(st.base_trainable, want.base_trainable, 2e-5, 2e-6)
+
+
+def test_flora_streaming_fold_cap_crossing_reprojects():
+    s = fresh("flora", stack_r_cap=12)
+    adapters, ranks, w, bases = hetero_cohort(4, seed=17, r_lo=3, r_hi=6,
+                                              with_bases=True)
+
+    def mk():
+        rs = s.server_storage_rank(R_MAX)
+        return ServerState(
+            adapters=init_adapters(jax.random.PRNGKey(8), SPECS, rs, R_MAX),
+            base_trainable={"b": jnp.zeros(4)}, r_max=R_MAX)
+    st, fs = mk(), s.init_fold(mk())
+    crossed = False
+    for i in range(4):
+        u = ClientUpdate(adapters=adapters[i], base_trainable=bases[i],
+                         n_examples=float(w[i]), rank=int(ranks[i]))
+        before = int(np.max(np.asarray(st.adapters["fc1"]["rank"])))
+        st, fs = s.fold(st, u, fold_state=fs, backend="ref")
+        after = int(np.max(np.asarray(st.adapters["fc1"]["rank"])))
+        if after < before + int(ranks[i]):
+            crossed = True
+            assert after == R_MAX        # re-projected back to r_max
+    assert crossed, "cohort never crossed the cap; fixture broken"
+    assert np.isfinite(np.asarray(st.adapters["fc1"]["A"])).all()
+    for leaf in jax.tree.leaves(st.adapters):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
