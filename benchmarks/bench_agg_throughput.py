@@ -14,10 +14,16 @@ cohort and reports, per strategy x backend:
 * plan-cache hit rate and the plan's fused-launch count,
 * a plan-vs-legacy numerical parity check (the CI smoke gate).
 
+A separate **svd leg** gates the factored low-rank engine
+(``repro.core.lowrank``): at (m, n, sum r) = (768, 768, 32) the
+strategy's factored path must match the explicit dense fallback in
+product space and beat it by >= 5x wall-clock on CPU.
+
 ``--json PATH`` writes the machine-readable ``BENCH_agg.json`` so the
 perf trajectory is tracked across PRs; ``--smoke`` runs a tiny case and
 exits non-zero if the plan path and the legacy shim disagree beyond
-tolerance or the dispatch reduction falls under 5x.
+tolerance, the dispatch reduction falls under 5x, or the factored svd
+speedup falls under 5x.
 """
 from __future__ import annotations
 
@@ -33,7 +39,15 @@ from repro.core import get_strategy, list_strategies
 from repro.core.plan import dispatch_counter
 from repro.lora import init_adapters, set_ranks
 
-BENCH_METHODS = ("rbla", "zeropad", "fedavg", "rbla_ranked", "flora")
+BENCH_METHODS = ("rbla", "zeropad", "fedavg", "rbla_ranked", "flora",
+                 "svd")
+
+#: the factored-SVD gate case: min(m, n) = 768 >= 8 * sum(ranks) = 256,
+#: where the dense O(m*n*min(m,n)) SVD is far off the factored
+#: O((m+n)*k^2 + k^3) engine -- the smoke gate requires >= 5x
+SVD_GATE_SPECS = {"proj": (768, 768)}
+SVD_GATE_CLIENTS = 4
+SVD_GATE_RANK = 8                      # sum(r_i) = 32
 
 #: transformer-sized adapter tree: {path: (fan_out, fan_in)}
 FULL_SPECS = {
@@ -154,6 +168,67 @@ def run_case(specs, n, r_max, iters, tol):
     return results, failures
 
 
+def run_svd_factored_case(iters, tol):
+    """The lowrank-engine leg: the svd strategy's factored path vs the
+    explicit dense fallback at (m, n, sum r) = (768, 768, 32).
+
+    Gates (hard in ``--smoke``): the served products must agree (factors
+    are only unique up to the truncation basis, so parity is checked in
+    product space) and the factored round must be >= 5x faster than the
+    dense one on CPU.
+    """
+    rng = np.random.default_rng(7)
+    cohort = []
+    keys = jax.random.split(jax.random.PRNGKey(7), SVD_GATE_CLIENTS)
+    for i in range(SVD_GATE_CLIENTS):
+        ad = init_adapters(keys[i], SVD_GATE_SPECS, SVD_GATE_RANK,
+                           SVD_GATE_RANK)
+        ad = jax.tree.map(
+            lambda x: x + jnp.asarray(rng.normal(size=x.shape) * 0.1,
+                                      x.dtype)
+            if x.dtype == jnp.float32 else x, ad)
+        cohort.append(ad)
+    ranks = jnp.full((SVD_GATE_CLIENTS,), SVD_GATE_RANK, jnp.int32)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, SVD_GATE_CLIENTS), jnp.float32)
+    factored = get_strategy("svd").with_options()          # auto->factored
+    dense = get_strategy("svd").with_options(svd_method="dense")
+
+    def run(s):
+        return s.aggregate_adapters(cohort, w, r_max=SVD_GATE_RANK,
+                                    client_ranks=ranks, backend="ref")
+
+    out_f = run(factored)
+    out_d = run(dense)
+    # product-space parity, normalized by the served update's own scale
+    delta_f = np.asarray(out_f["proj"]["B"], np.float32) @ np.asarray(
+        out_f["proj"]["A"], np.float32)
+    delta_d = np.asarray(out_d["proj"]["B"], np.float32) @ np.asarray(
+        out_d["proj"]["A"], np.float32)
+    scale = max(float(np.abs(delta_d).max()), 1e-12)
+    rel_diff = float(np.abs(delta_f - delta_d).max()) / scale
+    factored_us, _ = bench(lambda: run(factored), iters)
+    dense_us, _ = bench(lambda: run(dense), iters)
+    speedup = dense_us / max(factored_us, 1e-9)
+    m, n = next(iter(SVD_GATE_SPECS.values()))
+    k = SVD_GATE_CLIENTS * SVD_GATE_RANK
+    print(f"agg/svd_factored/m{m}_n{n}_k{k},{factored_us:.0f},"
+          "lowrank-factored")
+    print(f"agg/svd_dense/m{m}_n{n}_k{k},{dense_us:.0f},dense-fallback")
+    row = {
+        "case": {"m": m, "n": n, "sum_ranks": k},
+        "dense_us": round(dense_us, 1),
+        "factored_us": round(factored_us, 1),
+        "speedup": round(speedup, 2),
+        "product_rel_diff": rel_diff,
+    }
+    failures = []
+    if rel_diff > tol:
+        failures.append(
+            f"svd factored-vs-dense product diff {rel_diff:.2e} > "
+            f"tol {tol:.0e}")
+    return row, failures
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true",
@@ -170,6 +245,8 @@ def main(argv=None):
     r_max = 8 if args.smoke else 32
     print(f"# registered strategies: {','.join(list_strategies())}")
     results, failures = run_case(specs, n, r_max, args.iters, args.tol)
+    svd_row, svd_failures = run_svd_factored_case(args.iters, args.tol)
+    failures += svd_failures
 
     pallas_rows = [r for r in results
                    if r["backend"] == "pallas" and r["dispatch_reduction"]]
@@ -180,6 +257,7 @@ def main(argv=None):
         "mean_ref_wall_clock_speedup": round(float(np.mean(
             [r["speedup"] for r in ref_rows])), 2) if ref_rows else None,
         "max_abs_diff": max(r["max_abs_diff"] for r in results),
+        "svd_factored_speedup": svd_row["speedup"],
     }
     print(f"# summary: {json.dumps(summary)}")
 
@@ -191,6 +269,7 @@ def main(argv=None):
             "case": {"n_clients": n, "r_max": r_max,
                      "n_pairs": len(specs)},
             "results": results,
+            "svd_factored": svd_row,
             "summary": summary,
         }
         with open(args.json, "w") as f:
@@ -206,8 +285,11 @@ def main(argv=None):
         if bad:
             print(f"# DISPATCH GATE FAILURE: {bad}")
             raise SystemExit(1)
+        if svd_row["speedup"] < 5:
+            print(f"# SVD FACTORED GATE FAILURE: {svd_row}")
+            raise SystemExit(1)
         print("# smoke gate OK: plan==shim within tolerance, "
-              "dispatch reduction >= 5x")
+              "dispatch reduction >= 5x, factored svd >= 5x over dense")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,9 @@ from .aggregation import (aggregate, fedavg_leaf, rbla_leaf, zeropad_leaf,
                           AGGREGATORS)
 from .variants import (rank_proportional_weights, rbla_norm_leaf,
                        svd_project_pair)
+from .lowrank import (dense_svd, factored_svd, product_factors,
+                      randomized_svd, randomized_svd_product,
+                      svd_project_stacked, truncated_svd_product)
 from .strategy import (AggregationStrategy, ClientUpdate, FoldState,
                        ServerState, BACKENDS, adapter_live_ranks,
                        get_strategy, list_strategies, register_strategy,
@@ -25,7 +28,11 @@ __all__ = [
     "stacked_rank_masks", "aggregate", "fedavg_leaf", "rbla_leaf",
     "zeropad_leaf", "AGGREGATORS", "make_distributed_aggregator",
     "rbla_allreduce", "rbla_tree_allreduce", "rank_proportional_weights",
-    "rbla_norm_leaf", "svd_project_pair", "AggregationStrategy",
+    "rbla_norm_leaf", "svd_project_pair",
+    "dense_svd", "factored_svd", "product_factors", "randomized_svd",
+    "randomized_svd_product", "svd_project_stacked",
+    "truncated_svd_product",
+    "AggregationStrategy",
     "ClientUpdate", "FoldState", "ServerState", "BACKENDS",
     "adapter_live_ranks",
     "CohortSpec", "CompiledRound", "PlanUnavailable", "build_cohort_spec",

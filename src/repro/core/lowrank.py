@@ -1,0 +1,256 @@
+"""Batched low-rank factorization engine: SVD without the dense detour.
+
+Every SVD the aggregation server runs -- the ``svd`` strategy's product-
+space truncation, flora's over-cap re-projection, the streaming fold's
+cap-crossing re-projection -- factors a matrix that is *already* a
+product of low-rank factors::
+
+    Delta = B @ A,   B: (..., m, k),  A: (..., k, n),  k = sum(r_i)
+
+Densifying ``Delta`` and calling ``jnp.linalg.svd`` costs
+``O(m * n * min(m, n))`` flops plus an ``m x n`` temporary per pair per
+round -- the server bottleneck the paper flags for product-space
+aggregation.  But ``rank(Delta) <= k``, so the SVD only ever lives in a
+k-dimensional subspace:
+
+* :func:`factored_svd` -- **exact** truncated SVD in factored form.  QR
+  the stacked B-columns and the A-rows, SVD only the small
+  ``(k x k)`` core ``R_B @ R_A^T``::
+
+      B = Q_B R_B,  A^T = Q_A R_A
+      R_B @ R_A^T = U_c S V_c^T          # (k x k) dense work only
+      Delta = (Q_B U_c) S (V_c^T Q_A^T)  # never materialized
+
+  Cost ``O((m + n) k^2 + k^3)``; no ``m x n`` intermediate exists at any
+  point.  The result is the exact SVD of ``B @ A`` (it is an algebraic
+  re-association, not an approximation), so truncating to ``r_out``
+  matches the dense oracle whenever both would.
+
+* :func:`randomized_svd` -- Halko-Martinsson-Tropp range-finder with
+  oversampling ``p`` and ``q`` subspace (power) iterations, for inputs
+  that are *genuinely dense* (no factored form exists);
+  :func:`randomized_svd_product` applies the same sketch to factored
+  inputs with every product associated through the factors, so it too
+  never forms the dense matrix.
+
+* :func:`truncated_svd_product` -- the dispatcher.  ``method="auto"``
+  uses the factored path while ``k <= min(m, n)`` (where it is both
+  exact and cheaper) and falls back to the **dense** path beyond --
+  this module's dense branch is the only place in ``repro`` allowed to
+  materialize ``B @ A`` for an SVD.
+
+All entry points batch over arbitrary leading dims (``jnp.linalg.qr`` /
+``svd`` batch natively) and are vmappable across same-shape pairs --
+``repro.core.plan``'s svd lowering stacks a cohort's same-shape pairs
+and runs ONE batched factored SVD per (shape, dtype) bucket.
+
+Computation is float32 throughout; callers cast the factors back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .aggregation import _EPS
+from .masks import pad_to_rank
+
+Array = jax.Array
+
+
+def _f32(x: Array) -> Array:
+    return x.astype(jnp.float32)
+
+
+def _truncate(u: Array, s: Array, vt: Array, r_out: int):
+    """Keep the leading ``r_out`` triplets, zero-padding if the factored
+    rank is smaller (static shapes: callers embed ``r_out`` in buffers)."""
+    k = s.shape[-1]
+    if k >= r_out:
+        return (u[..., :, :r_out], s[..., :r_out], vt[..., :r_out, :])
+    return (pad_to_rank(u, -1, r_out), pad_to_rank(s, -1, r_out),
+            pad_to_rank(vt, -2, r_out))
+
+
+def factored_svd(B: Array, A: Array, r_out: int | None = None
+                 ) -> tuple[Array, Array, Array]:
+    """Exact truncated SVD of ``B @ A`` without materializing the product.
+
+    ``B``: (..., m, k); ``A``: (..., k, n) -> ``(U, S, Vt)`` with shapes
+    (..., m, r), (..., r,), (..., r, n), ``r = r_out`` (or the full core
+    rank ``min(m, n, k)`` when ``r_out`` is None).  Exact for any k; the
+    cost win over the dense SVD is ``O((m+n) k^2 + k^3)`` vs
+    ``O(m n min(m, n))``, so prefer it whenever ``k < min(m, n)``
+    (:func:`truncated_svd_product` automates the choice).
+    """
+    Qb, Rb = jnp.linalg.qr(_f32(B))                    # (..., m, kb), (kb, k)
+    Qa, Ra = jnp.linalg.qr(jnp.swapaxes(_f32(A), -1, -2))
+    core = Rb @ jnp.swapaxes(Ra, -1, -2)               # (..., kb, ka): small
+    u, s, vt = jnp.linalg.svd(core, full_matrices=False)
+    if r_out is not None:
+        u, s, vt = _truncate(u, s, vt, r_out)
+    return Qb @ u, s, vt @ jnp.swapaxes(Qa, -1, -2)
+
+
+def dense_svd(B: Array, A: Array, r_out: int | None = None
+              ) -> tuple[Array, Array, Array]:
+    """Dense fallback: materialize ``B @ A`` and SVD it directly.
+
+    The ONLY place in ``repro`` that may run ``jnp.linalg.svd`` on an
+    (out, in)-shaped product -- used when the combined factor rank ``k``
+    exceeds ``min(m, n)`` (the factored path would do more work than the
+    dense one) and by the benchmarks as the cost baseline.
+    """
+    delta = _f32(B) @ _f32(A)
+    u, s, vt = jnp.linalg.svd(delta, full_matrices=False)
+    if r_out is not None:
+        u, s, vt = _truncate(u, s, vt, r_out)
+    return u, s, vt
+
+
+def randomized_svd(M: Array, r_out: int, *, oversample: int = 8,
+                   power_iters: int = 2, key: Array | None = None
+                   ) -> tuple[Array, Array, Array]:
+    """Randomized range-finder SVD (Halko et al., 2011) for dense inputs.
+
+    Samples the range with a Gaussian sketch of width
+    ``min(r_out + oversample, min(m, n))``, runs ``power_iters`` rounds
+    of QR-stabilized subspace iteration (sharpens the spectrum: the
+    approximation error decays with the ``(2q+1)``-th power of the
+    singular-value ratios), then SVDs the small projected matrix.
+    Near-optimal when the spectrum tail beyond ``r_out`` is small;
+    batches over leading dims.
+    """
+    M = _f32(M)
+    m, n = M.shape[-2], M.shape[-1]
+    k = min(r_out + int(oversample), min(m, n))
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    omega = jax.random.normal(key, M.shape[:-2] + (n, k), jnp.float32)
+    Q, _ = jnp.linalg.qr(M @ omega)                    # (..., m, k)
+    for _ in range(int(power_iters)):
+        Z, _ = jnp.linalg.qr(jnp.swapaxes(M, -1, -2) @ Q)
+        Q, _ = jnp.linalg.qr(M @ Z)
+    small = jnp.swapaxes(Q, -1, -2) @ M                # (..., k, n)
+    u, s, vt = jnp.linalg.svd(small, full_matrices=False)
+    return _truncate(Q @ u, s, vt, r_out)
+
+
+def randomized_svd_product(B: Array, A: Array, r_out: int, *,
+                           oversample: int = 8, power_iters: int = 2,
+                           key: Array | None = None
+                           ) -> tuple[Array, Array, Array]:
+    """Range-finder SVD of ``B @ A`` *in factored form*.
+
+    Every sketch and projection associates through the factors --
+    ``M @ Om = B @ (A @ Om)``, ``M^T @ Q = A^T @ (B^T @ Q)``,
+    ``Q^T M = (Q^T B) @ A`` -- so the dense product is never formed:
+    cost ``O((m + n) * k * (r + p))`` per sketch instead of the
+    ``O(m * n * (r + p))`` a materialized sketch would pay.
+    """
+    B, A = _f32(B), _f32(A)
+    m, n = B.shape[-2], A.shape[-1]
+    k = min(r_out + int(oversample), min(m, n))
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    omega = jax.random.normal(key, A.shape[:-2] + (n, k), jnp.float32)
+    Bt, At = jnp.swapaxes(B, -1, -2), jnp.swapaxes(A, -1, -2)
+    Q, _ = jnp.linalg.qr(B @ (A @ omega))              # (..., m, k)
+    for _ in range(int(power_iters)):
+        Z, _ = jnp.linalg.qr(At @ (Bt @ Q))
+        Q, _ = jnp.linalg.qr(B @ (A @ Z))
+    small = (jnp.swapaxes(Q, -1, -2) @ B) @ A          # (..., k, n)
+    u, s, vt = jnp.linalg.svd(small, full_matrices=False)
+    return _truncate(Q @ u, s, vt, r_out)
+
+
+def truncated_svd_product(B: Array, A: Array, r_out: int, *,
+                          method: str = "auto", oversample: int = 8,
+                          power_iters: int = 2, key: Array | None = None
+                          ) -> tuple[Array, Array, Array]:
+    """Truncated SVD of ``B @ A``, routed by ``method``:
+
+    * ``"auto"`` -- factored while ``k <= min(m, n)`` (exact + cheaper;
+      the shapes are static so the choice compiles away), dense beyond;
+    * ``"factored"`` / ``"dense"`` -- force the respective exact path;
+    * ``"randomized"`` -- the factored-form range-finder sketch (an
+      *approximation*; useful when the spectrum decays fast).
+    """
+    m, k, n = B.shape[-2], B.shape[-1], A.shape[-1]
+    if method == "auto":
+        method = "factored" if k <= min(m, n) else "dense"
+    if method == "factored":
+        return factored_svd(B, A, r_out)
+    if method == "dense":
+        return dense_svd(B, A, r_out)
+    if method == "randomized":
+        return randomized_svd_product(B, A, r_out, oversample=oversample,
+                                      power_iters=power_iters, key=key)
+    raise ValueError(f"unknown svd method {method!r}; options: "
+                     "auto | factored | dense | randomized")
+
+
+def product_factors(B: Array, A: Array, r_out: int, *,
+                    method: str = "auto", oversample: int = 8,
+                    power_iters: int = 2, key: Array | None = None
+                    ) -> tuple[Array, Array]:
+    """Re-factor ``B @ A`` into a rank-``r_out`` LoRA pair.
+
+    Returns ``(B_out, A_out)`` = ``(U sqrt(S), sqrt(S) Vt)`` -- the
+    balanced square-root split every re-projection site in the repo uses
+    (flora's cap handling, the svd strategy's output factors).
+    """
+    u, s, vt = truncated_svd_product(B, A, r_out, method=method,
+                                     oversample=oversample,
+                                     power_iters=power_iters, key=key)
+    sq = jnp.sqrt(s)
+    return u * sq[..., None, :], sq[..., :, None] * vt
+
+
+def svd_project_stacked(stacked_B: Array, stacked_A: Array, weights: Array,
+                        r_out: int, *, scales: Array | None = None,
+                        method: str = "auto", oversample: int = 8,
+                        power_iters: int = 2, key: Array | None = None
+                        ) -> tuple[Array, Array]:
+    """Product-space aggregation of stacked LoRA pairs, factored form.
+
+    ``stacked_B``: (n, ..., out, r_st); ``stacked_A``: (n, ..., r_st, in)
+    with the client axis leading and arbitrary layer/expert dims between.
+    The weighted mean of products
+
+        Delta = sum_i (w_i * s_i / sum(w)) * B_i @ A_i
+
+    is *itself* a product of concatenated factors -- client ``i``'s
+    scaled B columns next to everyone else's, its A rows stacked below --
+    so the whole aggregation is one rank-``n*r_st`` factored SVD: no
+    dense Delta, no per-client loop.  Row-masking stays implicit (padded
+    rows are zero, contributing nothing to the product).  ``scales``
+    broadcasts against ``weights`` over (n, *leading rank dims).
+    Returns float32 ``(B_out, A_out)`` with inner dimension ``r_out``.
+    """
+    n, r_st = stacked_A.shape[0], stacked_A.shape[-2]
+    lead_ndim = stacked_B.ndim - 3
+    w = _f32(weights) / (jnp.sum(_f32(weights)) + _EPS)
+    w = w.reshape((n,) + (1,) * lead_ndim)
+    if scales is not None:
+        sc = _f32(scales)
+        # rank dims align with the *trailing* leading dims (the same
+        # convention as the plan's owner masks): pad middle 1s
+        mid = lead_ndim - (sc.ndim - 1)
+        w = w * sc.reshape(sc.shape[:1] + (1,) * mid + sc.shape[1:])
+    # fold the client weight into B, then merge (client, storage-rank)
+    # into one concatenated rank axis of width n * r_st
+    Bw = _f32(stacked_B) * w[..., None, None]
+    Bc = jnp.moveaxis(Bw, 0, -2)                       # (..., out, n, r_st)
+    Bc = Bc.reshape(Bc.shape[:-2] + (n * r_st,))
+    Ac = jnp.moveaxis(_f32(stacked_A), 0, -3)          # (..., n, r_st, in)
+    Ac = Ac.reshape(Ac.shape[:-3] + (n * r_st,) + Ac.shape[-1:])
+    return product_factors(Bc, Ac, r_out, method=method,
+                           oversample=oversample, power_iters=power_iters,
+                           key=key)
+
+
+__all__ = [
+    "factored_svd", "dense_svd", "randomized_svd",
+    "randomized_svd_product", "truncated_svd_product",
+    "product_factors", "svd_project_stacked",
+]

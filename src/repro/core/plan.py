@@ -45,6 +45,7 @@ import numpy as np
 
 from .aggregation import _EPS
 from .compat import shard_map_no_check
+from .masks import pad_to_rank
 
 PyTree = Any
 
@@ -53,6 +54,79 @@ class PlanUnavailable(Exception):
     """A compiled plan cannot be built for these inputs (traced values,
     bare leaves, mismatched prev shapes); callers fall back to the
     per-leaf reference path, which handles everything."""
+
+
+class BufferMemo:
+    """Single-entry memo keyed by buffer *identity* over immutable jax
+    arrays (the stack/pack reuse caches).
+
+    The invariants both users need, kept in one place:
+
+    * an id fingerprint is trustworthy only while every fingerprinted
+      buffer is alive (a live weakref pins the id to its object);
+    * mutable numpy uploads and tracers are never stored (in-place
+      mutation / trace leakage would make identity lie);
+    * the payload is released *eagerly* -- ``weakref.finalize`` on the
+      fingerprinted buffers drops the entry the moment any of them is
+      collected, so a memo never pins a dead cohort's bytes;
+    * with ``require_repeat=True`` a payload is kept only for a
+      fingerprint seen on consecutive stores: a loop whose cohorts
+      never repeat retains a tuple of ids and weakrefs (bytes), not a
+      cohort-sized payload, and no finalizers accumulate on long-lived
+      buffers that are never actually reused.
+    """
+
+    def __init__(self, require_repeat: bool = False):
+        self._require_repeat = require_repeat
+        self._entry = None             # (ids, payload, refs, token)
+        self._candidate = None         # (ids, refs): seen once
+
+    @staticmethod
+    def fingerprintable(leaves) -> bool:
+        return all(isinstance(v, jax.Array)
+                   and not isinstance(v, jax.core.Tracer) for v in leaves)
+
+    def lookup(self, leaves):
+        """The stored payload iff ``leaves`` are exactly the buffers it
+        was stored under; None otherwise."""
+        entry = self._entry
+        if entry is None:
+            return None
+        ids, payload, refs, _ = entry
+        if any(r() is None for r in refs):
+            if self._entry is entry:   # stale: release without waiting
+                self._entry = None
+            return None
+        if ids != tuple(id(v) for v in leaves):
+            return None
+        return payload
+
+    def store(self, leaves, payload) -> None:
+        import weakref
+        leaves = list(leaves)
+        if not leaves or not self.fingerprintable(leaves):
+            return
+        ids = tuple(id(v) for v in leaves)
+        if self._require_repeat:
+            cand = self._candidate
+            seen_before = (cand is not None and cand[0] == ids
+                           and all(r() is not None for r in cand[1]))
+            if not seen_before:        # first sight: fingerprint only
+                self._candidate = (ids,
+                                   [weakref.ref(v) for v in leaves])
+                return
+        token = object()
+        self._entry = (ids, payload,
+                       [weakref.ref(v) for v in leaves], token)
+        wself = weakref.ref(self)
+
+        def _release(wself=wself, token=token):
+            m = wself()                # holds only the token: a newer
+            if (m is not None and m._entry is not None
+                    and m._entry[3] is token):
+                m._entry = None        # entry is never clobbered
+        for v in leaves:               # ANY buffer dying releases it
+            weakref.finalize(v, _release)
 
 
 class DispatchCounter:
@@ -73,6 +147,16 @@ class DispatchCounter:
 
 
 dispatch_counter = DispatchCounter()
+
+
+def default_client_mesh(n_clients: int, client_axis: str):
+    """1-D client mesh over the largest device count dividing
+    ``n_clients`` (every shard carries the same number of clients) --
+    the shared default for every distributed aggregation path."""
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    k = max(i for i in range(1, len(devs) + 1) if n_clients % i == 0)
+    return Mesh(np.asarray(devs[:k]), (client_axis,))
 
 
 # ------------------------------------------------------------- cohort spec --
@@ -464,16 +548,25 @@ def _build_mean_round(strategy, spec: CohortSpec,
     key = ("mean", norm_restore, _shape_key(spec))
     fns = exec_cache.get(key)
     if fns is None:
-        def round_fn(ab, wt_raw, prev_ab, ms, crv):
-            wt = strategy.transform_weights(wt_raw, crv)
-            outs = []
-            for bi, b in enumerate(buckets):
-                x = jnp.concatenate(
+        def pack_fn(ab):
+            """Cohort uploads -> one packed (n, rows, width) buffer per
+            bucket.  Split from the combine so a re-participating cohort
+            (same upload buffers) reuses its packed buckets and only the
+            combine re-runs -- the weight-only update."""
+            xs = []
+            for b in buckets:
+                xs.append(jnp.concatenate(
                     [_pack_side(ab[s.pair_idx][s.side], s)
                      for s in b.slots],
                     axis=1) if len(b.slots) > 1 else _pack_side(
                         ab[b.slots[0].pair_idx][b.slots[0].side],
-                        b.slots[0])
+                        b.slots[0]))
+            return xs
+
+        def combine_fn(xs, wt_raw, prev_ab, ms, crv):
+            wt = strategy.transform_weights(wt_raw, crv)
+            outs = []
+            for bi, b in enumerate(buckets):
                 prev = None
                 if retains:
                     parts = [_pack_prev_side(prev_ab[s.pair_idx][s.side],
@@ -482,11 +575,12 @@ def _build_mean_round(strategy, spec: CohortSpec,
                             if len(parts) > 1 else parts[0])
                 if spec.kind == "pallas":
                     from repro.kernels.rbla_agg.ops import packed_agg_inline
-                    out = packed_agg_inline(x, ms[bi], wt, prev,
+                    out = packed_agg_inline(xs[bi], ms[bi], wt, prev,
                                             norm_by=norm_by,
+                                            norm_restore=norm_restore,
                                             interpret=spec.interpret)
                 else:
-                    out = _bucket_mean_ref(x, ms[bi], wt, prev,
+                    out = _bucket_mean_ref(xs[bi], ms[bi], wt, prev,
                                            norm_by, norm_restore)
                 outs.append(out)
             return [
@@ -495,18 +589,39 @@ def _build_mean_round(strategy, spec: CohortSpec,
                  if s.pair_idx == pi}
                 for pi in range(len(spec.pairs))]
 
-        fns = (jax.jit(round_fn), jax.jit(round_fn, donate_argnums=(2,)))
+        fns = (jax.jit(pack_fn), jax.jit(combine_fn),
+               jax.jit(combine_fn, donate_argnums=(2,)))
         exec_cache[key] = fns
-    fn, fn_donate = fns
+    pack, fn, fn_donate = fns
     rebuild = [None]
+    # eager store is safe here: the fingerprinted buffers are the
+    # *stacked* leaves, which outlive one call only when the strategy's
+    # require_repeat stack memo decided the cohort repeats -- so for
+    # fresh-per-round cohorts the packed payload is released at end of
+    # round by the finalizers, and no finalizers accumulate on
+    # long-lived user buffers (stacked leaves are new objects per round)
+    pack_memo = BufferMemo()
 
     def execute(stacked_tree, w, prev_tree, donate):
         if rebuild[0] is None:
             rebuild[0] = _make_rebuilder(stacked_tree)
         ab = _ab_list(stacked_tree)
+        stats = strategy.__dict__.setdefault(
+            "plan_stats", {"hits": 0, "misses": 0})
+        # same stacked buffers -> reuse the packed buckets; the memo
+        # releases the packed payload as soon as the cohort's buffers
+        # die (BufferMemo), so stale plans never pin cohort bytes
+        leaves = [v for d in ab for v in (d["A"], d["B"])]
+        xs = pack_memo.lookup(leaves)
+        if xs is not None:
+            stats["pack_reuses"] = stats.get("pack_reuses", 0) + 1
+        else:
+            xs = pack(ab)
+            pack_memo.store(leaves, xs)
+            stats["pack_runs"] = stats.get("pack_runs", 0) + 1
         prev_ab = _ab_list(prev_tree) if retains else None
         run = fn_donate if (donate and retains) else fn
-        outs = run(ab, w, prev_ab, masks, cr)
+        outs = run(xs, w, prev_ab, masks, cr)
         pairs = [{"A": o["A"], "B": o["B"], "rank": rank_leaves[i]}
                  for i, o in enumerate(outs)]
         return rebuild[0](pairs)
@@ -520,15 +635,13 @@ def _build_mean_distributed(strategy, spec, buckets, masks_const,
     """Packed shard_map: one collective round over the bucket buffers
     (clients sharded over the mesh axis, masks ride along sharded, the
     combine + prev retention computed replicated)."""
-    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
 
     n = spec.n_clients
     mesh = spec.mesh
     ax = spec.client_axis
     if mesh is None:
-        devs = jax.devices()
-        k = max(i for i in range(1, len(devs) + 1) if n % i == 0)
-        mesh = Mesh(np.asarray(devs[:k]), (ax,))
+        mesh = default_client_mesh(n, ax)
     cr = spec.client_ranks_array()
     norm_by = strategy.norm_by
     nb = len(buckets)
@@ -800,6 +913,99 @@ def _build_stack_round(strategy, spec: CohortSpec) -> CompiledRound:
                          n_fallback_pairs=len(fallback))
 
 
+# ------------------------------------------------------ packed svd plans --
+def _build_svd_round(strategy, spec: CohortSpec) -> CompiledRound:
+    """svd's packed lowering: pairs bucket by (shape, dtype) and each
+    bucket runs ONE batched factored SVD (``repro.core.lowrank``) inside
+    a single jitted round -- same CompiledRound contract as the mean and
+    stack modes.  The per-pair dense O(m*n*min(m,n)) SVDs the jit mode
+    used to issue become O((m+n)*k^2 + k^3) QR/core work, vmapped across
+    the bucket's same-shape pairs, with no dense delta materialized.
+
+    Scales (``r_out / rank_i``) enter as runtime data, so -- like the
+    mean mode -- one compiled executor serves every rank multiset with
+    this cohort layout; a new multiset builds a cheap plan, not a fresh
+    XLA compile."""
+    # ---- bucket pairs by full geometry (a batched SVD needs both sides
+    # of a pair, so buckets key on pair shapes, not row width) ----------
+    r_outs = []
+    for meta in spec.pairs:
+        r_st = meta.a_shape[-2]
+        r_outs.append(r_st if spec.r_max is None
+                      else min(spec.r_max, r_st))
+    bucket_map: dict = {}
+    for pi, meta in enumerate(spec.pairs):
+        key = (meta.a_shape, meta.a_dtype, meta.b_shape, meta.b_dtype,
+               meta.rank_shape, r_outs[pi])
+        bucket_map.setdefault(key, []).append(pi)
+    svd_buckets = list(bucket_map.values())
+    rank_leaves = _out_rank_leaves(spec)
+
+    # per-pair contributor scale tensors (r_out / rank), host-built from
+    # the spec's concrete ranks but passed as data for executor reuse;
+    # raw (n, *rank_lead) shapes -- svd_project_stacked owns the
+    # trailing-lead-dim alignment
+    scale_args = []
+    for idxs in svd_buckets:
+        per_pair = []
+        for pi in idxs:
+            meta = spec.pairs[pi]
+            if spec.client_ranks is not None:
+                rk = np.asarray(spec.client_ranks, np.float32)
+            else:
+                rk = meta.rank_values().astype(np.float32)
+            per_pair.append(r_outs[pi] / np.maximum(rk, 1.0))
+        scale_args.append(jnp.asarray(np.stack(per_pair), jnp.float32))
+
+    # the engine knobs are traced into round_fn via strategy._project:
+    # key them so even a direct (non-with_options) attribute assignment
+    # cannot serve a stale executor
+    exec_cache = strategy.__dict__.setdefault("_plan_exec_cache", {})
+    key = ("svd", strategy.svd_method, strategy.rsvd_oversample,
+           strategy.rsvd_power_iters, _shape_key(spec),
+           tuple(tuple(idxs) for idxs in svd_buckets), tuple(r_outs))
+    fn = exec_cache.get(key)
+    if fn is None:
+        def round_fn(ab, wt, scs):
+            results: dict = {}
+            for g, idxs in enumerate(svd_buckets):
+                meta = spec.pairs[idxs[0]]
+                r_st = meta.a_shape[-2]
+                r_out = r_outs[idxs[0]]
+                Bs = (jnp.stack([ab[pi]["B"] for pi in idxs])
+                      if len(idxs) > 1 else ab[idxs[0]]["B"][None])
+                As = (jnp.stack([ab[pi]["A"] for pi in idxs])
+                      if len(idxs) > 1 else ab[idxs[0]]["A"][None])
+
+                def project(b, a, sc, _r_out=r_out):
+                    return strategy._project(b, a, wt, _r_out, sc)
+
+                Bo, Ao = jax.vmap(project)(Bs, As, scs[g])
+                for j, pi in enumerate(idxs):
+                    results[(pi, "A")] = pad_to_rank(
+                        Ao[j], -2, r_st).astype(meta.a_dtype)
+                    results[(pi, "B")] = pad_to_rank(
+                        Bo[j], -1, r_st).astype(meta.b_dtype)
+            return [{"A": results[(pi, "A")], "B": results[(pi, "B")]}
+                    for pi in range(len(spec.pairs))]
+
+        fn = jax.jit(round_fn)
+        exec_cache[key] = fn
+    rebuild = [None]
+
+    def execute(stacked_tree, w, prev_tree, donate):
+        if rebuild[0] is None:
+            rebuild[0] = _make_rebuilder(stacked_tree)
+        ab = _ab_list(stacked_tree)
+        outs = fn(ab, w, scale_args)
+        pairs = [{"A": o["A"], "B": o["B"], "rank": rank_leaves[i]}
+                 for i, o in enumerate(outs)]
+        return rebuild[0](pairs)
+
+    return CompiledRound(strategy, spec, "packed", execute,
+                         n_kernel_launches=len(svd_buckets))
+
+
 # ----------------------------------------------------------- legacy plans --
 def _build_jit_round(strategy, spec: CohortSpec) -> CompiledRound:
     """Whole-round jit over the strategy's reference tree path: ranks and
@@ -904,11 +1110,15 @@ def build_plan(strategy, spec: CohortSpec) -> CompiledRound:
     * ``"mean"`` -- packed masked-mean buckets (fedavg / zeropad / rbla /
       rbla_ranked) on every backend;
     * ``"mean_norm"`` -- ditto plus rbla_norm's per-row norm restore
-      (scalar-rank pairs only; ref backend);
+      (scalar-rank pairs only; ref and pallas backends);
     * ``"stack"`` -- flora: packed copy/scale stacking on pallas, whole-
       round jit on ref, the cached ragged-concat collective when
       distributed;
-    * ``"jit"`` -- whole-round jit of the reference math (svd);
+    * ``"svd"`` -- packed batched factored SVD (``repro.core.lowrank``):
+      one batched QR-core-SVD per same-shape pair bucket on ref and
+      pallas; the gathered-factor collective (its own cache) when
+      distributed;
+    * ``"jit"`` -- whole-round jit of the reference math;
     * ``None`` -- eager legacy execution (registered strategies we know
       nothing about).
     """
@@ -917,7 +1127,7 @@ def build_plan(strategy, spec: CohortSpec) -> CompiledRound:
         if mode == "mean":
             return _build_mean_round(strategy, spec)
         if mode == "mean_norm":
-            if spec.kind != "ref" or any(
+            if spec.kind == "distributed" or any(
                     len(m.a_shape) != 3 for m in spec.pairs):
                 return _build_eager_round(strategy, spec)
             return _build_mean_round(strategy, spec, norm_restore=True)
@@ -927,6 +1137,10 @@ def build_plan(strategy, spec: CohortSpec) -> CompiledRound:
             if spec.kind == "ref":
                 return _build_jit_round(strategy, spec)
             return _build_eager_round(strategy, spec)
+        if mode == "svd":
+            if spec.kind == "distributed":
+                return _build_eager_round(strategy, spec)
+            return _build_svd_round(strategy, spec)
         if mode == "jit" and spec.kind == "ref":
             return _build_jit_round(strategy, spec)
     except PlanUnavailable:
@@ -1021,6 +1235,7 @@ def build_state_spec(adapters: PyTree, *, interpret=None) -> CohortSpec:
 
 __all__ = [
     "CohortSpec", "PairMeta", "CompiledRound", "PlanUnavailable",
+    "BufferMemo",
     "build_cohort_spec", "build_plan", "build_fold_plan",
     "build_state_spec", "dispatch_counter", "DispatchCounter",
 ]

@@ -47,9 +47,9 @@ from jax import lax
 
 from .aggregation import _EPS, fedavg_leaf, rbla_leaf, zeropad_leaf
 from .compat import shard_map_no_check
+from .lowrank import product_factors, svd_project_stacked
 from .masks import pad_to_rank
-from .variants import (rank_proportional_weights, rbla_norm_leaf,
-                       svd_project_pair)
+from .variants import rank_proportional_weights, rbla_norm_leaf
 
 Array = jax.Array
 PyTree = Any
@@ -331,7 +331,8 @@ class AggregationStrategy:
     supports_incremental: bool = False
     #: how :meth:`plan` lowers a round (see ``repro.core.plan``):
     #: "mean" = packed masked-mean buckets, "mean_norm" = + per-row norm
-    #: restore, "stack" = flora's copy/scale stacking, "jit" = whole-round
+    #: restore, "stack" = flora's copy/scale stacking, "svd" = packed
+    #: batched factored SVD (repro.core.lowrank), "jit" = whole-round
     #: jit of the reference math, None = eager legacy execution (the safe
     #: default for strategies whose leaf math the planner cannot assume)
     plan_mode: str | None = None
@@ -347,7 +348,8 @@ class AggregationStrategy:
         inst = copy.copy(self)
         # compiled artifacts close over self and its options: never share
         for cached in ("_dist_agg_cache", "_plan_cache", "plan_stats",
-                       "_fold_plan_cache", "_plan_exec_cache"):
+                       "_fold_plan_cache", "_plan_exec_cache",
+                       "_stack_memo"):
             inst.__dict__.pop(cached, None)
         for k, v in options.items():
             if not hasattr(inst, k) or k.startswith("_"):
@@ -629,10 +631,34 @@ class AggregationStrategy:
         Alg. 2), while rank-changing ones (``rank_contract="stacked"``)
         keep the live rank their aggregation wrote -- read it from the
         output pairs.
+
+        When the same cohort re-participates (the same client arrays
+        resubmitted -- benchmarks, replay, weight-only re-aggregation),
+        the host-side re-stacking is skipped: uploads are fingerprinted
+        by buffer identity (jax arrays are immutable) and the previous
+        stacked tree is reused, which also lets the compiled round reuse
+        its packed buckets (see ``plan_stats['pack_reuses']``).
         """
         from repro.lora import adapter_masks
 
-        stacked = stack_trees(client_adapters)
+        from .plan import BufferMemo
+
+        leaves = [leaf for ad in client_adapters
+                  for leaf in jax.tree.leaves(ad)]
+        memo = self.__dict__.get("_stack_memo")
+        if memo is None:
+            # require_repeat: a normal FL loop (fresh uploads every
+            # round) must retain only a fingerprint between rounds, not
+            # a cohort-sized stacked copy
+            memo = self.__dict__["_stack_memo"] = BufferMemo(
+                require_repeat=True)
+        stacked = memo.lookup(leaves)
+        if stacked is None:
+            stacked = stack_trees(client_adapters)
+            # identity-memoized only for immutable non-traced jax
+            # buffers seen on consecutive rounds, released as soon as
+            # the uploads die -- the BufferMemo invariants
+            memo.store(leaves, stacked)
         if client_ranks is None:
             client_ranks = _infer_ranks(stacked)
         w = jnp.asarray(weights, jnp.float32)
@@ -673,14 +699,13 @@ class AggregationStrategy:
         return _fix_rank(out, r_max)
 
     def _aggregate_distributed(self, stacked, masks, w, mesh, client_axis):
-        import numpy as np
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from .plan import default_client_mesh
 
         n = int(w.shape[0])
         if mesh is None:
-            devs = jax.devices()
-            k = max(i for i in range(1, len(devs) + 1) if n % i == 0)
-            mesh = Mesh(np.asarray(devs[:k]), (client_axis,))
+            mesh = default_client_mesh(n, client_axis)
         agg = self.make_distributed_aggregator(mesh, client_axis)
         # 0-d "fully shared" masks can't shard over clients: materialize
         full_masks = jax.tree.map(
@@ -696,12 +721,16 @@ class AggregationStrategy:
     def aggregate(self, state: ServerState,
                   client_updates: Sequence[ClientUpdate],
                   weights: Array | None = None, *, backend: str = "auto",
-                  mesh=None, client_axis: str = "clients") -> ServerState:
+                  mesh=None, client_axis: str = "clients",
+                  donate: bool = False) -> ServerState:
         """One server round: fold a participant cohort into ``state``.
 
         Non-LoRA trainables are FedAvg'd; adapters go through this
         strategy on the selected backend.  ``weights`` defaults to the
-        updates' ``n_examples``.  Returns the next round's state.
+        updates' ``n_examples``.  ``donate=True`` donates the incoming
+        ``state.adapters`` buffers to the round (callers must not read
+        the old state afterwards -- the FL server loop holds only the
+        returned state).  Returns the next round's state.
         """
         updates = list(client_updates)
         if weights is None:
@@ -726,7 +755,7 @@ class AggregationStrategy:
             new_adapters = self.aggregate_adapters(
                 ad_trees, w, r_max=state.r_max, client_ranks=ranks,
                 prev_global=state.adapters, backend=backend, mesh=mesh,
-                client_axis=client_axis)
+                client_axis=client_axis, donate=donate)
 
         current_rank = (adapter_live_ranks(new_adapters)
                         if new_adapters is not None else state.current_rank)
@@ -1052,12 +1081,13 @@ class RBLANormStrategy(AggregationStrategy):
     axis differs between A and B, so it traverses whole pairs)."""
     name = "rbla_norm"
     norm_by = "mask"
+    supports_pallas = True             # packed_agg(norm_restore=True)
     supports_distributed = False
     # homogeneous cohorts do NOT degenerate to FedAvg: the per-row norm
     # restoration rescales even fully-shared rows (that is the point)
     fedavg_equivalence = None
-    # packed masked mean + per-row norm restore; layer-stacked pairs stay
-    # on the (refusing) reference path
+    # packed masked mean + per-row norm restore on ref AND pallas;
+    # layer-stacked pairs stay on the (refusing) reference path
     plan_mode = "mean_norm"
 
     def leaf(self, stacked, mask, weights, prev=None):
@@ -1080,27 +1110,90 @@ class RBLANormStrategy(AggregationStrategy):
             }
         return _map_pairs(agg_pair, stacked_tree, mask_tree, strict=True)
 
+    # --------------------------------------------------- (d) Pallas path --
+    def aggregate_tree_pallas(self, stacked_tree, weights, client_ranks,
+                              prev_tree=None, *, r_max=None,
+                              interpret=None):
+        """Kernel path: the masked mean *and* the per-row norm restore
+        fuse into one ``packed_agg(norm_restore=True)`` launch per side
+        (the compiled plan fuses all pairs into one launch per bucket);
+        the row-norm reduction keeps the whole row in one block."""
+        from repro.kernels.rbla_agg.ops import packed_agg
+        from .masks import stacked_rank_masks
+
+        w = jnp.asarray(weights, jnp.float32)
+        ranks = (None if client_ranks is None
+                 else jnp.asarray(client_ranks, jnp.int32))
+
+        def agg_pair(pair, _prev):
+            A, B = pair["A"], pair["B"]
+            pranks = ranks
+            if pranks is None and jnp.asarray(pair["rank"]).ndim == 1:
+                pranks = jnp.asarray(pair["rank"], jnp.int32)
+            if A.ndim != 3 or B.ndim != 3 or pranks is None:
+                raise NotImplementedError(
+                    "rbla_norm supports scalar-rank pairs (got "
+                    f"A.ndim={A.ndim}); the per-row norm target needs a "
+                    "per-layer loop for layer-stacked pairs")
+            masks = stacked_rank_masks(A.shape[-2], pranks)
+            outA = packed_agg(A, masks, w, norm_by="mask",
+                              norm_restore=True, interpret=interpret)
+            outB = packed_agg(jnp.swapaxes(B, 1, 2), masks, w,
+                              norm_by="mask", norm_restore=True,
+                              interpret=interpret).T
+            return {"A": outA.astype(A.dtype), "B": outB.astype(B.dtype),
+                    "rank": pair["rank"][0]}
+        return _map_pairs(agg_pair, stacked_tree, prev_tree, strict=True)
+
 
 @register_strategy
 class SVDStrategy(AggregationStrategy):
-    """Product-space aggregation: weighted-average the dense updates
+    """Product-space aggregation: weighted-average the effective updates
     ``(r_out / rank_i) * B_i @ A_i`` (no dilution -- products are dense),
     truncated-SVD back to rank-``r_out`` factors, re-pad to storage rank.
 
     The ``r_out / rank_i`` scale matches effective updates under the
     ``alpha / rank`` LoRA convention: serving the aggregate at ``r_max``
     reproduces the weighted mean of the clients' effective deltas.
-    O(out * in * min(out, in)) server cost per pair.
+
+    The truncation runs through the factored low-rank engine
+    (``repro.core.lowrank``): the weighted product mean is itself a
+    product of concatenated factors, so the server cost is
+    O((out + in) * k^2 + k^3) with k = n * r_storage -- no dense
+    (out, in) delta is ever materialized -- instead of the
+    O(out * in * min(out, in)) the paper flags.  Layer-stacked
+    (leading-dim) pairs batch through the same engine.  ``svd_method``
+    and the ``rsvd_*`` knobs (``with_options``-able) route the engine:
+    "auto" is exact (factored while k <= min(out, in), dense beyond),
+    "randomized" trades exactness for the range-finder sketch.
     """
     name = "svd"
     norm_by = "mask"
-    supports_distributed = False
-    plan_mode = "jit"                  # per-pair SVDs, one jitted round
+    supports_pallas = True             # engine math IS the kernel path
+    supports_distributed = True        # gathered factors, replicated SVD
+    plan_mode = "svd"                  # packed batched factored SVD
     # FedAvg-equivalence holds in product space only when the truncated
     # SVD is lossless (sum of client ranks <= r_out), which a random
     # cohort does not guarantee -- declared None; the exactness case is
     # covered by test_svd_single_client_preserves_effective_update
     fedavg_equivalence = None
+    #: lowrank engine knobs: "auto" | "factored" | "dense" | "randomized"
+    svd_method: str = "auto"
+    rsvd_oversample: int = 8
+    rsvd_power_iters: int = 2
+
+    def _pair_scales(self, pranks, r_out: int):
+        """Per-contributor ``r_out / rank`` scales, raw (n, *rank_lead)
+        shape -- ``svd_project_stacked`` owns the broadcast alignment
+        against the pair's leading dims."""
+        return (jnp.float32(r_out) /
+                jnp.maximum(jnp.asarray(pranks, jnp.float32), 1.0))
+
+    def _project(self, B, A, w, r_out: int, scales):
+        return svd_project_stacked(B, A, w, r_out, scales=scales,
+                                   method=self.svd_method,
+                                   oversample=self.rsvd_oversample,
+                                   power_iters=self.rsvd_power_iters)
 
     def aggregate_tree(self, stacked_tree, mask_tree, weights,
                        prev_tree=None, *, r_max=None, client_ranks=None):
@@ -1108,23 +1201,98 @@ class SVDStrategy(AggregationStrategy):
 
         def agg_pair(pair, _masks):
             A, B = pair["A"], pair["B"]
-            if A.ndim != 3 or B.ndim != 3:
-                raise NotImplementedError(
-                    "svd aggregation supports scalar-rank pairs "
-                    f"(got A.ndim={A.ndim}); layer-stacked pairs need a "
-                    "per-layer loop")
             r_storage = A.shape[-2]
             r_out = r_storage if r_max is None else min(r_max, r_storage)
             pranks = jnp.asarray(pair["rank"] if client_ranks is None
                                  else client_ranks, jnp.int32)
-            scales = (jnp.float32(r_out) /
-                      jnp.maximum(pranks.astype(jnp.float32), 1.0))
-            Bo, Ao = svd_project_pair(B, A, pranks, w, r_out=r_out,
-                                      scales=scales)
-            return {"A": pad_to_rank(Ao, -2, r_storage),
-                    "B": pad_to_rank(Bo, -1, r_storage),
+            scales = self._pair_scales(pranks, r_out)
+            Bo, Ao = self._project(B, A, w, r_out, scales)
+            return {"A": pad_to_rank(Ao.astype(A.dtype), -2, r_storage),
+                    "B": pad_to_rank(Bo.astype(B.dtype), -1, r_storage),
                     "rank": pair["rank"][0]}
         return _map_pairs(agg_pair, stacked_tree, mask_tree, strict=True)
+
+    # --------------------------------------------------- (d) Pallas path --
+    def aggregate_tree_pallas(self, stacked_tree, weights, client_ranks,
+                              prev_tree=None, *, r_max=None,
+                              interpret=None):
+        """The factored engine is matmul/QR-dominated: XLA's fused
+        matmuls are the accelerator path, so the kernel backend shares
+        the factored tree math (there is no reduction a hand-written
+        Pallas kernel would beat here)."""
+        return self.aggregate_tree(stacked_tree, None, weights, prev_tree,
+                                   r_max=r_max, client_ranks=client_ranks)
+
+    # ---------------------------------------------- (c) distributed path --
+    def make_distributed_aggregator(self, mesh, client_axis: str = "data"):
+        raise NotImplementedError(
+            "svd's distributed path gathers the low-rank factors "
+            "(all_gather moves (out+in)*r per client; a dense out*in "
+            "delta psum would defeat the factored engine) and projects "
+            "replicated -- use aggregate_tree_distributed / "
+            "aggregate_adapters(backend='distributed') instead")
+
+    def aggregate_tree_distributed(self, stacked_tree, mask_tree, weights,
+                                   prev_tree=None, *, r_max=None,
+                                   client_ranks=None, mesh=None,
+                                   client_axis: str = "clients"):
+        """Gathered-factor collective: each shard all_gathers the
+        cohort's low-rank factors and rank vector -- O((out + in) * r)
+        bytes per client on the wire, never a dense delta -- and runs
+        the factored projection replicated.  Ranks ride as runtime data
+        (the output storage is static), so one compiled round serves
+        every rank multiset of this cohort shape."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from .plan import default_client_mesh
+
+        w = jnp.asarray(weights, jnp.float32)
+        n = int(w.shape[0])
+        if mesh is None:
+            mesh = default_client_mesh(n, client_axis)
+        cr = (None if client_ranks is None
+              else jnp.asarray(client_ranks, jnp.int32))
+        cache = self.__dict__.setdefault("_dist_agg_cache", {})
+        key = (mesh, client_axis, r_max, cr is not None, self.svd_method,
+               self.rsvd_oversample, self.rsvd_power_iters)
+        fn = cache.get(key)
+        if fn is None:
+            has_cr = cr is not None
+
+            def body(st, wv, crv):
+                wf = lax.all_gather(wv, client_axis, tiled=True)
+                crf = (lax.all_gather(crv, client_axis, tiled=True)
+                       if has_cr else None)
+
+                def agg_pair(pair):
+                    Ag = lax.all_gather(pair["A"], client_axis, tiled=True)
+                    Bg = lax.all_gather(pair["B"], client_axis, tiled=True)
+                    rg = lax.all_gather(
+                        jnp.asarray(pair["rank"], jnp.int32), client_axis,
+                        tiled=True)
+                    r_storage = Ag.shape[-2]
+                    r_out = (r_storage if r_max is None
+                             else min(r_max, r_storage))
+                    pranks = crf if has_cr else rg
+                    scales = self._pair_scales(pranks, r_out)
+                    Bo, Ao = self._project(Bg, Ag, wf, r_out, scales)
+                    return {"A": pad_to_rank(Ao.astype(Ag.dtype), -2,
+                                             r_storage),
+                            "B": pad_to_rank(Bo.astype(Bg.dtype), -1,
+                                             r_storage),
+                            "rank": rg[0]}
+                return _map_pairs(agg_pair, st, strict=True)
+
+            fn = jax.jit(shard_map_no_check(
+                body, mesh,
+                in_specs=(P(client_axis), P(client_axis),
+                          P(client_axis) if has_cr else P()),
+                out_specs=P()))
+            cache[key] = fn
+        sh = NamedSharding(mesh, P(client_axis))
+        return fn(jax.device_put(stacked_tree, sh), jax.device_put(w, sh),
+                  jax.device_put(cr, sh) if cr is not None else
+                  jnp.zeros((n,), jnp.int32))
 
 
 @register_strategy
@@ -1271,24 +1439,21 @@ class FloraStrategy(AggregationStrategy):
                 [b.astype(jnp.float32) * scales[i]
                  for i, b in enumerate(B_parts)], axis=-1)
         else:
-            # over the cap: product-space re-projection back to r_max
-            # (batched over any leading layer/expert dims)
+            # over the cap: product-space re-projection back to r_max,
+            # in factored form (repro.core.lowrank) -- the convex sum of
+            # contributor products is a product of concatenated factors,
+            # so no dense (out, in) delta is built (batched over any
+            # leading layer/expert dims)
             r_out = min(int(r_max if r_max is not None else A.shape[-2]),
                         cap)
-            delta = None
-            for i, (a, b) in enumerate(zip(A_parts, B_parts)):
-                scale = mhat[i] * (jnp.float32(r_out) /
-                                   jnp.float32(seg_ranks[i]))
-                term = scale * jnp.einsum("...or,...ri->...oi",
-                                          b.astype(jnp.float32),
-                                          a.astype(jnp.float32))
-                delta = term if delta is None else delta + term
-            u, s, vt = jnp.linalg.svd(delta, full_matrices=False)
-            u, s, vt = (u[..., :, :r_out], s[..., :r_out],
-                        vt[..., :r_out, :])
-            sq = jnp.sqrt(s)
-            B_out = u * sq[..., None, :]
-            A_out = sq[..., :, None] * vt
+            B_cat = jnp.concatenate(
+                [b.astype(jnp.float32)
+                 * (mhat[i] * (jnp.float32(r_out)
+                               / jnp.float32(seg_ranks[i])))
+                 for i, b in enumerate(B_parts)], axis=-1)
+            A_cat = jnp.concatenate([a.astype(jnp.float32)
+                                     for a in A_parts], axis=-2)
+            B_out, A_out = product_factors(B_cat, A_cat, r_out)
         A_out = pad_to_rank(A_out.astype(A.dtype), -2, cap)
         B_out = pad_to_rank(B_out.astype(B.dtype), -1, cap)
         return A_out, B_out, r_out
@@ -1440,7 +1605,10 @@ class FloraStrategy(AggregationStrategy):
                 else:
                     # cap crossing: product-space re-projection to r_max,
                     # over the mathematically identical matrix the
-                    # one-shot over-cap path builds
+                    # one-shot over-cap path builds -- factored, so the
+                    # ledgered stack plus the arriving segment concatenate
+                    # into (storage + r_upd)-wide factors and no dense
+                    # (out, in) delta is ever materialized
                     r_t = min(int(state.r_max if state.r_max is not None
                                   else storage), cap)
                     desired = mhat * (float(r_t)
@@ -1453,25 +1621,19 @@ class FloraStrategy(AggregationStrategy):
                         rj = seg_ranks[j]
                         colscale[o:o + rj] = desired[j] / applied[j]
                         o += rj
-                    Bs = B.astype(jnp.float32) * jnp.asarray(colscale)
-                    delta = jnp.einsum("...or,...ri->...oi", Bs,
-                                       A.astype(jnp.float32))
+                    B_cat = B.astype(jnp.float32) * jnp.asarray(colscale)
+                    A_cat = A.astype(jnp.float32)
                     if r_upd:
-                        delta = delta + jnp.float32(desired[-1]) * \
-                            jnp.einsum(
-                                "...or,...ri->...oi",
-                                upd_pair["B"][..., :, :r_upd].astype(
-                                    jnp.float32),
-                                upd_pair["A"][..., :r_upd, :].astype(
-                                    jnp.float32))
-                    u, s, vt = jnp.linalg.svd(delta, full_matrices=False)
-                    u, s, vt = (u[..., :, :r_t], s[..., :r_t],
-                                vt[..., :r_t, :])
-                    sq = jnp.sqrt(s)
-                    B = pad_to_rank((u * sq[..., None, :]).astype(B.dtype),
-                                    -1, storage)
-                    A = pad_to_rank((sq[..., :, None] * vt).astype(A.dtype),
-                                    -2, storage)
+                        B_cat = jnp.concatenate(
+                            [B_cat, jnp.float32(desired[-1])
+                             * upd_pair["B"][..., :, :r_upd].astype(
+                                 jnp.float32)], axis=-1)
+                        A_cat = jnp.concatenate(
+                            [A_cat, upd_pair["A"][..., :r_upd, :].astype(
+                                jnp.float32)], axis=-2)
+                    B_new, A_new = product_factors(B_cat, A_cat, r_t)
+                    B = pad_to_rank(B_new.astype(B.dtype), -1, storage)
+                    A = pad_to_rank(A_new.astype(A.dtype), -2, storage)
                     new_pairs.append({
                         "prev_rank": r_t, "seg_ranks": [], "seg_w": [],
                         "applied": [1.0],
@@ -1554,9 +1716,8 @@ class FloraStrategy(AggregationStrategy):
             else _infer_ranks(stacked_tree))
         n = int(w.shape[0])
         if mesh is None:
-            devs = jax.devices()
-            k = max(i for i in range(1, len(devs) + 1) if n % i == 0)
-            mesh = Mesh(np.asarray(devs[:k]), (client_axis,))
+            from .plan import default_client_mesh
+            mesh = default_client_mesh(n, client_axis)
         prev_rank_tree = (None if prev_tree is None else
                           _map_pairs(self._prev_rank_of, prev_tree))
 

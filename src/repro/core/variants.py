@@ -75,16 +75,14 @@ def svd_project_pair(stacked_B: Array, stacked_A: Array, ranks: Array,
     stacked_B: (n, out, r_max); stacked_A: (n, r_max, in).  Row-masking is
     implicit: padded rows are zero so they contribute nothing to B_i @ A_i.
     Returns (B, A) with inner dimension ``r_out``.
+
+    Since the inputs are already factored, the truncation runs through
+    the factored-form engine (``repro.core.lowrank``): the weighted mean
+    of products is a product of concatenated factors, so no dense
+    (out, in) Delta is ever materialized -- O((out+in)*k^2 + k^3) instead
+    of O(out*in*min(out, in)), k = n * r_max.
     """
-    w = weights.astype(jnp.float32)
-    if scales is not None:
-        w = w * scales.astype(jnp.float32)
-    delta = jnp.einsum("nor,nri->oi", stacked_B.astype(jnp.float32) *
-                       w[:, None, None] / (jnp.sum(weights) + _EPS),
-                       stacked_A.astype(jnp.float32))
-    u, s, vt = jnp.linalg.svd(delta, full_matrices=False)
-    u, s, vt = u[:, :r_out], s[:r_out], vt[:r_out, :]
-    sq = jnp.sqrt(s)
-    B = (u * sq[None, :]).astype(stacked_B.dtype)
-    A = (sq[:, None] * vt).astype(stacked_A.dtype)
-    return B, A
+    from .lowrank import svd_project_stacked
+    B, A = svd_project_stacked(stacked_B, stacked_A, weights, r_out,
+                               scales=scales)
+    return B.astype(stacked_B.dtype), A.astype(stacked_A.dtype)

@@ -222,8 +222,14 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
                 n_examples=float(max(c.n, 1)), rank=c.rank))
             losses.append(float(res.loss))
 
+        # donate the old global's buffers to the round: the loop only
+        # ever reads the *returned* state (clients re-slice from the new
+        # global, eval runs on it), so the server holds one copy of the
+        # adapters instead of two -- jax hard-errors if anything were to
+        # touch the donated buffers again (PR 4's no-use-after-donate
+        # guard)
         state = strategy.aggregate(state, updates,
-                                   backend=cfg.agg_backend)
+                                   backend=cfg.agg_backend, donate=True)
         base_trainable = state.base_trainable
         if rig.mode == "lora":
             global_adapters = state.adapters

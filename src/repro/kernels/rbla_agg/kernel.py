@@ -50,7 +50,7 @@ def _kernel(ranks_ref, weights_ref, x_ref, o_ref, *, n_clients: int,
 
 
 def _packed_kernel(weights_ref, masks_ref, x_ref, *rest, n_clients: int,
-                   norm_by: str, has_prev: bool):
+                   norm_by: str, has_prev: bool, norm_restore: bool = False):
     """Fused whole-round aggregation over a packed bucket (plan path).
 
     ``x``: (N, R, D) packed rows from *every* pair of the cohort that
@@ -60,6 +60,11 @@ def _packed_kernel(weights_ref, masks_ref, x_ref, *rest, n_clients: int,
     more rows); optional ``prev``: (R, D) packed previous global, the
     fallback for rows no participant owns.  One launch aggregates what
     the per-pair path spread over 2 x n_pairs launches.
+
+    ``norm_restore`` fuses rbla_norm's per-row norm restoration into the
+    same pass: each output row is rescaled so its L2 norm matches the
+    owners' weighted-mean row norm (the wrapper keeps the whole row in
+    one block -- the reduction runs over the full width).
     """
     if has_prev:
         prev_ref, o_ref = rest
@@ -69,35 +74,57 @@ def _packed_kernel(weights_ref, masks_ref, x_ref, *rest, n_clients: int,
     num = jnp.zeros(o_ref.shape, jnp.float32)
     den = jnp.zeros((br, 1), jnp.float32)
     wtot = jnp.zeros((), jnp.float32)
+    tnum = jnp.zeros((br, 1), jnp.float32)           # w-mass-weighted norms
+    town = jnp.zeros((br, 1), jnp.float32)           # owner weight mass
     for nix in range(n_clients):                     # static unroll
         m = masks_ref[nix][:, None]                  # (br, 1)
         w = weights_ref[nix]
-        num = num + (w * m) * x_ref[nix].astype(jnp.float32)
+        xn = x_ref[nix].astype(jnp.float32)
+        num = num + (w * m) * xn
         den = den + w * m
         wtot = wtot + w
+        if norm_restore:
+            xm = m * xn
+            rn = jnp.sqrt(jnp.sum(xm * xm, axis=1, keepdims=True))
+            own = (m > 0).astype(jnp.float32) * w
+            tnum = tnum + own * rn
+            town = town + own
     if norm_by == "mask":
         fb = (prev_ref[...].astype(jnp.float32) if has_prev
               else jnp.zeros_like(num))
         out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), fb)
     else:
         out = num / wtot
+    if norm_restore:
+        target = tnum / (town + 1e-12)
+        agg = jnp.sqrt(jnp.sum(out * out, axis=1, keepdims=True))
+        out = out * jnp.where(agg > 1e-12, target / (agg + 1e-12), 1.0)
     o_ref[...] = out.astype(o_ref.dtype)
 
 
 def packed_agg_pallas(x, masks, weights, prev=None, *,
-                      norm_by: str = "mask", br=DEFAULT_BR, bd=DEFAULT_BD,
-                      interpret=True):
+                      norm_by: str = "mask", norm_restore: bool = False,
+                      br=DEFAULT_BR, bd=DEFAULT_BD, interpret=True):
     """x: (N, R, D); masks: (N, R) f32; weights: (N,) f32; prev: (R, D)
     or None -> (R, D).  The plan path's fused bucket reduction: like
     :func:`rbla_agg_pallas` but with an explicit per-row owner-mask
     matrix (packed rows span many pairs, so a single rank vector cannot
-    describe them) and prev-global retention fused in."""
+    describe them) and prev-global retention fused in.  ``norm_restore``
+    adds rbla_norm's per-row norm restoration (full-width blocks: the
+    row-norm reduction cannot cross column tiles)."""
     n, r, d = x.shape
     if masks.shape != (n, r):
         raise ValueError(f"packed_agg: masks {masks.shape} != ({n}, {r})")
     if prev is not None and prev.shape != (r, d):
         raise ValueError(f"packed_agg: prev {prev.shape} != ({r}, {d})")
-    br, bd = min(br, r), min(bd, d)
+    br, bd = min(br, r), (d if norm_restore else min(bd, d))
+    if norm_restore:
+        # full-width blocks (the row-norm reduction cannot cross column
+        # tiles): bound VMEM by shrinking the row block as the bucket
+        # widens -- the (n, br, d) f32 x block must fit on-chip.  A
+        # two-pass scheme is the follow-on if even br=8 overflows.
+        budget = 4 * 1024 * 1024
+        br = min(br, max(8, (budget // max(n * d * 4, 1)) // 8 * 8))
     grid = (pl.cdiv(r, br), pl.cdiv(d, bd))
     in_specs = [
         pl.BlockSpec((n,), lambda i, j: (0,)),
@@ -110,7 +137,8 @@ def packed_agg_pallas(x, masks, weights, prev=None, *,
         args.append(prev)
     return pl.pallas_call(
         functools.partial(_packed_kernel, n_clients=n, norm_by=norm_by,
-                          has_prev=prev is not None),
+                          has_prev=prev is not None,
+                          norm_restore=norm_restore),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((br, bd), lambda i, j: (i, j)),

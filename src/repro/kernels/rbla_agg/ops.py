@@ -82,13 +82,16 @@ def rbla_agg(x, ranks, weights, *, method: str = "rbla", interpret=None):
 
 
 def packed_agg_inline(x, masks, weights, prev=None, *,
-                      norm_by: str = "mask", interpret=None):
+                      norm_by: str = "mask", norm_restore: bool = False,
+                      interpret=None):
     """Un-jitted fused-bucket aggregation (the compiled plan's hot op).
 
     ``x``: (N, R, *dims) packed rows spanning many pairs; ``masks``:
     (N, R) per-row owner indicators; ``prev``: (R, *dims) packed previous
     global retained where no participant owns a row (``norm_by="mask"``
-    only).  Trailing dims flatten into D; padding is stripped.
+    only).  ``norm_restore`` fuses rbla_norm's per-row norm restoration
+    (zero padding is norm-neutral).  Trailing dims flatten into D;
+    padding is stripped.
     """
     interpret = auto_interpret(interpret)
     n, r = x.shape[:2]
@@ -105,22 +108,25 @@ def packed_agg_inline(x, masks, weights, prev=None, *,
         pv = jnp.pad(prev.reshape(r, d).astype(x2.dtype),
                      ((0, rp - r), (0, dp - d)))
     out = packed_agg_pallas(x2, m2, jnp.asarray(weights, jnp.float32), pv,
-                            norm_by=norm_by, interpret=interpret)
+                            norm_by=norm_by, norm_restore=norm_restore,
+                            interpret=interpret)
     return out[:r, :d].reshape((r,) + lead)
 
 
-@functools.partial(jax.jit, static_argnames=("norm_by", "interpret"))
-def _packed_agg_jit(x, masks, weights, prev, *, norm_by, interpret):
+@functools.partial(jax.jit, static_argnames=("norm_by", "norm_restore",
+                                             "interpret"))
+def _packed_agg_jit(x, masks, weights, prev, *, norm_by, norm_restore,
+                    interpret):
     return packed_agg_inline(x, masks, weights, prev, norm_by=norm_by,
-                             interpret=interpret)
+                             norm_restore=norm_restore, interpret=interpret)
 
 
 def packed_agg(x, masks, weights, prev=None, *, norm_by: str = "mask",
-               interpret=None):
+               norm_restore: bool = False, interpret=None):
     """Jitted :func:`packed_agg_inline` (standalone use and tests)."""
     _count_dispatch()
     return _packed_agg_jit(x, masks, weights, prev, norm_by=norm_by,
-                           interpret=interpret)
+                           norm_restore=norm_restore, interpret=interpret)
 
 
 def packed_stack_inline(x, scales, prev=None, *, copies_x=(),

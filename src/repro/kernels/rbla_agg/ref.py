@@ -29,12 +29,15 @@ def flora_stack_ref(x, scales, segs, out_rows: int):
     return jnp.pad(stacked, ((0, pad), (0, 0))).astype(x.dtype)
 
 
-def packed_agg_ref(x, masks, weights, prev=None, norm_by: str = "mask"):
+def packed_agg_ref(x, masks, weights, prev=None, norm_by: str = "mask",
+                   norm_restore: bool = False):
     """Oracle for the fused-bucket kernel: x (N, R, D), masks (N, R),
     weights (N,), prev (R, D) or None -> (R, D).  Matches the packed-row
     form of rbla_leaf (``norm_by="mask"``: per-row owner-mass mean with
     prev retention) / zeropad_leaf (``norm_by="weight"``: total-mass
-    dilution)."""
+    dilution).  ``norm_restore`` adds rbla_norm's per-row norm
+    restoration (rescale each output row to the owners' weighted-mean
+    row norm)."""
     xf = x.astype(jnp.float32)
     m = masks.astype(jnp.float32)
     w = weights.astype(jnp.float32)
@@ -43,8 +46,19 @@ def packed_agg_ref(x, masks, weights, prev=None, norm_by: str = "mask"):
         den = jnp.einsum("n,nr->r", w, m)[:, None]
         fb = (jnp.zeros_like(num) if prev is None
               else prev.astype(jnp.float32))
-        return jnp.where(den > 0, num / (den + 1e-12), fb).astype(x.dtype)
-    return (num / (jnp.sum(w) + 1e-12)).astype(x.dtype)
+        out = jnp.where(den > 0, num / (den + 1e-12), fb)
+    else:
+        out = num / (jnp.sum(w) + 1e-12)
+    if norm_restore:
+        xm = m[:, :, None] * xf
+        row_norms = jnp.sqrt(jnp.einsum("nrd,nrd->nr", xm, xm))
+        w_rows = (m > 0).astype(jnp.float32) * w[:, None]
+        target = (jnp.sum(w_rows * row_norms, axis=0)
+                  / (jnp.sum(w_rows, axis=0) + 1e-12))
+        agg = jnp.sqrt(jnp.sum(out ** 2, axis=1))
+        out = out * jnp.where(agg > 1e-12, target / (agg + 1e-12),
+                              1.0)[:, None]
+    return out.astype(x.dtype)
 
 
 def rbla_agg_ref(x, ranks, weights, method: str = "rbla"):

@@ -134,11 +134,20 @@ def test_resolve_backend_auto_is_ref_on_cpu():
 
 
 def test_unsupported_paths_raise_actionable_errors():
+    from repro.core.strategy import AggregationStrategy
+
+    class NoKernel(AggregationStrategy):        # default: no Pallas path
+        name = "no_kernel"
+
     with pytest.raises(NotImplementedError, match="Pallas"):
-        get_strategy("rbla_norm").aggregate_tree_pallas({}, jnp.ones(2),
-                                                        None)
+        NoKernel().aggregate_tree_pallas({}, jnp.ones(2), None)
+    # svd's distributed collective is gathered factors, not the base
+    # masked psum: the leafwise aggregator hook refuses with guidance
     with pytest.raises(NotImplementedError, match="distributed"):
         get_strategy("svd").make_distributed_aggregator(None)
+    with pytest.raises(NotImplementedError, match="distributed"):
+        get_strategy("rbla_norm").aggregate_tree_distributed(
+            {}, {}, jnp.ones(2))
 
 
 # ------------------------------------------------- backend parity (tree) ----

@@ -240,6 +240,36 @@ def test_flora_stacking_is_product_exact(seed, n):
                        rtol=1e-4, atol=1e-5)
 
 
+# ------------------------------------- svd parity under the packed lowering --
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(1, 5))
+def test_svd_parity_holds_under_packed_lowering(seed, n):
+    """The factored-engine lowering (batched per-bucket SVD, no dense
+    delta) must reproduce the per-leaf oracle exactly, and agree with
+    the explicit dense fallback in product space, over random rank
+    multisets."""
+    s = get_strategy("svd").with_options()
+    adapters, rvec, w = make_cohort(seed, random_ranks(seed + 9, n))
+    got = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                               client_ranks=rvec, backend="ref")
+    want = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                client_ranks=rvec, backend="ref",
+                                use_plan=False)
+    for k in SPECS:
+        for f in ("A", "B", "rank"):
+            np.testing.assert_allclose(
+                np.asarray(got[k][f], np.float32),
+                np.asarray(want[k][f], np.float32),
+                rtol=1e-4, atol=1e-5, err_msg=f"plan vs oracle {k} {f}")
+    # the dense fallback is the binding oracle in product space (factors
+    # are only unique up to the truncation basis)
+    dense = get_strategy("svd").with_options(
+        svd_method="dense").aggregate_adapters(
+        adapters, w, r_max=R_MAX, client_ranks=rvec, backend="ref")
+    assert_delta_close(effective_deltas(got), effective_deltas(dense),
+                       rtol=1e-3, atol=1e-4)
+
+
 # ----------------------------------- every backend: parity or loud refusal --
 @pytest.mark.parametrize("method", ALL_METHODS)
 @pytest.mark.parametrize("backend", ["pallas", "distributed"])
