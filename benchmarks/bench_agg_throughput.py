@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import get_strategy, list_strategies
 from repro.core.plan import dispatch_counter
+from repro.kernels.runtime import bench_env
 from repro.lora import init_adapters, set_ranks
 
 BENCH_METHODS = ("rbla", "zeropad", "fedavg", "rbla_ranked", "flora",
@@ -265,6 +266,9 @@ def main(argv=None):
         payload = {
             "bench": "agg_throughput",
             "backend": jax.default_backend(),
+            # environment header: makes this file comparable with
+            # BENCH_serve.json runs from other machines
+            "env": bench_env(),
             "smoke": bool(args.smoke),
             "case": {"n_clients": n, "r_max": r_max,
                      "n_pairs": len(specs)},

@@ -363,18 +363,28 @@ def _make_buckets(spec: CohortSpec, use_mask: bool) -> list:
     return out
 
 
+def pair_side_rows(x, side: str):
+    """Rank-axis-leading row view of one LoRA pair side: A
+    ``(..., r, fan_in)`` passes through, B ``(..., fan_out, r)`` rides
+    transposed to ``(..., r, fan_out)`` -- THE packed row convention
+    shared by plan buckets and the serving
+    :class:`~repro.serving.AdapterStore`.  Involution: applying it twice
+    (same side) restores the leaf layout."""
+    if side == "B":
+        x = jnp.swapaxes(x, -1, -2)
+    return x
+
+
 def _pack_side(x, slot: Slot):
     """(n, *lead, ...) leaf -> (n, rows, width) f32, rank axis leading."""
-    if slot.side == "B":
-        x = jnp.swapaxes(x, -1, -2)
+    x = pair_side_rows(x, slot.side)
     return x.reshape(x.shape[:1] + (slot.rows, slot.width)).astype(
         jnp.float32)
 
 
 def _pack_prev_side(x, slot: Slot):
     """Like :func:`_pack_side` for an unstacked (server-state) leaf."""
-    if slot.side == "B":
-        x = jnp.swapaxes(x, -1, -2)
+    x = pair_side_rows(x, slot.side)
     return x.reshape((slot.rows, slot.width)).astype(jnp.float32)
 
 
@@ -382,9 +392,7 @@ def _unpack_slot(out, slot: Slot, meta: PairMeta):
     """(rows, width) f32 block -> the slot's original leaf layout."""
     y = out[slot.offset:slot.offset + slot.rows]
     y = y.reshape(slot.lead + (slot.r_st, slot.width))
-    if slot.side == "B":
-        y = jnp.swapaxes(y, -1, -2)
-    return y.astype(slot.dtype)
+    return pair_side_rows(y, slot.side).astype(slot.dtype)
 
 
 # ------------------------------------------------------- tree (re)building --

@@ -116,6 +116,14 @@ class AsyncAggregator:
         updates folded since the last anchor; after this many the service
         re-anchors at the current state (bounding memory and making the
         accumulated state the new retention baseline).
+    on_publish, publish_every
+        The serving hot-swap hook: after every ``publish_every``-th state
+        advance, ``on_publish(state)`` is called with the live
+        :class:`ServerState` -- wire
+        :meth:`repro.serving.ServingEngine.publisher` here to push each
+        freshly folded global into the serving read path (see
+        ``docs/serving.md``).  ``publish_every > 1`` batches swaps when
+        folds land faster than serving wants new versions.
     """
 
     STALENESS_CLOCKS = ("version", "wall")
@@ -125,12 +133,17 @@ class AsyncAggregator:
                  staleness_b: float = 4.0, staleness_clock: str = "version",
                  buffer_size: int = 1,
                  deadline: float | None = None, backend: str = "auto",
-                 replay_window: int = 64):
+                 replay_window: int = 64,
+                 on_publish: "Callable | None" = None,
+                 publish_every: int = 1):
         if buffer_size < 1:
             raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
         if replay_window < 1:
             raise ValueError(
                 f"replay_window must be >= 1, got {replay_window}")
+        if publish_every < 1:
+            raise ValueError(
+                f"publish_every must be >= 1, got {publish_every}")
         if staleness_clock not in self.STALENESS_CLOCKS:
             raise ValueError(
                 f"unknown staleness_clock {staleness_clock!r}; options: "
@@ -143,6 +156,9 @@ class AsyncAggregator:
             staleness, a=staleness_a, b=staleness_b)
         self.buffer = UpdateBuffer(size=buffer_size, deadline=deadline)
         self.replay_window = int(replay_window)
+        self.on_publish = on_publish
+        self.publish_every = int(publish_every)
+        self.n_published = 0
         self._anchor = state
         self._replay: list[tuple[ClientUpdate, float]] = []
         self._fold_state: FoldState = self.strategy.init_fold(state)
@@ -208,7 +224,8 @@ class AsyncAggregator:
 
     # -------------------------------------------------------------- drain --
     def flush(self, now: float = 0.0) -> ServerState:
-        """Aggregate everything buffered into the live state."""
+        """Aggregate everything buffered into the live state; push the
+        advanced state through the serving publish hook (if wired)."""
         batch = self.buffer.pop()
         if not batch:
             return self.state
@@ -227,7 +244,18 @@ class AsyncAggregator:
             self._anchor = self.state
             self._replay.clear()
             self._fold_state = self.strategy.init_fold(self.state)
+        self._maybe_publish()
         return self.state
+
+    def _maybe_publish(self) -> None:
+        """Hot-swap hook: every ``publish_every``-th advance hands the
+        live state to ``on_publish`` (e.g. a
+        :meth:`~repro.serving.ServingEngine.publisher`)."""
+        if self.on_publish is None:
+            return
+        if self.n_flushes % self.publish_every == 0:
+            self.on_publish(self.state)
+            self.n_published += 1
 
     def _fold_one(self, update: ClientUpdate, weight: float) -> None:
         if self.strategy.supports_incremental:

@@ -1,7 +1,8 @@
-"""Pure-jnp oracle for the fused LoRA matmul kernel."""
+"""Oracles and the XLA fallback for the fused LoRA matmul kernels."""
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def lora_matmul_ref(x, w, a, b, scale):
@@ -11,3 +12,54 @@ def lora_matmul_ref(x, w, a, b, scale):
     lora = (xf @ a.astype(jnp.float32).T) @ b.astype(jnp.float32).T
     return (base + jnp.asarray(scale, jnp.float32).reshape(()) *
             lora).astype(x.dtype)
+
+
+def batched_lora_matmul_ref(x, w, a_rows, b_rows, off, cnt, scale):
+    """Per-request python-loop oracle for the multi-adapter kernel.
+
+    Each request i slices its own (A, B) segment out of the packed row
+    buffers -- ``a_rows[off_i : off_i + cnt_i]`` / same rows of
+    ``b_rows`` -- and runs the single-adapter reference on it.  Host-side
+    numpy (concrete inputs only); this is the parity oracle the batched
+    executables are checked against.
+    """
+    x = np.asarray(x)
+    wf = np.asarray(w, np.float32)
+    af = np.asarray(a_rows, np.float32)
+    bf = np.asarray(b_rows, np.float32)
+    off = np.asarray(off, np.int64).reshape(-1)
+    cnt = np.asarray(cnt, np.int64).reshape(-1)
+    scale = np.asarray(scale, np.float32).reshape(-1)
+    out = np.empty((x.shape[0], wf.shape[1]), np.float32)
+    for i in range(x.shape[0]):
+        xi = x[i].astype(np.float32)
+        seg = slice(off[i], off[i] + cnt[i])
+        lora = (xi @ af[seg].T) @ bf[seg]
+        out[i] = xi @ wf + scale[i] * lora
+    return jnp.asarray(out.astype(x.dtype))
+
+
+def batched_lora_matmul_segments(x, w, a_rows, b_rows, off, cnt, scale):
+    """Jittable XLA segment fallback for the multi-adapter matmul.
+
+    Same contract as :func:`batched_lora_matmul_pallas` but lowered as
+    two plain matmuls with a per-request segment mask in between:
+
+        xa   = x @ a_rows^T                       (M, R_total)
+        mask = off_i <= p < off_i + cnt_i         (M, R_total)
+        y    = x @ w + (scale_i * mask * xa) @ b_rows
+
+    Offsets/counts/scales are runtime data, so one XLA executable serves
+    every tenant mix; this is the CPU/GPU serving path (and the in-jit
+    fallback everywhere).
+    """
+    xf = x.astype(jnp.float32)
+    base = xf @ w.astype(jnp.float32)
+    xa = xf @ a_rows.astype(jnp.float32).T            # (M, R_total)
+    p = jnp.arange(a_rows.shape[0], dtype=jnp.int32)[None, :]
+    off = jnp.asarray(off, jnp.int32).reshape(-1, 1)
+    cnt = jnp.asarray(cnt, jnp.int32).reshape(-1, 1)
+    seg = (p >= off) & (p < off + cnt)
+    sc = jnp.asarray(scale, jnp.float32).reshape(-1, 1)
+    lora = jnp.where(seg, xa, 0.0) @ b_rows.astype(jnp.float32)
+    return (base + sc * lora).astype(x.dtype)

@@ -15,3 +15,18 @@ def auto_interpret(interpret: bool | None) -> bool:
     if interpret is None:
         return jax.default_backend() not in ("tpu", "gpu")
     return interpret
+
+
+def bench_env() -> dict:
+    """The environment header every machine-readable benchmark emits
+    (``BENCH_agg.json``, ``BENCH_serve.json``): enough to tell whether
+    two committed runs are comparable -- jax version, device kind, and
+    whether Pallas kernels ran compiled or in interpreter mode."""
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "n_devices": len(jax.devices()),
+        "pallas_interpret": auto_interpret(None),
+    }

@@ -1,0 +1,22 @@
+"""Multi-tenant adapter serving: the FLaaS read path.
+
+The aggregation side (``repro.core``/``repro.fl``) produces fresh global
+adapters; this package consumes them at serving scale:
+
+* :class:`AdapterStore` -- paged per-tenant (A, B) storage over
+  (fan_out, fan_in, dtype) buckets, heterogeneous ranks packed as
+  rank-row segments, per-tenant offset/rank/scale as runtime data.
+* :class:`ServingEngine` -- one batched-kernel launch per layer applies
+  every tenant's adapter to a mixed request batch; ``publish()``
+  hot-swaps a freshly aggregated global with no recompile, versioned so
+  in-flight batches finish on the snapshot they started with.
+
+See ``docs/serving.md`` for the layout, the publish semantics, and the
+kernel contract; ``benchmarks/bench_serve.py`` runs the whole
+aggregate -> publish -> serve loop.
+"""
+from .engine import ServingEngine, merged_reference
+from .store import AdapterStore, SegTable, StoreSnapshot
+
+__all__ = ["AdapterStore", "SegTable", "StoreSnapshot", "ServingEngine",
+           "merged_reference"]

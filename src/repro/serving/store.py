@@ -1,0 +1,452 @@
+"""Paged multi-tenant adapter store (the FLaaS serving read path).
+
+A FLaaS server coordinates many tenants whose LoRA adapters share a base
+model but differ in **rank**.  Serving them from one executable requires
+all tenants' (A, B) factors to live in a layout where "which adapter, at
+which rank" is *runtime data*, never a compiled shape.  The
+:class:`AdapterStore` provides that layout:
+
+* **Buckets.**  Pairs bucket by **(fan_out, fan_in, dtype)** -- the pair
+  geometry, the same keying ``repro.core.plan``'s svd lowering uses (the
+  mean-path buckets key on row width alone, but the serving contraction
+  must keep row p of the A buffer and row p of the B buffer as the same
+  rank-one component, so both sides of a pair always share one
+  allocation).  Every bucket owns two row-major buffers: ``a_rows``
+  ``(R, fan_in)`` and ``b_rows`` ``(R, fan_out)`` -- B transposed so the
+  packed rank axis leads both, exactly the plan-bucket row convention
+  (:func:`repro.core.plan.pair_side_rows`).
+
+* **Pages.**  Buffer rows are allocated in fixed pages of ``r_max`` rows
+  from a free list; one (path, tenant) segment is one page, so segments
+  are always contiguous, allocation/free is O(1), and a tenant's offset
+  never moves while registered.  A tenant of rank r < r_max uses the
+  first r rows of its page (the rest stay zero).  Buffer capacity grows
+  by doubling when the free list empties -- the ONLY event that changes
+  a compiled shape (and therefore retraces serving); tenant churn,
+  rank mix, and publishes never do.
+
+* **Runtime tables.**  Per path, three dense per-tenant-slot device
+  arrays -- ``off`` (row offset), ``rank`` (live segment length),
+  ``scale`` (alpha / rank) -- indexed by the adapter ids a request batch
+  carries.  Slot 0 is reserved as the **null adapter** (rank 0): requests
+  carrying id 0 (or any evicted slot) get the pure base matmul.
+
+* **Snapshots & hot swap.**  Readers never touch the store directly:
+  :meth:`snapshot` returns an immutable :class:`StoreSnapshot` (buffers +
+  tables + version) and every write -- :meth:`put`, :meth:`publish`,
+  :meth:`remove` -- installs a *new* snapshot under a bumped version.
+  In-flight batches pinning the old snapshot finish on exactly the bytes
+  they started with.  Writes go through one fused scatter per touched
+  buffer side and **donate** the old buffer into it whenever no live
+  handed-out snapshot still references it (the steady-state publish
+  path: in-place bucket update, no copy, no recompile).
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import pair_side_rows
+from repro.lora.lora import DEFAULT_ALPHA, is_pair
+
+PyTree = Any
+
+#: destination-row sentinel values for the fused scatter (see
+#: :func:`_scatter_rows`): >= 0 gathers that source row, KEEP leaves the
+#: old value, ZERO clears the row (a segment shrinking under publish).
+_KEEP = -1
+_ZERO = -2
+
+
+def _scatter_rows(old, src, idx):
+    """One fused segment write: ``out[d] = src[idx[d]]`` where
+    ``idx[d] >= 0``, ``0`` where ``idx[d] == _ZERO``, else ``old[d]``.
+    ``idx`` is runtime data -- one executable per (R, S, width) shape."""
+    gathered = src[jnp.clip(idx, 0)]
+    keep = (idx == _KEEP)[:, None]
+    zero = (idx == _ZERO)[:, None]
+    return jnp.where(keep, old, jnp.where(zero, 0.0, gathered))
+
+
+_scatter_jit = jax.jit(_scatter_rows)
+_scatter_donate = jax.jit(_scatter_rows, donate_argnums=(0,))
+
+
+def _grow_rows(old, rows: int):
+    # capacity growth: a new, larger buffer (donation cannot alias
+    # across shapes); the ONLY serving-shape change in the store
+    return jnp.pad(old, ((0, rows - old.shape[0]), (0, 0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class SegTable:
+    """Per-path tenant-slot tables (device arrays, indexed by adapter id)."""
+    off: jax.Array            # (T_cap,) int32 row offset into the bucket
+    rank: jax.Array           # (T_cap,) int32 live segment length
+    scale: jax.Array          # (T_cap,) f32 LoRA scale (alpha / rank)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class StoreSnapshot:
+    """Immutable view of the store at one version.
+
+    Everything :func:`repro.kernels.batched_lora_matmul` needs: per-bucket
+    packed factor buffers and per-path segment tables.  Holding a
+    snapshot guarantees its buffers are never donated away -- an
+    in-flight batch sees exactly this version regardless of concurrent
+    publishes.
+    """
+    version: int
+    buffers: Mapping[tuple, tuple]       # bucket key -> (a_rows, b_rows)
+    tables: Mapping[str, SegTable]
+    bucket_of: Mapping[str, tuple]       # path -> bucket key
+
+    def pair_buffers(self, path: str):
+        a_rows, b_rows = self.buffers[self.bucket_of[path]]
+        return a_rows, b_rows
+
+    def table(self, path: str) -> SegTable:
+        return self.tables[path]
+
+
+class _Bucket:
+    """Host-side bookkeeping for one (fan_out, fan_in, dtype) bucket."""
+
+    def __init__(self, key, page_rows: int, n_pages: int):
+        self.key = key
+        self.page_rows = page_rows
+        self.n_pages = n_pages
+        self.free = list(range(n_pages - 1, -1, -1))
+        fan_out, fan_in, dtype = key
+        self.a_rows = jnp.zeros((n_pages * page_rows, fan_in), dtype)
+        self.b_rows = jnp.zeros((n_pages * page_rows, fan_out), dtype)
+
+    def alloc_page(self) -> int:
+        if not self.free:
+            new_pages = self.n_pages * 2
+            rows = new_pages * self.page_rows
+            self.a_rows = _grow_rows(self.a_rows, rows)
+            self.b_rows = _grow_rows(self.b_rows, rows)
+            self.free = list(range(new_pages - 1, self.n_pages - 1, -1))
+            self.n_pages = new_pages
+        return self.free.pop()
+
+    def free_page(self, page: int) -> None:
+        self.free.append(page)
+
+
+class AdapterStore:
+    """Paged per-tenant (A, B) store over (fan_out, fan_in, dtype) buckets.
+
+    Parameters
+    ----------
+    specs
+        ``{path: (fan_out, fan_in)}`` -- the LoRA-adapted layers served.
+        Paths sharing a geometry share a bucket.
+    r_max
+        Page size in rank rows: the largest rank any tenant may register.
+    dtype
+        Factor buffer dtype (all buckets).
+    alpha
+        Default LoRA alpha; a tenant's serve scale is ``alpha / rank``
+        unless overridden per :meth:`register` / :meth:`put`.
+    init_pages, init_tenant_capacity
+        Initial bucket pages per path-geometry and tenant-slot table
+        size; both grow by doubling (each growth changes a compiled
+        shape, so size them for the expected fleet to avoid retraces).
+    """
+
+    def __init__(self, specs: Mapping[str, tuple], *, r_max: int,
+                 dtype=jnp.float32, alpha: float = DEFAULT_ALPHA,
+                 init_pages: int = 8, init_tenant_capacity: int = 8):
+        if r_max < 1:
+            raise ValueError(f"r_max must be >= 1, got {r_max}")
+        self.specs = {p: (int(fo), int(fi))
+                      for p, (fo, fi) in specs.items()}
+        self.r_max = int(r_max)
+        self.dtype = jnp.dtype(dtype)
+        self.alpha = float(alpha)
+        self._buckets: dict[tuple, _Bucket] = {}
+        self._bucket_of: dict[str, tuple] = {}
+        for path, (fo, fi) in self.specs.items():
+            key = (fo, fi, str(self.dtype))
+            self._bucket_of[path] = key
+            if key not in self._buckets:
+                self._buckets[key] = _Bucket(key, self.r_max,
+                                             max(int(init_pages), 1))
+        # tenant registry: slot 0 is the reserved null adapter (rank 0)
+        self._t_cap = max(int(init_tenant_capacity), 2)
+        self._slot_of: dict[Any, int] = {}
+        self._free_slots = list(range(self._t_cap - 1, 0, -1))
+        self._page_of: dict[tuple, int] = {}       # (path, slot) -> page
+        self._off = {p: np.zeros(self._t_cap, np.int32) for p in specs}
+        self._rank = {p: np.zeros(self._t_cap, np.int32) for p in specs}
+        self._scale = {p: np.zeros(self._t_cap, np.float32)
+                       for p in specs}
+        self._version = 0
+        self._snapshot: StoreSnapshot | None = None
+        self._live: "weakref.WeakSet[StoreSnapshot]" = weakref.WeakSet()
+        self._rebuild_snapshot()
+
+    # ----------------------------------------------------------- reading --
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self._slot_of)
+
+    def tenants(self):
+        return list(self._slot_of)
+
+    def slot(self, tenant) -> int:
+        """The dense adapter id requests for ``tenant`` must carry."""
+        return self._slot_of[tenant]
+
+    def snapshot(self) -> StoreSnapshot:
+        """The current immutable view; pin it for the life of a batch.
+
+        Each call hands out a fresh (shallow) snapshot object sharing the
+        version's buffers: its *lifetime* is what marks those buffers as
+        pinned, so writes copy instead of donating while any handed-out
+        snapshot of the current version is still alive."""
+        snap = dataclasses.replace(self._snapshot)
+        self._live.add(snap)
+        return snap
+
+    def _rebuild_snapshot(self) -> None:
+        buffers = {k: (b.a_rows, b.b_rows)
+                   for k, b in self._buckets.items()}
+        tables = {p: SegTable(off=jnp.asarray(self._off[p]),
+                              rank=jnp.asarray(self._rank[p]),
+                              scale=jnp.asarray(self._scale[p]))
+                  for p in self.specs}
+        self._snapshot = StoreSnapshot(
+            version=self._version, buffers=buffers, tables=tables,
+            bucket_of=dict(self._bucket_of))
+
+    def _bump(self) -> None:
+        self._version += 1
+        self._rebuild_snapshot()
+
+    def _pinned_ids(self) -> set:
+        """Identities of every buffer some live handed-out snapshot still
+        references.  Donating one of these would tear the snapshot out
+        from under an in-flight batch; anything else may be updated in
+        place.  (Table bumps share buffers across versions, so pinning is
+        by buffer identity, not version.)"""
+        return {id(arr) for s in self._live
+                for pair in s.buffers.values() for arr in pair}
+
+    # ------------------------------------------------------- registration --
+    def register(self, tenant, *, rank: int,
+                 scale: float | None = None) -> int:
+        """Allocate ``tenant`` a slot and one zeroed page per path at
+        ``rank``; returns the adapter id.  Rows fill on the next
+        :meth:`put` / :meth:`publish`."""
+        if not 0 < rank <= self.r_max:
+            raise ValueError(
+                f"tenant rank must be in [1, r_max={self.r_max}], "
+                f"got {rank}")
+        if tenant in self._slot_of:
+            slot = self._slot_of[tenant]
+        else:
+            slot = self._alloc_slot(tenant)
+        for path in self.specs:
+            key = (path, slot)
+            if key not in self._page_of:
+                bucket = self._buckets[self._bucket_of[path]]
+                self._page_of[key] = bucket.alloc_page()
+            self._off[path][slot] = (self._page_of[key]
+                                     * self._buckets[
+                                         self._bucket_of[path]].page_rows)
+            self._rank[path][slot] = rank
+            self._scale[path][slot] = (self.alpha / max(rank, 1)
+                                       if scale is None else scale)
+        self._bump()
+        return slot
+
+    def _alloc_slot(self, tenant) -> int:
+        if not self._free_slots:
+            new_cap = self._t_cap * 2
+            for p in self.specs:
+                self._off[p] = np.pad(self._off[p],
+                                      (0, new_cap - self._t_cap))
+                self._rank[p] = np.pad(self._rank[p],
+                                       (0, new_cap - self._t_cap))
+                self._scale[p] = np.pad(self._scale[p],
+                                        (0, new_cap - self._t_cap))
+            self._free_slots = list(range(new_cap - 1,
+                                          self._t_cap - 1, -1))
+            self._t_cap = new_cap
+        slot = self._free_slots.pop()
+        self._slot_of[tenant] = slot
+        return slot
+
+    def remove(self, tenant) -> None:
+        """Evict a tenant: free its pages and slot.  Requests still
+        carrying the stale id serve the base model (rank 0)."""
+        slot = self._slot_of.pop(tenant)
+        for path in self.specs:
+            page = self._page_of.pop((path, slot), None)
+            if page is not None:
+                self._buckets[self._bucket_of[path]].free_page(page)
+            self._off[path][slot] = 0
+            self._rank[path][slot] = 0
+            self._scale[path][slot] = 0.0
+        self._free_slots.append(slot)
+        self._bump()
+
+    # -------------------------------------------------------------- writes --
+    def _write(self, writes: dict) -> None:
+        """Apply ``{bucket key: {'a'|'b': (src_rows, idx)}}`` -- one fused
+        scatter per touched buffer side, donating the old buffer when no
+        live snapshot pins it."""
+        pinned = self._pinned_ids()
+        for key, sides in writes.items():
+            bucket = self._buckets[key]
+            for side, (src, idx) in sides.items():
+                old = bucket.a_rows if side == "a" else bucket.b_rows
+                scatter = (_scatter_jit if id(old) in pinned
+                           else _scatter_donate)
+                new = scatter(old, src, jnp.asarray(idx))
+                if side == "a":
+                    bucket.a_rows = new
+                else:
+                    bucket.b_rows = new
+        self._bump()
+
+    def _pair_rows(self, path: str, pair: Mapping):
+        """A pair's rank-leading packed rows, checked against the spec."""
+        fo, fi = self.specs[path]
+        A, B = jnp.asarray(pair["A"]), jnp.asarray(pair["B"])
+        if A.ndim != 2 or B.ndim != 2:
+            raise ValueError(
+                f"serving packs 2-D pairs; {path} has A{A.shape} "
+                f"B{B.shape} (flatten layer-stacked pairs into one path "
+                "per layer)")
+        if A.shape[1] != fi or B.shape[0] != fo:
+            raise ValueError(
+                f"{path}: pair A{A.shape}/B{B.shape} does not match "
+                f"spec (fan_out={fo}, fan_in={fi})")
+        rank = int(np.asarray(pair["rank"]))
+        a_rows = pair_side_rows(A, "A").astype(self.dtype)
+        b_rows = pair_side_rows(B, "B").astype(self.dtype)
+        return a_rows, b_rows, rank
+
+    def put(self, tenant, adapters: PyTree, *,
+            scale: float | None = None) -> int:
+        """Install (or replace) one tenant's personalized adapters.
+
+        ``adapters``: ``{path: pair}`` covering every spec path.  The
+        tenant's rank/scale tables follow the pairs' rank leaves; returns
+        the adapter id.
+        """
+        pairs = {p: adapters[p] for p in self.specs}
+        for p, pair in pairs.items():
+            if not is_pair(pair):
+                raise ValueError(f"{p}: not a LoRA pair")
+        ranks = {p: int(np.asarray(pair["rank"]))
+                 for p, pair in pairs.items()}
+        slot = self.register(tenant, rank=max(max(ranks.values()), 1),
+                             scale=scale)
+        writes: dict = {}
+        for path, pair in pairs.items():
+            a_rows, b_rows, rank = self._pair_rows(path, pair)
+            self._rank[path][slot] = rank
+            self._scale[path][slot] = (self.alpha / max(rank, 1)
+                                       if scale is None else scale)
+            bucket = self._buckets[self._bucket_of[path]]
+            off = int(self._off[path][slot])
+            sides = writes.setdefault(bucket.key,
+                                      {"a": ([], []), "b": ([], [])})
+            for side, rows in (("a", a_rows), ("b", b_rows)):
+                sides[side][0].append(rows[:rank])
+                sides[side][1].append((off, rank))
+        self._write(self._assemble(writes))
+        return slot
+
+    def _assemble(self, writes: dict) -> dict:
+        """Concatenate per-bucket source rows and build the full-buffer
+        scatter index (host-side, O(bucket rows) int32)."""
+        out: dict = {}
+        for key, sides in writes.items():
+            bucket = self._buckets[key]
+            out[key] = {}
+            for side, (srcs, segs) in sides.items():
+                idx = np.full(bucket.n_pages * bucket.page_rows, _KEEP,
+                              np.int32)
+                src_off = 0
+                for rows, (off, cnt) in zip(srcs, segs):
+                    idx[off:off + cnt] = np.arange(
+                        src_off, src_off + cnt, dtype=np.int32)
+                    # clear the rest of the page: stale rows from a
+                    # higher-rank past must not survive the new segment
+                    idx[off + cnt:off + bucket.page_rows] = _ZERO
+                    src_off += cnt
+                src = (jnp.concatenate(srcs, axis=0) if srcs
+                       else jnp.zeros((1, bucket.a_rows.shape[1]
+                                       if side == "a"
+                                       else bucket.b_rows.shape[1]),
+                                      self.dtype))
+                if src.shape[0] == 0:
+                    src = jnp.zeros((1, src.shape[1]), self.dtype)
+                out[key][side] = (src, idx)
+        return out
+
+    def publish(self, tree: PyTree) -> int:
+        """Hot-swap a freshly aggregated global into every tenant segment.
+
+        ``tree``: ``{path: pair}`` -- the server's global adapter tree
+        (e.g. ``ServerState.adapters``).  Every registered tenant's
+        segment for each path is rewritten with the global's first
+        ``min(tenant_rank, global_rank)`` rank rows (the paper's Alg. 2
+        re-slice, materialized server-side); rows past the global rank
+        are zeroed.  One fused scatter per bucket side, donated in place
+        when no in-flight snapshot pins the buffer; returns the new
+        version.  Never changes a compiled shape.
+        """
+        writes: dict = {}
+        for path in self.specs:
+            pair = tree[path]
+            a_rows, b_rows, g_rank = self._pair_rows(path, pair)
+            bucket = self._buckets[self._bucket_of[path]]
+            sides = writes.setdefault(bucket.key,
+                                      {"a": ([], []), "b": ([], [])})
+            for slot in self._slot_of.values():
+                t_rank = int(self._rank[path][slot])
+                cnt = min(t_rank, g_rank)
+                off = int(self._off[path][slot])
+                for side, rows in (("a", a_rows), ("b", b_rows)):
+                    sides[side][0].append(rows[:cnt])
+                    sides[side][1].append((off, cnt))
+        self._write(self._assemble(writes))
+        return self._version
+
+    # ------------------------------------------------------------ readback --
+    def get(self, tenant) -> PyTree:
+        """Read a tenant's pairs back out (tests / debugging; copies)."""
+        slot = self._slot_of[tenant]
+        snap = self.snapshot()
+        out = {}
+        for path, (fo, fi) in self.specs.items():
+            a_rows, b_rows = snap.pair_buffers(path)
+            off = int(self._off[path][slot])
+            r = int(self._rank[path][slot])
+            page = np.zeros((self.r_max, fi), self.dtype)
+            page_b = np.zeros((self.r_max, fo), self.dtype)
+            page[:r] = np.asarray(a_rows[off:off + r])
+            page_b[:r] = np.asarray(b_rows[off:off + r])
+            out[path] = {"A": jnp.asarray(page),
+                         "B": pair_side_rows(jnp.asarray(page_b), "B"),
+                         "rank": jnp.asarray(r, jnp.int32)}
+        return out
+
+
+__all__ = ["AdapterStore", "StoreSnapshot", "SegTable"]
