@@ -37,6 +37,7 @@ and the parity/property suites, which now exercise plans end to end).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Mapping, Sequence
 
 import jax
@@ -552,8 +553,23 @@ def _build_mean_round(strategy, spec: CohortSpec,
         return _build_mean_distributed(strategy, spec, buckets, masks,
                                        rank_leaves, retains)
 
+    # interpreted Pallas pays per-op Python overhead proportional to the
+    # packed bucket's grid, so "one fused launch" *loses* to many small
+    # compiled launches on CPU; route interpret-mode plans through the
+    # fused XLA lowering and keep the true kernel for compiled backends
+    from repro.kernels.runtime import auto_interpret
+    use_kernel = (spec.kind == "pallas"
+                  and not auto_interpret(spec.interpret))
+    # robust reductions (trimmed/median/clipped) reuse the mean family's
+    # packed buckets; the knobs are baked into the traced combine, so
+    # they join the executor cache key
+    robust = getattr(strategy, "robustness", "none")
+    knobs = ((robust, float(getattr(strategy, "clip_norm", 0.0) or 0.0),
+              float(getattr(strategy, "trim_frac", 0.0) or 0.0))
+             if robust != "none" else ())
+
     exec_cache = strategy.__dict__.setdefault("_plan_exec_cache", {})
-    key = ("mean", norm_restore, _shape_key(spec))
+    key = ("mean", norm_restore, knobs, _shape_key(spec))
     fns = exec_cache.get(key)
     if fns is None:
         def pack_fn(ab):
@@ -581,7 +597,32 @@ def _build_mean_round(strategy, spec: CohortSpec,
                                              s) for s in b.slots]
                     prev = (jnp.concatenate(parts, axis=0)
                             if len(parts) > 1 else parts[0])
-                if spec.kind == "pallas":
+                if robust != "none":
+                    if use_kernel:
+                        from repro.kernels.rbla_agg.ops import (
+                            packed_robust_inline)
+                        out = packed_robust_inline(
+                            xs[bi], ms[bi], wt, prev, mode=robust,
+                            clip_norm=knobs[1], trim_frac=knobs[2],
+                            interpret=spec.interpret)
+                    elif (spec.kind == "pallas"
+                          and robust in ("trimmed", "median")):
+                        # interpret-mode order statistics: the fused
+                        # odd-even network in plain XLA -- jnp.sort is a
+                        # serial per-lane sort on CPU and the emulated
+                        # kernel pays per-tile grid overhead
+                        from repro.kernels.rbla_agg.ref import (
+                            packed_robust_xla)
+                        out = packed_robust_xla(
+                            xs[bi], ms[bi], wt, prev, mode=robust,
+                            clip_norm=knobs[1], trim_frac=knobs[2])
+                    else:
+                        from repro.kernels.rbla_agg.ref import (
+                            packed_robust_ref)
+                        out = packed_robust_ref(
+                            xs[bi], ms[bi], wt, prev, mode=robust,
+                            clip_norm=knobs[1], trim_frac=knobs[2])
+                elif use_kernel:
                     from repro.kernels.rbla_agg.ops import packed_agg_inline
                     out = packed_agg_inline(xs[bi], ms[bi], wt, prev,
                                             norm_by=norm_by,
@@ -720,10 +761,11 @@ def _build_mean_distributed(strategy, spec, buckets, masks_const,
 
 # ----------------------------------------------------- packed stack plans --
 def _build_stack_round(strategy, spec: CohortSpec) -> CompiledRound:
-    """flora's pallas plan: the whole stacking round is copies/scales at
-    static offsets, fused into one ``packed_stack`` launch per bucket.
-    Pairs whose stacked rank exceeds the cap fall back to the reference
-    pair math (SVD re-projection) inside the same jitted round."""
+    """flora's packed plan (ref + pallas): the whole stacking round is
+    copies/scales at static offsets, fused into one ``packed_stack``
+    launch (or one XLA slice-update chain) per bucket.  Pairs whose
+    stacked rank exceeds the cap fall back to the reference pair math
+    (SVD re-projection) inside the same jitted round."""
     n = spec.n_clients
 
     # ---- static per-pair stacking geometry ------------------------------
@@ -829,6 +871,14 @@ def _build_stack_round(strategy, spec: CohortSpec) -> CompiledRound:
     fallback = [pi for pi, p in enumerate(plans) if not p["packable"]]
     n_scales = 1 + len(scale_slots)
 
+    # interpreted Pallas pays per-op Python overhead on every static copy,
+    # so the fused stacking loses to XLA there; the copies are static
+    # slices either way, so the ref lowering is just as fused (and is the
+    # only lowering the "ref" backend may use)
+    from repro.kernels.runtime import auto_interpret
+    use_kernel = (spec.kind == "pallas"
+                  and not auto_interpret(spec.interpret))
+
     def round_fn(ab, wt_raw, prev_ab):
         wt = wt_raw
         mean_w = jnp.mean(wt)
@@ -851,7 +901,8 @@ def _build_stack_round(strategy, spec: CohortSpec) -> CompiledRound:
 
         outs = []
         for bi, b in enumerate(buckets):
-            from repro.kernels.rbla_agg.ops import packed_stack_inline
+            from repro.kernels.rbla_agg.ops import (packed_stack_inline,
+                                                    packed_stack_ref)
             x = jnp.concatenate(
                 [_pack_side(ab[s.pair_idx][s.side], s) for s in b.slots],
                 axis=1) if len(b.slots) > 1 else _pack_side(
@@ -869,12 +920,14 @@ def _build_stack_round(strategy, spec: CohortSpec) -> CompiledRound:
                                 rows=(s.rows // s.r_st) * p["prev_r_st"])))
                 prev = (jnp.concatenate(parts, axis=0)
                         if len(parts) > 1 else parts[0])
-            outs.append(packed_stack_inline(
+            stack = (functools.partial(packed_stack_inline,
+                                       interpret=spec.interpret)
+                     if use_kernel else packed_stack_ref)
+            outs.append(stack(
                 x, scales, prev,
                 copies_x=bucket_meta[bi]["copies_x"],
                 copies_prev=bucket_meta[bi]["copies_prev"],
-                out_rows=bucket_meta[bi]["out_rows"],
-                interpret=spec.interpret))
+                out_rows=bucket_meta[bi]["out_rows"]))
 
         results: dict = {}
         for bi, b in enumerate(buckets):
@@ -1119,9 +1172,9 @@ def build_plan(strategy, spec: CohortSpec) -> CompiledRound:
       rbla_ranked) on every backend;
     * ``"mean_norm"`` -- ditto plus rbla_norm's per-row norm restore
       (scalar-rank pairs only; ref and pallas backends);
-    * ``"stack"`` -- flora: packed copy/scale stacking on pallas, whole-
-      round jit on ref, the cached ragged-concat collective when
-      distributed;
+    * ``"stack"`` -- flora: packed copy/scale stacking on ref and pallas
+      (fused XLA slice-updates where Pallas would be interpreted), the
+      cached ragged-concat collective when distributed;
     * ``"svd"`` -- packed batched factored SVD (``repro.core.lowrank``):
       one batched QR-core-SVD per same-shape pair bucket on ref and
       pallas; the gathered-factor collective (its own cache) when
@@ -1140,10 +1193,12 @@ def build_plan(strategy, spec: CohortSpec) -> CompiledRound:
                 return _build_eager_round(strategy, spec)
             return _build_mean_round(strategy, spec, norm_restore=True)
         if mode == "stack":
-            if spec.kind == "pallas":
+            if spec.kind in ("pallas", "ref"):
+                # both lower to the packed copy/scale round; the ref kind
+                # (and interpret-mode pallas) uses the fused XLA stacking
+                # instead of the kernel -- the whole-round jit of the
+                # per-pair reference math measured *slower* than legacy
                 return _build_stack_round(strategy, spec)
-            if spec.kind == "ref":
-                return _build_jit_round(strategy, spec)
             return _build_eager_round(strategy, spec)
         if mode == "svd":
             if spec.kind == "distributed":

@@ -116,11 +116,20 @@ class FoldState:
         segment ledger here -- per-pair segment ranks, masses, and the
         B-column scales currently applied -- so folds can re-scale in
         place instead of replaying from the anchor).
+    ``momentum``
+        server momentum buffer (FedBuff/FedAvgM-style): a pytree
+        mirroring the adapters' float leaves, or ``None`` when the
+        service runs without momentum.  The fold path updates it as
+        ``m <- beta * m + (s_new - s_old)`` and publishes
+        ``s_old + m`` -- the buffer lives on aggregated state only, so
+        secure-aggregation-compatible buffering is unaffected (no
+        per-client data is retained).
     """
     mass: float = 0.0
     row_mass: PyTree | None = None
     n_folds: int = 0
     extra: Any = None
+    momentum: PyTree | None = None
 
 
 # ---------------------------------------------------------------- registry --
@@ -336,6 +345,15 @@ class AggregationStrategy:
     #: jit of the reference math, None = eager legacy execution (the safe
     #: default for strategies whose leaf math the planner cannot assume)
     plan_mode: str | None = None
+    #: Byzantine-robustness contract: "none" = plain (weighted-mean
+    #: family, a single adversarial upload can move the aggregate
+    #: arbitrarily far), "clipped" = per-row norm clipping bounds each
+    #: client's displacement by ~clip_norm / (owner mass), "trimmed" /
+    #: "median" = per-coordinate order statistics with breakdown point
+    #: ~trim_frac (resp. 1/2) of a row's owners.  The property harness
+    #: checks the declared contract with a 1e6x-norm adversary (see
+    #: tests/test_strategy_properties.py).
+    robustness: str = "none"
 
     def with_options(self, **options) -> "AggregationStrategy":
         """Return a configured copy of this strategy.
@@ -1146,6 +1164,136 @@ class RBLANormStrategy(AggregationStrategy):
         return _map_pairs(agg_pair, stacked_tree, prev_tree, strict=True)
 
 
+class RobustRBLAStrategy(AggregationStrategy):
+    """Byzantine-tolerant RBLA family (pair-structured): the masked
+    rank-row aggregation of Eq. 7 with the weighted mean replaced by a
+    robust reduction over each row's owners.  Three registered variants
+    share this base:
+
+    * ``rbla_clipped`` -- every client rank-row is L2-clipped to
+      ``clip_norm`` before the standard masked weighted mean; honest
+      well-scaled uploads (norms under the clip) aggregate *exactly* like
+      ``rbla``, an adversary's displacement is bounded by
+      ``clip_norm * w_adv / (owner mass)``.
+    * ``rbla_trimmed`` -- per-coordinate trimmed mean over a row's
+      owners: drop ``k = min(floor(trim_frac * c), (c-1)//2)`` smallest
+      and largest values among the ``c`` owners.  Breakdown point
+      ~``trim_frac``.
+    * ``rbla_median`` -- coordinate-wise median over a row's owners
+      (even ``c``: mean of the middle two).  Breakdown point 1/2.
+
+    Trimmed/median are *unweighted* over owners: example counts are
+    client-reported and therefore adversary-controlled, so order
+    statistics run on values, not masses.  Rows with no owner retain the
+    previous global, exactly like ``rbla``.  All three lower through the
+    packed mean-family plan (one fused ``packed_robust`` launch per
+    (width, dtype) bucket); there is no distributed path -- order
+    statistics need every client's value on one device, and clipping
+    needs whole rows (``use backend='ref'`` or ``'pallas'``).  Folding is
+    non-incremental by construction (a robust reduction is not a running
+    mean), so the async service uses the exact replay path.
+    """
+    norm_by = "mask"
+    use_mask = True
+    retains_prev = True
+    supports_pallas = True
+    supports_distributed = False
+    # robust reductions intentionally are not weighted means, so no
+    # FedAvg degeneracy is declared (clipped matches rbla only while
+    # every row norm is under the clip)
+    fedavg_equivalence = None
+    supports_incremental = False
+    plan_mode = "mean"                 # packed buckets + robust combine
+    #: L2 clip applied per (client, rank-row) by "clipped"
+    clip_norm: float = 100.0
+    #: per-end trim fraction of a row's owners used by "trimmed"
+    trim_frac: float = 0.2
+
+    def leaf(self, stacked, mask, weights, prev=None):
+        # non-pair leaves (base trainables) have no rank-row structure to
+        # defend; they keep the plain masked mean
+        return rbla_leaf(stacked, mask, weights, prev)
+
+    def _robust_pair(self, agg, pair, prev_pair, w, ranks):
+        A, B = pair["A"], pair["B"]
+        pranks = ranks
+        if pranks is None and jnp.asarray(pair["rank"]).ndim == 1:
+            pranks = jnp.asarray(pair["rank"], jnp.int32)
+        if A.ndim != 3 or B.ndim != 3 or pranks is None:
+            raise NotImplementedError(
+                f"{self.name} supports scalar-rank pairs (got "
+                f"A.ndim={A.ndim}); layer-stacked pairs lower through "
+                "the compiled plan, which packs per-layer rows")
+        from .masks import stacked_rank_masks
+        masks = stacked_rank_masks(A.shape[-2], pranks)
+        pA = pB = None
+        if prev_pair is not None:
+            pA, pB = prev_pair["A"], prev_pair["B"].T
+        outA = agg(A, masks, w, pA)
+        outB = agg(jnp.swapaxes(B, 1, 2), masks, w, pB).T
+        return {"A": outA.astype(A.dtype), "B": outB.astype(B.dtype),
+                "rank": pair["rank"][0]}
+
+    def aggregate_tree(self, stacked_tree, mask_tree, weights,
+                       prev_tree=None, *, r_max=None, client_ranks=None):
+        from repro.kernels.rbla_agg.ref import packed_robust_ref
+        w = jnp.asarray(weights, jnp.float32)
+        ranks = (None if client_ranks is None
+                 else jnp.asarray(client_ranks, jnp.int32))
+
+        def agg(x, masks, wt, prev):
+            return packed_robust_ref(x, masks, wt, prev,
+                                     mode=self.robustness,
+                                     clip_norm=self.clip_norm,
+                                     trim_frac=self.trim_frac)
+        return _map_pairs(
+            lambda pair, prev_pair: self._robust_pair(agg, pair, prev_pair,
+                                                      w, ranks),
+            stacked_tree, prev_tree, strict=True)
+
+    # --------------------------------------------------- (d) Pallas path --
+    def aggregate_tree_pallas(self, stacked_tree, weights, client_ranks,
+                              prev_tree=None, *, r_max=None,
+                              interpret=None):
+        """Kernel path: one fused ``packed_robust`` launch per side (the
+        compiled plan fuses all pairs into one launch per bucket)."""
+        from repro.kernels.rbla_agg.ops import packed_robust
+        w = jnp.asarray(weights, jnp.float32)
+        ranks = (None if client_ranks is None
+                 else jnp.asarray(client_ranks, jnp.int32))
+
+        def agg(x, masks, wt, prev):
+            return packed_robust(x, masks, wt, prev, mode=self.robustness,
+                                 clip_norm=self.clip_norm,
+                                 trim_frac=self.trim_frac,
+                                 interpret=interpret)
+        return _map_pairs(
+            lambda pair, prev_pair: self._robust_pair(agg, pair, prev_pair,
+                                                      w, ranks),
+            stacked_tree, prev_tree, strict=True)
+
+
+@register_strategy
+class RBLAClippedStrategy(RobustRBLAStrategy):
+    name = "rbla_clipped"
+    aliases = ("clipped",)
+    robustness = "clipped"
+
+
+@register_strategy
+class RBLATrimmedStrategy(RobustRBLAStrategy):
+    name = "rbla_trimmed"
+    aliases = ("trimmed",)
+    robustness = "trimmed"
+
+
+@register_strategy
+class RBLAMedianStrategy(RobustRBLAStrategy):
+    name = "rbla_median"
+    aliases = ("median",)
+    robustness = "median"
+
+
 @register_strategy
 class SVDStrategy(AggregationStrategy):
     """Product-space aggregation: weighted-average the effective updates
@@ -1827,6 +1975,7 @@ __all__ = [
     "register_strategy", "get_strategy", "list_strategies",
     "resolve_backend", "stack_trees", "adapter_live_ranks",
     "FedAvgStrategy", "ZeropadStrategy", "RBLAStrategy",
-    "RBLARankedStrategy", "RBLANormStrategy", "SVDStrategy",
-    "FloraStrategy",
+    "RBLARankedStrategy", "RBLANormStrategy", "RobustRBLAStrategy",
+    "RBLAClippedStrategy", "RBLATrimmedStrategy", "RBLAMedianStrategy",
+    "SVDStrategy", "FloraStrategy",
 ]

@@ -47,7 +47,11 @@ example.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable
+
+import jax
+import jax.numpy as jnp
 
 from repro.core.strategy import (ClientUpdate, FoldState, ServerState,
                                  get_strategy)
@@ -124,6 +128,16 @@ class AsyncAggregator:
         freshly folded global into the serving read path (see
         ``docs/serving.md``).  ``publish_every > 1`` batches swaps when
         folds land faster than serving wants new versions.
+    server_momentum
+        FedBuff/FedAvgM-style server momentum ``beta`` in ``[0, 1)`` on
+        the fold path: each state advance publishes ``s_old + m`` with
+        ``m <- beta * m + (s_new - s_old)`` over the adapters' float
+        leaves (``beta=0`` disables, bit-exact).  The buffer
+        (:attr:`FoldState.momentum <repro.core.FoldState>`) lives on
+        aggregated state only, so secure-aggregation-compatible
+        buffering is unaffected.  Requires a fixed-rank strategy
+        (``rank_contract="fixed"``): a rank-changing live rank would
+        change the buffer's meaning round to round.
     """
 
     STALENESS_CLOCKS = ("version", "wall")
@@ -135,7 +149,8 @@ class AsyncAggregator:
                  deadline: float | None = None, backend: str = "auto",
                  replay_window: int = 64,
                  on_publish: "Callable | None" = None,
-                 publish_every: int = 1):
+                 publish_every: int = 1,
+                 server_momentum: float = 0.0):
         if buffer_size < 1:
             raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
         if replay_window < 1:
@@ -148,7 +163,18 @@ class AsyncAggregator:
             raise ValueError(
                 f"unknown staleness_clock {staleness_clock!r}; options: "
                 f"{self.STALENESS_CLOCKS}")
+        if not 0.0 <= server_momentum < 1.0:
+            raise ValueError(
+                f"server_momentum must be in [0, 1), got {server_momentum}")
         self.strategy = get_strategy(strategy)
+        if server_momentum > 0.0 and self.strategy.rank_contract != "fixed":
+            raise ValueError(
+                f"server momentum needs a fixed-rank strategy; "
+                f"{self.strategy.name!r} declares "
+                f"rank_contract={self.strategy.rank_contract!r} (the live "
+                "rank -- and the momentum buffer's meaning -- would change "
+                "round to round)")
+        self.server_momentum = float(server_momentum)
         self.state = state
         self.backend = backend
         self.staleness_clock = staleness_clock
@@ -166,6 +192,7 @@ class AsyncAggregator:
         self.n_received = 0
         self.n_folded = 0
         self.n_flushes = 0
+        self.n_dropped = 0          # zero-mass flushes discarded whole
         self.staleness_sum = 0.0
 
     # ------------------------------------------------------------- intake --
@@ -182,6 +209,26 @@ class AsyncAggregator:
                 "schedules must map into (0, 1]")
         return s
 
+    def _validate_update(self, update: ClientUpdate) -> None:
+        """Ingestion front door: reject malformed uploads before they can
+        poison the buffer (the robust strategies bound what *well-formed*
+        adversarial values can do; NaN/inf and zero/negative masses are
+        rejected outright -- a NaN survives any mean, trimmed or not)."""
+        n = float(update.n_examples)
+        if not (math.isfinite(n) and n > 0.0):
+            raise ValueError(
+                "rejected client update: n_examples must be positive and "
+                f"finite, got {update.n_examples!r}")
+        for name, tree in (("adapters", update.adapters),
+                           ("base_trainable", update.base_trainable)):
+            for leaf in jax.tree.leaves(tree):
+                x = jnp.asarray(leaf)
+                if (jnp.issubdtype(x.dtype, jnp.floating)
+                        and not bool(jnp.all(jnp.isfinite(x)))):
+                    raise ValueError(
+                        "rejected client update: non-finite values in "
+                        f"{name}")
+
     def submit(self, update: ClientUpdate, model_version: int | None = None,
                now: float = 0.0, pulled_at: float | None = None) -> bool:
         """Receive one client update; fold or buffer it.
@@ -190,9 +237,14 @@ class AsyncAggregator:
         ``version - model_version`` (the server version the client pulled
         before training; ``None`` = fresh), on ``"wall"`` it is ``now -
         pulled_at`` (the service clock when the client pulled; ``None`` =
-        fresh).  ``now`` is the service clock (any monotone unit), also
-        used for deadline flushes.  Returns True when the state advanced.
+        fresh; negative skew -- a pull timestamp ahead of the server
+        clock -- clamps to 0 rather than *inflating* the weight).  ``now``
+        is the service clock (any monotone unit), also used for deadline
+        flushes.  Malformed updates (non-positive / non-finite
+        ``n_examples``, NaN/inf tensors) raise ``ValueError`` and leave
+        the service untouched.  Returns True when the state advanced.
         """
+        self._validate_update(update)
         if self.staleness_clock == "wall":
             tau = (0.0 if pulled_at is None
                    else max(0.0, float(now) - float(pulled_at)))
@@ -225,13 +277,24 @@ class AsyncAggregator:
     # -------------------------------------------------------------- drain --
     def flush(self, now: float = 0.0) -> ServerState:
         """Aggregate everything buffered into the live state; push the
-        advanced state through the serving publish hook (if wired)."""
+        advanced state through the serving publish hook (if wired).
+
+        A batch whose total mass is zero (staleness discounts can
+        underflow any positive ``n_examples`` to 0) is dropped whole and
+        the state does not advance: there is no convex combination to
+        take, and mixing by ``0 / 0`` would publish NaNs.
+        """
+        if len(self.buffer) and not self.buffer.total_weight() > 0.0:
+            self.n_dropped += len(self.buffer.pop())
+            return self.state
         batch = self.buffer.pop()
         if not batch:
             return self.state
         self.n_flushes += 1
+        prev_state = self.state
         if self.buffer.size == 1 and len(batch) == 1:
             self._fold_one(batch[0].update, batch[0].weight)
+            self._apply_momentum(prev_state)
         else:
             # semi-async mini-cohort: one joint aggregate, staleness
             # already folded into the weights
@@ -239,13 +302,41 @@ class AsyncAggregator:
                 self.state, [b.update for b in batch],
                 weights=[b.weight for b in batch], backend=self.backend)
             self.n_folded += len(batch)
+            self._apply_momentum(prev_state)
             # a flush is a macro-round boundary: re-anchor the per-update
-            # machinery at the new state
+            # machinery at the new (published) state; the momentum buffer
+            # is cross-round server state and survives the re-anchor
             self._anchor = self.state
             self._replay.clear()
+            momentum = self._fold_state.momentum
             self._fold_state = self.strategy.init_fold(self.state)
+            self._fold_state.momentum = momentum
         self._maybe_publish()
         return self.state
+
+    def _apply_momentum(self, prev_state: ServerState) -> None:
+        """Publish ``s_old + m`` with ``m <- beta*m + (s_new - s_old)``
+        over the adapters' float leaves (rank leaves pass through)."""
+        beta = self.server_momentum
+        if beta <= 0.0 or prev_state.adapters is None:
+            return
+
+        def _is_float(x):
+            return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+        old, new = prev_state.adapters, self.state.adapters
+        m = self._fold_state.momentum
+        if m is None:
+            m = jax.tree.map(
+                lambda x: jnp.zeros_like(x) if _is_float(x) else x, old)
+        m = jax.tree.map(
+            lambda mv, o, c: beta * mv + (c - o) if _is_float(c) else c,
+            m, old, new)
+        self._fold_state.momentum = m
+        adapters = jax.tree.map(
+            lambda mv, o, c: (o + mv).astype(jnp.asarray(c).dtype)
+            if _is_float(c) else c, m, old, new)
+        self.state = dataclasses.replace(self.state, adapters=adapters)
 
     def _maybe_publish(self) -> None:
         """Hot-swap hook: every ``publish_every``-th advance hands the
@@ -259,9 +350,14 @@ class AsyncAggregator:
 
     def _fold_one(self, update: ClientUpdate, weight: float) -> None:
         if self.strategy.supports_incremental:
+            # strategies build fresh FoldStates (mass/row_mass are theirs);
+            # the momentum buffer is service-level state riding in the same
+            # slot, so carry it across the fold
+            momentum = self._fold_state.momentum
             self.state, self._fold_state = self.strategy.fold(
                 self.state, update, weight, fold_state=self._fold_state,
                 backend=self.backend)
+            self._fold_state.momentum = momentum
         else:
             # replay: recompute the joint aggregate of every update since
             # the anchor -- exact for any strategy (flora's stacked ranks,

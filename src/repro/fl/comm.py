@@ -85,6 +85,13 @@ class UpdateBuffer:
             return None
         return self._items[0].arrived + self.deadline
 
+    def total_weight(self) -> float:
+        """Total effective mass currently buffered.  The flush path
+        checks this before mixing: a zero-mass batch (every weight
+        staleness-discounted to 0) has no convex combination and must be
+        dropped, not aggregated into ``0 / 0``."""
+        return float(sum(b.weight for b in self._items))
+
     def pop(self) -> list[BufferedUpdate]:
         """Drain the buffer in arrival order."""
         items, self._items = self._items, []

@@ -147,6 +147,129 @@ def packed_agg_pallas(x, masks, weights, prev=None, *,
     )(*args)
 
 
+#: sentinel for unowned slots in the order-statistic kernels (matches
+#: ref._SENTINEL): above any sane upload, finite under f32 averaging.
+_SENTINEL = 1e30
+
+
+def _packed_robust_kernel(weights_ref, masks_ref, x_ref, *rest,
+                          n_clients: int, mode: str, clip_norm: float,
+                          trim_frac: float, has_prev: bool):
+    """Byzantine-robust fused bucket reduction (plan path).
+
+    Same packed layout as :func:`_packed_kernel`.  ``mode="clipped"``
+    rescales each client row to at most ``clip_norm`` L2 (full-width
+    blocks -- the norm reduction cannot cross column tiles) before the
+    standard masked weighted mean.  ``mode="trimmed"``/``"median"`` run
+    per-coordinate order statistics over the owners: unowned slots get a
+    large sentinel, a static odd-even transposition network sorts the
+    client axis (``jnp.sort`` does not lower in Mosaic; n is the cohort
+    size, so the O(n^2) compare-exchange unroll stays small), and a
+    per-row owner count selects the retained positions.  Rows nobody
+    owns retain ``prev``.
+    """
+    if has_prev:
+        prev_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
+    br = x_ref.shape[1]
+    fb = (prev_ref[...].astype(jnp.float32) if has_prev
+          else jnp.zeros(o_ref.shape, jnp.float32))
+    if mode == "clipped":
+        num = jnp.zeros(o_ref.shape, jnp.float32)
+        den = jnp.zeros((br, 1), jnp.float32)
+        for nix in range(n_clients):                 # static unroll
+            m = masks_ref[nix][:, None]              # (br, 1)
+            w = weights_ref[nix]
+            xn = x_ref[nix].astype(jnp.float32)
+            rn = jnp.sqrt(jnp.sum(xn * xn, axis=1, keepdims=True))
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(rn, 1e-12))
+            num = num + (w * m) * (scale * xn)
+            den = den + w * m
+        out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), fb)
+        o_ref[...] = out.astype(o_ref.dtype)
+        return
+    vals = []
+    cnt = jnp.zeros((br, 1), jnp.int32)
+    for nix in range(n_clients):
+        m = masks_ref[nix][:, None]                  # (br, 1)
+        vals.append(jnp.where(m > 0, x_ref[nix].astype(jnp.float32),
+                              _SENTINEL))
+        cnt = cnt + (m > 0).astype(jnp.int32)
+    for rnd in range(n_clients):                     # odd-even sort
+        for i in range(rnd % 2, n_clients - 1, 2):
+            lo = jnp.minimum(vals[i], vals[i + 1])
+            vals[i + 1] = jnp.maximum(vals[i], vals[i + 1])
+            vals[i] = lo
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    if mode == "median":
+        lo_ix = jnp.maximum((cnt - 1) // 2, 0)
+        hi_ix = cnt // 2
+        for j in range(n_clients):
+            sel = 0.5 * ((lo_ix == j).astype(jnp.float32)
+                         + (hi_ix == j).astype(jnp.float32))
+            acc = acc + sel * vals[j]
+        out = acc
+    else:                                            # trimmed
+        k = jnp.minimum(
+            jnp.floor(trim_frac * cnt.astype(jnp.float32)).astype(jnp.int32),
+            jnp.maximum((cnt - 1) // 2, 0))
+        for j in range(n_clients):
+            inc = ((j >= k) & (j < cnt - k)).astype(jnp.float32)
+            acc = acc + inc * vals[j]
+        keep = (cnt - 2 * k).astype(jnp.float32)
+        out = acc / jnp.maximum(keep, 1.0)
+    o_ref[...] = jnp.where(cnt > 0, out, fb).astype(o_ref.dtype)
+
+
+def packed_robust_pallas(x, masks, weights, prev=None, *, mode: str,
+                         clip_norm: float = 0.0, trim_frac: float = 0.0,
+                         br=DEFAULT_BR, bd=DEFAULT_BD, interpret=True):
+    """x: (N, R, D); masks: (N, R) f32; weights: (N,) f32; prev: (R, D)
+    or None -> (R, D).  Byzantine-robust sibling of
+    :func:`packed_agg_pallas`: one fused launch per packed bucket, with
+    per-client norm clipping (``mode="clipped"``), per-coordinate trimmed
+    mean (``"trimmed"``), or coordinate-wise median (``"median"``) in
+    place of the weighted mean.  Numerics match
+    ``ref.packed_robust_ref``."""
+    n, r, d = x.shape
+    if masks.shape != (n, r):
+        raise ValueError(f"packed_robust: masks {masks.shape} != ({n}, {r})")
+    if prev is not None and prev.shape != (r, d):
+        raise ValueError(f"packed_robust: prev {prev.shape} != ({r}, {d})")
+    if mode not in ("clipped", "trimmed", "median"):
+        raise ValueError(f"unknown robust mode {mode!r}; options: "
+                         f"['clipped', 'median', 'trimmed']")
+    br = min(br, r)
+    # clipped needs the full row in one block (L2 norm over D); the sort
+    # network keeps n f32 blocks live -- either way, bound VMEM by
+    # shrinking the row block as n*width grows
+    bd = d if mode == "clipped" else min(bd, d)
+    budget = 4 * 1024 * 1024
+    br = min(br, max(8, (budget // max(n * bd * 4, 1)) // 8 * 8))
+    grid = (pl.cdiv(r, br), pl.cdiv(d, bd))
+    in_specs = [
+        pl.BlockSpec((n,), lambda i, j: (0,)),
+        pl.BlockSpec((n, br), lambda i, j: (0, i)),
+        pl.BlockSpec((n, br, bd), lambda i, j: (0, i, j)),
+    ]
+    args = [weights.astype(jnp.float32), masks.astype(jnp.float32), x]
+    if prev is not None:
+        in_specs.append(pl.BlockSpec((br, bd), lambda i, j: (i, j)))
+        args.append(prev)
+    return pl.pallas_call(
+        functools.partial(_packed_robust_kernel, n_clients=n, mode=mode,
+                          clip_norm=float(clip_norm),
+                          trim_frac=float(trim_frac),
+                          has_prev=prev is not None),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(*args)
+
+
 def _packed_stack_kernel(scales_ref, x_ref, *rest, copies_x, copies_prev,
                          has_prev: bool):
     """Fused FLoRA stacking over a packed bucket: every (pair, layer,

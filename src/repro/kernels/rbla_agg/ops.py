@@ -19,10 +19,10 @@ import jax.numpy as jnp
 
 from ..runtime import auto_interpret
 from .kernel import (axpy_fold_pallas, flora_stack_pallas,
-                     packed_agg_pallas, packed_stack_pallas,
-                     rbla_agg_pallas)
+                     packed_agg_pallas, packed_robust_pallas,
+                     packed_stack_pallas, rbla_agg_pallas)
 from .ref import (axpy_fold_ref, flora_stack_ref, packed_agg_ref,
-                  rbla_agg_ref)
+                  packed_robust_ref, packed_stack_ref, rbla_agg_ref)
 
 
 def _pad_to(v: int, mult: int) -> int:
@@ -127,6 +127,59 @@ def packed_agg(x, masks, weights, prev=None, *, norm_by: str = "mask",
     _count_dispatch()
     return _packed_agg_jit(x, masks, weights, prev, norm_by=norm_by,
                            norm_restore=norm_restore, interpret=interpret)
+
+
+def packed_robust_inline(x, masks, weights, prev=None, *, mode: str,
+                         clip_norm: float = 0.0, trim_frac: float = 0.0,
+                         interpret=None):
+    """Un-jitted Byzantine-robust bucket aggregation (the compiled plan's
+    hot op for the ``robustness != "none"`` strategies).
+
+    Same packed layout as :func:`packed_agg_inline`; ``mode`` selects
+    norm clipping, per-coordinate trimmed mean, or coordinate-wise
+    median (see ``kernel.packed_robust_pallas``).  Padding is harmless:
+    padded rows have no owner (they retain the zero-padded prev), padded
+    columns are zero for every owner and cannot shift a row norm or an
+    order statistic off the stripped region.
+    """
+    interpret = auto_interpret(interpret)
+    n, r = x.shape[:2]
+    lead = x.shape[2:]
+    d = 1
+    for v in lead:
+        d *= v
+    x2 = x.reshape(n, r, d)
+    rp, dp = _pad_to(max(r, 1), 8), _pad_to(max(d, 1), 128)
+    x2 = jnp.pad(x2, ((0, 0), (0, rp - r), (0, dp - d)))
+    m2 = jnp.pad(jnp.asarray(masks, jnp.float32), ((0, 0), (0, rp - r)))
+    pv = None
+    if prev is not None:
+        pv = jnp.pad(prev.reshape(r, d).astype(x2.dtype),
+                     ((0, rp - r), (0, dp - d)))
+    out = packed_robust_pallas(x2, m2, jnp.asarray(weights, jnp.float32),
+                               pv, mode=mode, clip_norm=clip_norm,
+                               trim_frac=trim_frac, interpret=interpret)
+    return out[:r, :d].reshape((r,) + lead)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "clip_norm",
+                                             "trim_frac", "interpret"))
+def _packed_robust_jit(x, masks, weights, prev, *, mode, clip_norm,
+                       trim_frac, interpret):
+    return packed_robust_inline(x, masks, weights, prev, mode=mode,
+                                clip_norm=clip_norm, trim_frac=trim_frac,
+                                interpret=interpret)
+
+
+def packed_robust(x, masks, weights, prev=None, *, mode: str,
+                  clip_norm: float = 0.0, trim_frac: float = 0.0,
+                  interpret=None):
+    """Jitted :func:`packed_robust_inline` (standalone use and tests)."""
+    _count_dispatch()
+    return _packed_robust_jit(x, masks, weights, prev, mode=mode,
+                              clip_norm=float(clip_norm),
+                              trim_frac=float(trim_frac),
+                              interpret=interpret)
 
 
 def packed_stack_inline(x, scales, prev=None, *, copies_x=(),
@@ -257,6 +310,7 @@ def axpy_fold(y, x, alpha, *, interpret=None):
 
 __all__ = ["rbla_agg", "rbla_agg_ref", "flora_stack", "flora_stack_ref",
            "axpy_fold", "axpy_fold_ref", "packed_agg", "packed_agg_ref",
-           "packed_stack", "rbla_agg_inline", "packed_agg_inline",
-           "packed_stack_inline", "flora_stack_inline",
-           "axpy_fold_inline"]
+           "packed_robust", "packed_robust_ref", "packed_stack",
+           "packed_stack_ref", "rbla_agg_inline", "packed_agg_inline",
+           "packed_robust_inline", "packed_stack_inline",
+           "flora_stack_inline", "axpy_fold_inline"]

@@ -11,6 +11,8 @@ flushes on K and on deadline, staleness actually down-weights (flora
 keeps the stale contributor), and the event-driven simulator is finite
 and deterministic.
 """
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -44,7 +46,8 @@ def configured(method):
 
 # ------------------------------------------------------------ parity gate --
 ALL_METHODS = ["rbla", "zeropad", "fedavg", "rbla_ranked", "rbla_norm",
-               "svd", "flora"]
+               "svd", "flora", "rbla_clipped", "rbla_trimmed",
+               "rbla_median"]
 
 
 def fold_cohort(strategy, backend):
@@ -275,6 +278,156 @@ def test_unknown_staleness_clock_raises():
     s = get_strategy("rbla")
     with pytest.raises(ValueError, match="staleness_clock"):
         AsyncAggregator(s, make_state(s), staleness_clock="lamport")
+
+
+def test_wall_clock_skew_clamps_staleness_at_zero():
+    """Regression: a client whose pull timestamp is *ahead* of the server
+    clock (clock skew) must be treated as fresh -- negative tau would
+    feed s(tau) > 1 into the weight (inflating the skewed client) and
+    trip the schedule range check."""
+    s = get_strategy("rbla")
+    adapters, ranks, w, bases = hetero_cohort(2, seed=41, r_lo=R_MAX,
+                                              with_bases=True)
+    upd = ClientUpdate(adapters=adapters[1], base_trainable=bases[1],
+                       n_examples=4.0, rank=int(ranks[1]))
+
+    def folded(pulled_at):
+        agg = AsyncAggregator(s, make_state(s), staleness="polynomial",
+                              staleness_a=0.5, staleness_clock="wall")
+        agg.submit(upd, now=100.0, pulled_at=pulled_at)
+        assert agg.staleness_sum >= 0.0
+        return np.asarray(agg.state.adapters["fc1"]["A"])
+    # skewed (pulled "in the future") == fresh, bit-for-bit
+    np.testing.assert_array_equal(folded(150.0), folded(100.0))
+
+
+# ------------------------------------------------- ingestion validation ----
+def _one_update(seed=43):
+    adapters, ranks, w, bases = hetero_cohort(2, seed=seed, r_lo=R_MAX,
+                                              with_bases=True)
+    return ClientUpdate(adapters=adapters[0], base_trainable=bases[0],
+                        n_examples=4.0, rank=int(ranks[0]))
+
+
+@pytest.mark.parametrize("n_examples", [0.0, -3.0, float("nan"),
+                                        float("inf")])
+def test_submit_rejects_invalid_example_counts(n_examples):
+    s = get_strategy("rbla")
+    agg = AsyncAggregator(s, make_state(s))
+    upd = dataclasses.replace(_one_update(), n_examples=n_examples)
+    with pytest.raises(ValueError, match="n_examples"):
+        agg.submit(upd)
+    assert agg.n_received == 0 and len(agg.buffer) == 0
+    assert agg.version == 0
+
+
+@pytest.mark.parametrize("poison", [float("nan"), float("inf")])
+def test_submit_rejects_non_finite_tensors(poison):
+    s = get_strategy("rbla")
+    agg = AsyncAggregator(s, make_state(s))
+    upd = _one_update()
+    bad = jax.tree.map(lambda x: x, upd.adapters)
+    bad["fc1"]["A"] = bad["fc1"]["A"].at[0, 0].set(poison)
+    with pytest.raises(ValueError, match="non-finite"):
+        agg.submit(dataclasses.replace(upd, adapters=bad))
+    base = {"b": jnp.full((4,), poison, jnp.float32)}
+    with pytest.raises(ValueError, match="non-finite"):
+        agg.submit(dataclasses.replace(upd, base_trainable=base))
+    assert agg.n_received == 0 and len(agg.buffer) == 0
+
+
+def test_zero_mass_flush_is_a_noop():
+    """A batch whose staleness-discounted masses sum to 0 has no convex
+    combination: the flush must drop it without advancing (or NaN-ing)
+    the state."""
+    s = get_strategy("rbla")
+    agg = AsyncAggregator(s, make_state(s), buffer_size=2, deadline=1.0)
+    before = np.asarray(agg.state.adapters["fc1"]["A"])
+    upd = _one_update()
+    agg.buffer.add(upd, weight=0.0, now=0.0)     # mass underflowed to 0
+    agg.buffer.add(upd, weight=0.0, now=0.0)
+    assert agg.buffer.total_weight() == 0.0
+    agg.flush(now=10.0)
+    assert agg.version == 0 and agg.n_flushes == 0
+    assert agg.n_dropped == 2 and len(agg.buffer) == 0
+    np.testing.assert_array_equal(
+        before, np.asarray(agg.state.adapters["fc1"]["A"]))
+    assert np.isfinite(np.asarray(agg.state.adapters["fc1"]["A"])).all()
+
+
+# ------------------------------------------------------- server momentum ----
+def test_server_momentum_zero_is_exact_noop():
+    s = get_strategy("rbla")
+    upd = _one_update()
+    plain = AsyncAggregator(s, make_state(s))
+    mom = AsyncAggregator(s, make_state(s), server_momentum=0.0)
+    for _ in range(3):
+        plain.submit(upd)
+        mom.submit(upd)
+    np.testing.assert_array_equal(
+        np.asarray(plain.state.adapters["fc1"]["A"]),
+        np.asarray(mom.state.adapters["fc1"]["A"]))
+
+
+def test_server_momentum_accelerates_a_consistent_direction():
+    """Folding the same update repeatedly: momentum accumulates the
+    per-fold displacement, so the published state moves further toward
+    the (consistent) client than the momentum-free service."""
+    s = get_strategy("rbla")
+    upd = _one_update()
+    start = np.asarray(make_state(s).adapters["fc1"]["A"])
+
+    def run(beta):
+        agg = AsyncAggregator(s, make_state(s), server_momentum=beta)
+        for _ in range(4):
+            agg.submit(upd)
+        out = np.asarray(agg.state.adapters["fc1"]["A"])
+        assert np.isfinite(out).all()
+        return float(np.linalg.norm(out - start))
+    assert run(0.5) > run(0.0)
+
+
+def test_server_momentum_buffer_survives_semiasync_reanchor():
+    s = get_strategy("rbla")
+    upd = _one_update()
+    agg = AsyncAggregator(s, make_state(s), buffer_size=2,
+                          server_momentum=0.5)
+    agg.submit(upd)
+    agg.submit(upd)                              # flush + re-anchor
+    assert agg.n_flushes == 1
+    assert agg._fold_state.momentum is not None
+    m0 = np.asarray(agg._fold_state.momentum["fc1"]["A"])
+    agg.submit(upd)
+    agg.submit(upd)
+    m1 = np.asarray(agg._fold_state.momentum["fc1"]["A"])
+    assert not np.array_equal(m0, m1)            # still accumulating
+
+
+def test_server_momentum_requires_fixed_rank_contract():
+    s = configured("flora")
+    with pytest.raises(ValueError, match="fixed-rank"):
+        AsyncAggregator(s, make_state(s), server_momentum=0.5)
+    with pytest.raises(ValueError, match="server_momentum"):
+        AsyncAggregator(get_strategy("rbla"), make_state(get_strategy(
+            "rbla")), server_momentum=1.5)
+
+
+@pytest.mark.parametrize("method", ["rbla_clipped", "rbla_trimmed",
+                                    "rbla_median"])
+def test_robust_strategies_use_exact_replay_path(method):
+    """Robust reductions are not running means: the service must replay
+    them (supports_incremental=False), keeping sequential folds exactly
+    equal to the one-shot aggregate (the parity gate above)."""
+    s = get_strategy(method)
+    assert not s.supports_incremental
+    adapters, ranks, w, bases = hetero_cohort(3, seed=47, with_bases=True)
+    agg = AsyncAggregator(s, make_state(s))
+    for i in range(3):
+        agg.submit(ClientUpdate(adapters=adapters[i],
+                                base_trainable=bases[i],
+                                n_examples=float(w[i]),
+                                rank=int(ranks[i])))
+    assert agg.n_folded == 3 and len(agg._replay) == 3
 
 
 def test_async_simulation_wall_clock_smoke_and_determinism():

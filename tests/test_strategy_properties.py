@@ -32,8 +32,10 @@ jax.config.update("jax_platform_name", "cpu")
 
 SPECS = {"fc1": (9, 7), "fc2": (6, 9)}
 R_MAX = 6
-ALL_METHODS = ("fedavg", "flora", "rbla", "rbla_norm", "rbla_ranked",
-               "svd", "zeropad")
+ALL_METHODS = ("fedavg", "flora", "rbla", "rbla_clipped", "rbla_median",
+               "rbla_norm", "rbla_ranked", "rbla_trimmed", "svd",
+               "zeropad")
+ROBUST_METHODS = ("rbla_clipped", "rbla_trimmed", "rbla_median")
 #: large enough that a cohort of <= 6 clients plus prev never hits the
 #: cap -- properties about *stacking* must not silently test the SVD path
 BIG_CAP = 8 * R_MAX
@@ -97,7 +99,7 @@ def mean_effective_delta(adapters, weights):
 
 
 # ------------------------------------------------------------ registration --
-def test_exactly_seven_strategies_registered():
+def test_exactly_ten_strategies_registered():
     assert tuple(list_strategies()) == ALL_METHODS
 
 
@@ -106,6 +108,13 @@ def test_every_strategy_declares_its_contracts():
         s = get_strategy(m)
         assert s.rank_contract in ("fixed", "stacked"), m
         assert s.fedavg_equivalence in ("factors", "product", None), m
+        assert s.robustness in ("none", "clipped", "trimmed", "median"), m
+
+
+def test_robustness_contracts_match_registry():
+    for m in ALL_METHODS:
+        want = m.removeprefix("rbla_") if m in ROBUST_METHODS else "none"
+        assert get_strategy(m).robustness == want, m
 
 
 # ------------------------------------------- homogeneous cohorts == FedAvg --
@@ -293,6 +302,177 @@ def test_backend_parity_or_documented_refusal(method, backend):
                 np.asarray(ref[k][f], np.float32),
                 np.asarray(got[k][f], np.float32),
                 rtol=1e-4, atol=1e-5, err_msg=f"{method}/{backend} {k} {f}")
+
+
+# --------------------------------------------- the robustness contract ------
+def scale_client(adapters, i, factor):
+    """Return the cohort with client ``i``'s float factors scaled."""
+    out = list(adapters)
+    out[i] = jax.tree.map(
+        lambda x: x * factor if x.dtype == jnp.float32 else x, out[i])
+    return out
+
+
+def max_factor_dist(a, b):
+    return max(float(np.max(np.abs(np.asarray(a[k][f], np.float32)
+                                   - np.asarray(b[k][f], np.float32))))
+               for k in SPECS for f in ("A", "B"))
+
+
+@pytest.mark.parametrize("method", ROBUST_METHODS)
+def test_breakdown_single_adversary_moves_global_boundedly(method):
+    """One malicious client uploading 1e6x-norm factors moves the robust
+    aggregate by a bounded amount; the mean family follows the adversary
+    to ~1e5.  Homogeneous full-rank cohort: every row has 5 owners, so
+    trimming (k >= 1) and the median (majority honest) both exclude the
+    outlier, and clipping caps its mass contribution."""
+    s = configured(method)
+    adapters, rvec, w = make_cohort(41, (R_MAX,) * 5)
+    honest = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                  client_ranks=rvec, backend="ref")
+    attacked_cohort = scale_client(adapters, 0, 1e6)
+    attacked = s.aggregate_adapters(attacked_cohort, w, r_max=R_MAX,
+                                    client_ranks=rvec, backend="ref")
+    move = max_factor_dist(honest, attacked)
+    assert move < 50.0, f"{method} moved {move} under one adversary"
+    mean = get_strategy("rbla")
+    mean_move = max_factor_dist(
+        mean.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                client_ranks=rvec, backend="ref"),
+        mean.aggregate_adapters(attacked_cohort, w, r_max=R_MAX,
+                                client_ranks=rvec, backend="ref"))
+    assert mean_move > 1e4, "the mean family should follow the adversary"
+
+
+def test_breakdown_bound_holds_on_every_supported_backend():
+    s = configured("rbla_median")
+    adapters, rvec, w = make_cohort(43, (R_MAX,) * 5)
+    attacked_cohort = scale_client(adapters, 1, 1e6)
+    for backend in ("ref", "pallas"):
+        honest = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                      client_ranks=rvec, backend=backend)
+        attacked = s.aggregate_adapters(attacked_cohort, w, r_max=R_MAX,
+                                        client_ranks=rvec, backend=backend)
+        assert max_factor_dist(honest, attacked) < 50.0, backend
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(2, 5))
+def test_clipped_with_loose_clip_matches_rbla(seed, n):
+    """Honest-case parity: while every rank-row norm is under the clip,
+    rbla_clipped IS rbla -- heterogeneous ranks, prev retention and all."""
+    ranks = random_ranks(seed + 13, n)
+    adapters, rvec, w = make_cohort(seed, ranks)
+    prev, _, _ = make_cohort(seed + 1, (R_MAX,))
+    prev = get_strategy("rbla").aggregate_adapters(
+        prev, jnp.ones((1,), jnp.float32), r_max=R_MAX,
+        client_ranks=jnp.asarray([R_MAX], jnp.int32), backend="ref")
+    s = get_strategy("rbla_clipped").with_options(clip_norm=1e9)
+    got = s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=rvec,
+                               prev_global=prev, backend="ref")
+    want = get_strategy("rbla").aggregate_adapters(
+        adapters, w, r_max=R_MAX, client_ranks=rvec, prev_global=prev,
+        backend="ref")
+    for k in SPECS:
+        for f in ("A", "B"):
+            np.testing.assert_allclose(
+                np.asarray(got[k][f]), np.asarray(want[k][f]),
+                rtol=1e-5, atol=1e-6, err_msg=f"{k} {f}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(2, 5))
+def test_trimmed_without_trimming_matches_unweighted_rbla(seed, n):
+    """Honest-case parity: trim_frac=0 + uniform weights reduce the
+    trimmed mean to the plain per-row owner mean (= rbla with uniform
+    weights)."""
+    adapters, rvec, w = make_cohort(seed, random_ranks(seed + 17, n))
+    ones = jnp.ones_like(w)
+    got = get_strategy("rbla_trimmed").with_options(
+        trim_frac=0.0).aggregate_adapters(
+        adapters, ones, r_max=R_MAX, client_ranks=rvec, backend="ref")
+    want = get_strategy("rbla").aggregate_adapters(
+        adapters, ones, r_max=R_MAX, client_ranks=rvec, backend="ref")
+    for k in SPECS:
+        for f in ("A", "B"):
+            np.testing.assert_allclose(
+                np.asarray(got[k][f]), np.asarray(want[k][f]),
+                rtol=1e-5, atol=1e-6, err_msg=f"{k} {f}")
+
+
+@pytest.mark.parametrize("method", ROBUST_METHODS)
+def test_identical_uploads_match_mean_family(method):
+    """Honest-case parity: when every client uploads the same adapters,
+    any robust reduction returns that common value, exactly like rbla."""
+    s = configured(method)
+    one, _, _ = make_cohort(47, (3,))
+    adapters = [one[0]] * 4
+    rvec = jnp.asarray([3] * 4, jnp.int32)
+    w = jnp.asarray([0.5, 1.0, 2.0, 1.5], jnp.float32)
+    got = s.aggregate_adapters(adapters, w, r_max=R_MAX, client_ranks=rvec,
+                               backend="ref")
+    want = get_strategy("rbla").aggregate_adapters(
+        adapters, w, r_max=R_MAX, client_ranks=rvec, backend="ref")
+    for k in SPECS:
+        for f in ("A", "B"):
+            np.testing.assert_allclose(
+                np.asarray(got[k][f]), np.asarray(want[k][f]),
+                rtol=1e-5, atol=1e-6, err_msg=f"{method} {k} {f}")
+
+
+@pytest.mark.parametrize("method", ROBUST_METHODS)
+def test_partial_round_dropout_is_deterministic_and_retains_prev(method):
+    """A dropout round (only some of the cohort reports) is well-defined:
+    aggregating the survivors twice is bitwise identical, and rank rows
+    no survivor owns retain the previous global."""
+    s = configured(method)
+    adapters, rvec, w = make_cohort(53, (2, 4, R_MAX, 3))
+    prev = s.aggregate_adapters(adapters, w, r_max=R_MAX,
+                                client_ranks=rvec, backend="ref")
+    keep = jnp.asarray([0, 3])                 # survivors: ranks 2 and 3
+    survivors = [adapters[0], adapters[3]]
+    out1 = s.aggregate_adapters(survivors, w[keep], r_max=R_MAX,
+                                client_ranks=rvec[keep], prev_global=prev,
+                                backend="ref")
+    out2 = s.aggregate_adapters(survivors, w[keep], r_max=R_MAX,
+                                client_ranks=rvec[keep], prev_global=prev,
+                                backend="ref")
+    for k in SPECS:
+        for f in ("A", "B"):
+            np.testing.assert_array_equal(np.asarray(out1[k][f]),
+                                          np.asarray(out2[k][f]),
+                                          err_msg=f"{method} {k} {f}")
+        # the survivors have ranks 2 and 3, so rows >= 3 have no owner
+        np.testing.assert_array_equal(
+            np.asarray(out1[k]["A"])[3:], np.asarray(prev[k]["A"])[3:],
+            err_msg=f"{method} {k} prev retention")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(1, 6),
+       d=st.sampled_from([3, 17, 130]),
+       mode=st.sampled_from(["clipped", "trimmed", "median"]))
+def test_packed_robust_kernel_matches_ref(seed, n, d, mode):
+    from repro.kernels import (packed_robust, packed_robust_ref,
+                               packed_robust_xla)
+    rng = np.random.default_rng(seed)
+    r = R_MAX
+    x = jnp.asarray(rng.normal(size=(n, r, d)), jnp.float32)
+    masks = jnp.asarray(rng.random((n, r)) < 0.7, jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 2.0, n), jnp.float32)
+    prev = jnp.asarray(rng.normal(size=(r, d)), jnp.float32)
+    want = packed_robust_ref(x, masks, w, prev, mode=mode, clip_norm=2.5,
+                             trim_frac=0.25)
+    got = packed_robust(x, masks, w, prev, mode=mode, clip_norm=2.5,
+                        trim_frac=0.25, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    # the fused-XLA network lowering (interpret-mode plan path) obeys
+    # the same oracle
+    got_xla = packed_robust_xla(x, masks, w, prev, mode=mode,
+                                clip_norm=2.5, trim_frac=0.25)
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
 
 
 # ----------------------------------------------- flora_stack kernel oracle --
