@@ -1,6 +1,6 @@
-"""Sync-round vs async-fold aggregation under a straggler distribution.
+"""Sync-round vs async-fold aggregation, and the quantized upload path.
 
-Two questions, both on CPU-runnable synthetic cohorts:
+Three questions, all on CPU-runnable synthetic cohorts:
 
 1. **Server cost**: what does one synchronous cohort ``aggregate`` cost
    vs folding the same updates one at a time (``AsyncAggregator``,
@@ -16,34 +16,64 @@ Two questions, both on CPU-runnable synthetic cohorts:
    time and the time until 50% / 90% of the cohort's update mass is
    serving -- the straggler tail hits sync rounds directly, async barely.
 
+3. **Quantized transport** (``repro.core.codec``): per upload codec, the
+   wire bytes a client ships, the reduction vs fp32, the end-to-end
+   parity of the fused-dequant aggregate against the fp32 baseline, and
+   whether alternating codec mixes re-traces warm plans.
+
+``--json PATH`` writes the machine-readable ``BENCH_async.json`` so the
+wire-cost trajectory is tracked across PRs; ``--smoke`` runs a tiny case
+and exits non-zero if (a) the quantized aggregate drifts past its
+codec's tolerance from the fp32 baseline (``none`` must be bit-exact),
+(b) int8 cuts upload bytes by less than 3.5x at 128 clients, or (c)
+alternating between two warm codec mixes adds plan misses or executor
+retraces -- the codec is only free if the plan cache survives it.
+
 Run: ``PYTHONPATH=src python benchmarks/bench_async_agg.py``
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import codec
 from repro.core.strategy import ClientUpdate, ServerState, get_strategy
 from repro.fl import AsyncAggregator
+from repro.fl.comm import tree_bytes
 from repro.fl.selection import ClientLatencyModel
+from repro.kernels.runtime import bench_env
 from repro.lora import init_adapters, set_ranks
 
-SPECS = {f"blk{i}": (1024, 1024) for i in range(4)}
-R_MAX = 64
+FULL_SPECS = {f"blk{i}": (1024, 1024) for i in range(4)}
+FULL_R_MAX = 64
+#: smoke tree is tiny but wide enough that int8's per-row fp32 scale
+#: overhead (4 bytes per rank row) stays under the 3.5x reduction gate
+SMOKE_SPECS = {"blk0": (96, 128), "blk1": (128, 96)}
+SMOKE_R_MAX = 8
 METHODS = ("rbla", "zeropad", "fedavg", "rbla_ranked", "flora")
 N_CLIENTS = 10
+N_WIRE_CLIENTS = 128           # cohort size for the wire-reduction gate
 SEED = 0
 
+#: end-to-end aggregate tolerance per codec (relative Frobenius vs the
+#: fp32 baseline): bf16 has ~2^-8 relative error, int8 ~1/254 per row
+#: before averaging; ``none`` must be bit-exact
+CODEC_TOL = {"none": 0.0, "bf16": 1e-2, "int8": 2e-2}
+WIRE_GATE_REDUCTION = 3.5
 
-def make_cohort(n=N_CLIENTS, seed=SEED):
+
+def make_cohort(n, seed, specs, r_max):
     rng = np.random.default_rng(seed)
-    ranks = rng.integers(4, R_MAX + 1, n)
+    ranks = rng.integers(max(r_max // 16, 2), r_max + 1, n)
     updates = []
     for i in range(n):
-        ad = init_adapters(jax.random.PRNGKey(seed + i), SPECS, R_MAX,
+        ad = init_adapters(jax.random.PRNGKey(seed + i), specs, r_max,
                            int(ranks[i]))
         ad = jax.tree.map(
             lambda x: x + jnp.asarray(0.01 * rng.normal(size=x.shape),
@@ -56,11 +86,11 @@ def make_cohort(n=N_CLIENTS, seed=SEED):
     return updates, ranks
 
 
-def make_state(strategy):
-    r_storage = strategy.server_storage_rank(R_MAX) or R_MAX
-    adapters = init_adapters(jax.random.PRNGKey(999), SPECS, r_storage,
-                             R_MAX)
-    return ServerState(adapters=adapters, base_trainable={}, r_max=R_MAX)
+def make_state(strategy, specs, r_max):
+    r_storage = strategy.server_storage_rank(r_max) or r_max
+    adapters = init_adapters(jax.random.PRNGKey(999), specs, r_storage,
+                             r_max)
+    return ServerState(adapters=adapters, base_trainable={}, r_max=r_max)
 
 
 def timed(fn, iters=3):
@@ -73,14 +103,14 @@ def timed(fn, iters=3):
     return (time.time() - t0) / iters
 
 
-def bench_method(method, updates):
+def bench_method(method, updates, specs, r_max):
     s = get_strategy(method)
     if s.rank_contract == "stacked":
         # wide cap: pure stacking, no SVD re-projection mid-bench
         s = s.with_options(stack_r_cap=int(sum(u.rank for u in updates))
-                           + R_MAX)
+                           + r_max)
     weights = [u.n_examples for u in updates]
-    state0 = make_state(s)     # built once: only aggregation is timed
+    state0 = make_state(s, specs, r_max)   # built once: only agg is timed
 
     # return the adapters tree (arrays), not the ServerState dataclass --
     # block_until_ready must see array leaves to measure compute
@@ -112,28 +142,192 @@ def time_to_quality(latencies, weights, t_sync, t_fold):
     return t50_async, t90_async, t_round
 
 
-def main():
-    updates, ranks = make_cohort()
-    weights = np.asarray([u.n_examples for u in updates])
-    lat_model = ClientLatencyModel(N_CLIENTS, median_s=30.0, sigma=0.25,
-                                   straggler_sigma=1.0, seed=SEED)
-    latencies = np.asarray([lat_model.sample(i) for i in range(N_CLIENTS)])
+# ----------------------------------------------------- quantized uploads --
+def _rel_err(a, b):
+    """Relative Frobenius distance over the adapters' float leaves."""
+    num = den = 0.0
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        if not jnp.issubdtype(jnp.asarray(la).dtype, jnp.floating):
+            continue
+        d = jnp.asarray(la, jnp.float32) - jnp.asarray(lb, jnp.float32)
+        num += float(jnp.sum(d * d))
+        den += float(jnp.sum(jnp.asarray(la, jnp.float32) ** 2))
+    return (num / max(den, 1e-30)) ** 0.5
 
-    print(f"# cohort: n={N_CLIENTS} clients, ranks {ranks.min()}.."
-          f"{ranks.max()}, {len(SPECS)} pairs of {list(SPECS.values())[0]}"
-          f" at r_max={R_MAX}")
+
+def bench_codecs(updates, specs, r_max):
+    """One buffered flush per codec through the full service path; the
+    fp32 run is the parity baseline.  Wire bytes come from the service's
+    own intake accounting (post-codec, pre-decode)."""
+    s = get_strategy("rbla")
+    n = len(updates)
+    rows, baseline = [], None
+    for name in codec.CODECS:
+        enc = [codec.encode_update(u, name) for u in updates]
+        agg = AsyncAggregator("rbla", make_state(s, specs, r_max),
+                              buffer_size=n, backend="ref")
+        t0 = time.time()
+        for u in enc:
+            agg.submit(u)
+        jax.block_until_ready(jax.tree.leaves(agg.state.adapters))
+        flush_ms = (time.time() - t0) * 1e3
+        if baseline is None:
+            baseline = agg
+        rows.append({
+            "codec": name,
+            "wire_bytes_per_client": agg.wire_bytes_received // n,
+            "reduction_vs_fp32": (baseline.wire_bytes_received
+                                  / max(agg.wire_bytes_received, 1)),
+            "parity_rel_err": _rel_err(baseline.state.adapters,
+                                       agg.state.adapters),
+            "flush_ms": flush_ms,
+        })
+    return rows
+
+
+def wire_reduction_at_scale(specs, r_max, n=N_WIRE_CLIENTS):
+    """Upload-byte reduction of int8 vs fp32 over an n-client cohort
+    (pure accounting -- no aggregation)."""
+    updates, _ = make_cohort(n, SEED + 1, specs, r_max)
+    plain = sum(tree_bytes(u.adapters) + tree_bytes(u.base_trainable)
+                for u in updates)
+    quant = sum(tree_bytes(codec.encode_adapters(u.adapters, "int8"))
+                + tree_bytes(u.base_trainable) for u in updates)
+    return plain / max(quant, 1), plain, quant
+
+
+def retrace_check(updates, specs, r_max):
+    """Warm two codec mixes, then alternate: the per-(width, dtype,
+    codec-mix) plan cache must absorb every repeat -- zero new misses,
+    zero new jitted executors."""
+    s = get_strategy("rbla")
+    n = len(updates)
+    half = ["int8" if i % 2 else "bf16" for i in range(n)]
+    mixes = [["int8"] * n, half]
+    agg = AsyncAggregator(s, make_state(s, specs, r_max), buffer_size=n,
+                          backend="ref")
+    for mix in mixes:                                   # warm both
+        for u, c in zip(updates, mix):
+            agg.submit(codec.encode_update(u, c))
+    strat = agg.strategy
+    stats0 = dict(strat.__dict__.get("plan_stats", {}))
+    execs0 = len(strat.__dict__.get("_plan_exec_cache", {}))
+    for _ in range(2):                                  # alternate, warm
+        for mix in mixes:
+            for u, c in zip(updates, mix):
+                agg.submit(codec.encode_update(u, c))
+    stats1 = dict(strat.__dict__.get("plan_stats", {}))
+    execs1 = len(strat.__dict__.get("_plan_exec_cache", {}))
+    return {
+        "new_plan_misses": stats1.get("misses", 0) - stats0.get("misses", 0),
+        "new_executors": execs1 - execs0,
+        "plan_hits": stats1.get("hits", 0) - stats0.get("hits", 0),
+    }
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny case + hard gates (CI)")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="write machine-readable results (BENCH_async.json)")
+    args = p.parse_args(argv)
+
+    specs = SMOKE_SPECS if args.smoke else FULL_SPECS
+    r_max = SMOKE_R_MAX if args.smoke else FULL_R_MAX
+    n = 6 if args.smoke else N_CLIENTS
+    updates, ranks = make_cohort(n, SEED, specs, r_max)
+    weights = np.asarray([u.n_examples for u in updates])
+    lat_model = ClientLatencyModel(n, median_s=30.0, sigma=0.25,
+                                   straggler_sigma=1.0, seed=SEED)
+    latencies = np.asarray([lat_model.sample(i) for i in range(n)])
+
+    print(f"# cohort: n={n} clients, ranks {ranks.min()}.."
+          f"{ranks.max()}, {len(specs)} pairs of {list(specs.values())[0]}"
+          f" at r_max={r_max}")
     print(f"# latency: log-normal, median 30s, straggler_sigma 1.0 -> "
           f"min {latencies.min():.0f}s max {latencies.max():.0f}s")
     print("# method, sync_round_ms, async_fold_ms_per_update, "
-          "t50_async_s, t90_async_s, t_sync_round_s, speedup_t90")
+          "t50_async_s, t90_async_s, t_sync_round_s, speedup_t90, "
+          "wire_bytes_per_client")
+    method_rows = []
+    plain_wire = (tree_bytes(updates[0].adapters)
+                  + tree_bytes(updates[0].base_trainable))
     for method in METHODS:
-        t_sync, t_fold = bench_method(method, updates)
+        t_sync, t_fold = bench_method(method, updates, specs, r_max)
         t50a, t90a, t_round = time_to_quality(latencies, weights,
                                               t_sync, t_fold)
         print(f"async_agg/{method},{t_sync * 1e3:.1f},{t_fold * 1e3:.1f},"
               f"{t50a:.1f},{t90a:.1f},{t_round:.1f},"
-              f"{t_round / max(t90a, 1e-9):.2f}x")
+              f"{t_round / max(t90a, 1e-9):.2f}x,{plain_wire}")
+        method_rows.append({"method": method, "sync_ms": t_sync * 1e3,
+                            "fold_ms": t_fold * 1e3, "t90_async_s": t90a,
+                            "t_sync_round_s": t_round,
+                            "wire_bytes_per_client": plain_wire})
+
+    print("# codec, wire_bytes_per_client, reduction_vs_fp32, "
+          "parity_rel_err, flush_ms")
+    codec_rows = bench_codecs(updates, specs, r_max)
+    for row in codec_rows:
+        print(f"async_agg/codec/{row['codec']},"
+              f"{row['wire_bytes_per_client']},"
+              f"{row['reduction_vs_fp32']:.2f}x,"
+              f"{row['parity_rel_err']:.2e},{row['flush_ms']:.1f}")
+
+    reduction, plain_b, quant_b = wire_reduction_at_scale(specs, r_max)
+    print(f"# wire @ {N_WIRE_CLIENTS} clients: fp32 {plain_b} B, "
+          f"int8 {quant_b} B -> {reduction:.2f}x reduction")
+    retrace = retrace_check(updates, specs, r_max)
+    print(f"# codec-mix alternation: {retrace['plan_hits']} plan hits, "
+          f"{retrace['new_plan_misses']} new misses, "
+          f"{retrace['new_executors']} new executors")
+
+    if args.json:
+        payload = {
+            "bench": "async_agg",
+            "backend": jax.default_backend(),
+            "env": bench_env(),
+            "smoke": bool(args.smoke),
+            "case": {"specs": {k: list(v) for k, v in specs.items()},
+                     "r_max": r_max, "n_clients": n,
+                     "n_wire_clients": N_WIRE_CLIENTS},
+            "results": {
+                "methods": method_rows,
+                "codecs": codec_rows,
+                "wire_reduction_int8_at_scale": reduction,
+                "retrace": retrace,
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}")
+
+    if args.smoke:
+        failures = []
+        for row in codec_rows:
+            tol = CODEC_TOL[row["codec"]]
+            if row["parity_rel_err"] > tol:
+                failures.append(
+                    f"{row['codec']} parity {row['parity_rel_err']:.2e} "
+                    f"> tol {tol:g}")
+        if reduction < WIRE_GATE_REDUCTION:
+            failures.append(
+                f"int8 wire reduction {reduction:.2f}x < "
+                f"{WIRE_GATE_REDUCTION}x at {N_WIRE_CLIENTS} clients")
+        if retrace["new_plan_misses"] or retrace["new_executors"]:
+            failures.append(
+                f"codec-mix alternation re-traced: "
+                f"{retrace['new_plan_misses']} misses, "
+                f"{retrace['new_executors']} executors")
+        if failures:
+            for msg in failures:
+                print(f"# SMOKE FAIL: {msg}")
+            return 1
+        print("# smoke gate OK: codec parity within tolerance, int8 wire "
+              f"reduction >= {WIRE_GATE_REDUCTION}x, zero retraces on "
+              "codec-mix alternation")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -19,7 +19,12 @@ from .strategy import (AggregationStrategy, ClientUpdate, FoldState,
                        get_strategy, list_strategies, register_strategy,
                        resolve_backend, stack_trees)
 from .plan import (CohortSpec, CompiledRound, PlanUnavailable,
-                   build_cohort_spec, dispatch_counter)
+                   build_cohort_spec, build_encoded_cohort_spec,
+                   dispatch_counter)
+from .codec import (CODECS, cohort_codecs, decode_adapters, decode_pair,
+                    decode_update, encode_adapters, encode_pair,
+                    encode_update, stochastic_round, stochastic_round_tree,
+                    tree_codec, validate_encoded_adapters)
 from .distributed import (make_distributed_aggregator, rbla_allreduce,
                           rbla_tree_allreduce)
 
@@ -36,7 +41,11 @@ __all__ = [
     "ClientUpdate", "FoldState", "ServerState", "BACKENDS",
     "adapter_live_ranks",
     "CohortSpec", "CompiledRound", "PlanUnavailable", "build_cohort_spec",
-    "dispatch_counter",
+    "build_encoded_cohort_spec", "dispatch_counter",
+    "CODECS", "cohort_codecs", "decode_adapters", "decode_pair",
+    "decode_update", "encode_adapters", "encode_pair", "encode_update",
+    "stochastic_round", "stochastic_round_tree", "tree_codec",
+    "validate_encoded_adapters",
     "get_strategy",
     "list_strategies", "register_strategy", "resolve_backend",
     "stack_trees",

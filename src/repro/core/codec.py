@@ -1,0 +1,258 @@
+"""Upload codecs for LoRA adapter transport (RBLA PR 8).
+
+At FLaaS scale the binding cost is upload bytes, not FLOPs: every client
+ships fp32 ``(A, B)`` factors each round.  This module defines the wire
+formats clients apply *before* ``AsyncAggregator.submit``:
+
+``none``
+    fp32 pass-through (bit-exact baseline).
+``bf16``
+    plain ``astype(bfloat16)`` cast -- 2x smaller, exact for values whose
+    mantissa fits in 8 bits.
+``int8``
+    symmetric per-row quantization on the *packed row convention* from
+    :func:`repro.core.plan.pair_side_rows`: each of ``A``'s rank rows
+    (``amax`` over the fan-in axis) and each of ``B``'s rank *columns*
+    (``amax`` over the fan-out axis -- the packed layer transposes B, so
+    its packed rows are columns) carries one fp32 scale
+    ``max|row| / 127``; payload is ``clip(round(x / scale), -127, 127)``
+    as int8.  ~4x smaller; scales travel as runtime data so the plan
+    layer's per-(width, dtype) bucket cache survives and dequantization
+    fuses into ``packed_agg`` -- no fp32 staging buffer is materialized.
+
+An encoded int8 pair is the usual ``{"A", "B", "rank"}`` mapping plus
+``"A_scale"`` / ``"B_scale"`` entries of shape ``(..., r_max)``; the pair
+walkers in :mod:`repro.core.plan` test key *containment*, so encoded
+pairs flow through the same pytrees.  ``decode_pair`` is idempotent on
+plain fp32 pairs, which keeps server paths codec-agnostic.
+
+The server-side half of quantized transport lives here too:
+:func:`stochastic_round` (f32 -> bf16 with mantissa-noise rounding, the
+olmax-style trick for unbiased low-precision accumulators) backs the
+``accum_dtype="bfloat16"`` fold state in
+:class:`repro.fl.async_agg.AsyncAggregator`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+
+#: registered codec names, in negotiation-preference order.
+CODECS = ("none", "bf16", "int8")
+
+_INT8_QMAX = 127.0
+
+
+# ----------------------------------------------------------- tree walk ----
+# local pair predicates (repro.lora imports repro.core.masks; importing
+# repro.lora from here would cycle through the package __init__)
+def _is_pair(node: Any) -> bool:
+    return (isinstance(node, Mapping) and "A" in node and "B" in node
+            and "rank" in node)
+
+
+def _map_pairs(fn, tree):
+    if _is_pair(tree):
+        return fn(tree)
+    if isinstance(tree, Mapping):
+        return {k: _map_pairs(fn, v) for k, v in tree.items()}
+    if isinstance(tree, (tuple, list)):
+        return type(tree)(_map_pairs(fn, v) for v in tree)
+    return tree
+
+
+def _iter_pairs(tree, path=()):
+    if _is_pair(tree):
+        yield path, tree
+        return
+    if isinstance(tree, Mapping):
+        for k, v in tree.items():
+            yield from _iter_pairs(v, path + (k,))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            yield from _iter_pairs(v, path + (i,))
+
+
+# -------------------------------------------------------------- codecs ----
+def codec_of_pair(pair: Mapping) -> str:
+    """Wire format of one (possibly encoded) pair."""
+    if "A_scale" in pair or "B_scale" in pair:
+        return "int8"
+    if jnp.asarray(pair["A"]).dtype == jnp.bfloat16:
+        return "bf16"
+    return "none"
+
+
+def tree_codec(adapters) -> str:
+    """Codec of a whole adapter tree; ``"mixed"`` if pairs disagree."""
+    seen = {codec_of_pair(p) for _, p in _iter_pairs(adapters)}
+    if not seen:
+        return "none"
+    return seen.pop() if len(seen) == 1 else "mixed"
+
+
+def cohort_codecs(client_adapters: Sequence) -> tuple | None:
+    """Per-client codec names for a cohort, or ``None`` when every client
+    uploaded plain fp32 (the fast path: zero codec overhead)."""
+    codecs = tuple(tree_codec(a) for a in client_adapters)
+    return None if all(c == "none" for c in codecs) else codecs
+
+
+def _int8_encode_side(x, row_axis: int):
+    """Quantize one factor along the packed-row axis.
+
+    ``row_axis=-1`` treats trailing-axis vectors as rows (A); ``-2``
+    quantizes columns (B, whose packed rows are columns).  Returns
+    ``(q_int8, scale)`` with ``scale`` of shape ``x.shape`` minus the
+    reduced axis -- ``(..., r_max)`` either way."""
+    xf = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=row_axis)
+    scale = jnp.where(amax > 0, amax / _INT8_QMAX, 1.0)
+    s = jnp.expand_dims(scale, row_axis)
+    q = jnp.clip(jnp.round(xf / s), -_INT8_QMAX, _INT8_QMAX)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def encode_pair(pair: Mapping, codec: str) -> dict:
+    """Encode one pair for upload.  ``rank`` always stays exact."""
+    if codec == "none":
+        return dict(pair)
+    if codec == "bf16":
+        out = dict(pair)
+        out["A"] = jnp.asarray(pair["A"]).astype(jnp.bfloat16)
+        out["B"] = jnp.asarray(pair["B"]).astype(jnp.bfloat16)
+        return out
+    if codec == "int8":
+        qa, sa = _int8_encode_side(pair["A"], row_axis=-1)
+        qb, sb = _int8_encode_side(pair["B"], row_axis=-2)
+        out = dict(pair)
+        out.update(A=qa, B=qb, A_scale=sa, B_scale=sb)
+        return out
+    raise ValueError(f"unknown codec {codec!r}; options: {list(CODECS)}")
+
+
+def decode_pair(pair: Mapping) -> dict:
+    """Dequantize one pair to fp32.  Idempotent on plain pairs."""
+    codec = codec_of_pair(pair)
+    if codec == "none":
+        return dict(pair)
+    out = {k: v for k, v in pair.items()
+           if k not in ("A_scale", "B_scale")}
+    if codec == "bf16":
+        out["A"] = jnp.asarray(pair["A"]).astype(jnp.float32)
+        out["B"] = jnp.asarray(pair["B"]).astype(jnp.float32)
+        return out
+    sa = jnp.asarray(pair["A_scale"], jnp.float32)
+    sb = jnp.asarray(pair["B_scale"], jnp.float32)
+    out["A"] = jnp.asarray(pair["A"]).astype(jnp.float32) * sa[..., :, None]
+    out["B"] = jnp.asarray(pair["B"]).astype(jnp.float32) * sb[..., None, :]
+    return out
+
+
+def encode_adapters(adapters, codec: str):
+    """Encode every pair in an adapter tree; non-pair leaves untouched."""
+    if codec not in CODECS:
+        raise ValueError(f"unknown codec {codec!r}; options: {list(CODECS)}")
+    if codec == "none":
+        return adapters
+    return _map_pairs(lambda p: encode_pair(p, codec), adapters)
+
+
+def decode_adapters(adapters):
+    """Dequantize every pair in a tree to fp32 (idempotent)."""
+    return _map_pairs(decode_pair, adapters)
+
+
+def encode_update(update, codec: str):
+    """Encode a ``ClientUpdate``'s adapters (``base_trainable`` stays
+    fp32 -- base rows are shared-dense and fold through plain FedAvg,
+    outside the packed-plan codec contract)."""
+    return dataclasses.replace(update,
+                               adapters=encode_adapters(update.adapters,
+                                                        codec))
+
+
+def decode_update(update):
+    """Dequantize a ``ClientUpdate`` (idempotent on plain updates)."""
+    return dataclasses.replace(update,
+                               adapters=decode_adapters(update.adapters))
+
+
+# ---------------------------------------------------------- validation ----
+def validate_encoded_adapters(adapters) -> None:
+    """Ingestion sanity for encoded uploads (host-side, eager).
+
+    Raises ``ValueError`` when any quantization scale is non-finite or
+    non-positive, or when an int8 payload's decoded norm would overflow
+    fp32 (``scale * 127 * sqrt(row_width)`` past ``finfo(f32).max`` --
+    such an upload would poison ``FoldState`` masses irrecoverably)."""
+    for path, pair in _iter_pairs(adapters):
+        name = "/".join(str(p) for p in path) or "<root>"
+        for side, key in (("A", "A_scale"), ("B", "B_scale")):
+            if key not in pair:
+                continue
+            s = jnp.asarray(pair[key], jnp.float32)
+            if not bool(jnp.all(jnp.isfinite(s) & (s > 0))):
+                raise ValueError(
+                    f"non-finite or non-positive quantization scale in "
+                    f"{name}.{key}")
+            width = (pair[side].shape[-1] if side == "A"
+                     else pair[side].shape[-2])
+            limit = float(jnp.finfo(jnp.float32).max) / (
+                _INT8_QMAX * math.sqrt(max(width, 1)))
+            if bool(jnp.any(s > limit)):
+                raise ValueError(
+                    f"quantization scale overflow in {name}.{key}: decoded "
+                    f"row norm would exceed float32 range")
+
+
+# ---------------------------------------------- stochastic accumulators ----
+def stochastic_round(x, key, dtype=jnp.bfloat16):
+    """Round f32 -> ``dtype`` (bf16) stochastically, olmax-style.
+
+    Adds 16 uniform random bits to the f32 bit pattern and truncates the
+    low mantissa half: ``bf16(bitcast(bitcast_u32(x) + u16) &
+    0xFFFF0000)``.  Rounds up with probability ``frac/ulp``, so
+    ``E[round(x)] == x`` exactly; bf16-representable values (low 16 bits
+    zero) are fixed points regardless of the noise.  Non-finite inputs
+    pass through unchanged (carry past the exponent would corrupt them;
+    ingestion rejects them anyway)."""
+    if jnp.dtype(dtype) != jnp.bfloat16:
+        raise ValueError("stochastic_round targets bfloat16 storage; got "
+                         f"{jnp.dtype(dtype)}")
+    xf = jnp.asarray(x, jnp.float32)
+    bits = jax.lax.bitcast_convert_type(xf, jnp.uint32)
+    try:
+        noise = jax.random.bits(key, xf.shape, jnp.uint32)
+    except (AttributeError, TypeError):   # older jax: no random.bits
+        noise = jax.random.randint(key, xf.shape, 0, 1 << 16,
+                                   jnp.int32).astype(jnp.uint32)
+    bits = (bits + (noise & jnp.uint32(0xFFFF))) & jnp.uint32(0xFFFF0000)
+    rounded = jax.lax.bitcast_convert_type(bits, jnp.float32)
+    rounded = jnp.where(jnp.isfinite(xf), rounded, xf)
+    return rounded.astype(dtype)
+
+
+def stochastic_round_tree(tree, key, dtype=jnp.bfloat16):
+    """Per-leaf :func:`stochastic_round` over the float leaves of a
+    pytree (integer leaves -- ``rank`` vectors, counters -- untouched).
+    One key split per leaf keeps leaves independent and the whole map a
+    pure function of ``(tree, key)``."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [stochastic_round(leaf, k, dtype)
+           if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating) else leaf
+           for leaf, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+__all__ = [
+    "CODECS", "codec_of_pair", "tree_codec", "cohort_codecs",
+    "encode_pair", "decode_pair", "encode_adapters", "decode_adapters",
+    "encode_update", "decode_update", "validate_encoded_adapters",
+    "stochastic_round", "stochastic_round_tree",
+]

@@ -236,6 +236,11 @@ class CohortSpec:
     interpret: bool | None = None
     mesh: Any = None
     client_axis: str = "clients"
+    #: per-client upload codec names ("none"|"bf16"|"int8") for encoded
+    #: cohorts (see repro.core.codec); None = plain fp32 stacked cohort.
+    #: Part of the key: a codec-mix change re-plans (and re-traces the
+    #: executor), a rank-multiset repeat under the same mix still hits.
+    codecs: tuple | None = None
 
     def client_ranks_array(self):
         if self.client_ranks is None:
@@ -289,6 +294,84 @@ def build_cohort_spec(stacked_tree: PyTree, *, kind: str,
                       has_prev=prev_tree is not None, interpret=interpret,
                       mesh=mesh if kind == "distributed" else None,
                       client_axis=client_axis)
+
+
+def build_encoded_cohort_spec(client_trees: Sequence, codecs, *, kind: str,
+                              r_max: int | None = None, client_ranks=None,
+                              prev_tree: PyTree | None = None,
+                              interpret: bool | None = None,
+                              client_axis: str = "clients") -> CohortSpec:
+    """Describe an *encoded* cohort: per-client adapter trees carrying
+    wire dtypes (``repro.core.codec``), never leafwise-stacked -- stacking
+    int8 next to fp32 would either fail or promote, i.e. the forbidden
+    fp32 staging buffer.  ``codecs`` is the per-client codec-name tuple
+    (``cohort_codecs``); pair metadata records the **decoded** (f32)
+    dtypes so bucketing and unpacking match the fp32 cohort exactly and
+    only ``spec.codecs`` distinguishes the wire layout."""
+    codecs = tuple(codecs)
+    n = len(client_trees)
+    if len(codecs) != n:
+        raise PlanUnavailable(f"{len(codecs)} codecs for {n} clients")
+    if any(c not in ("none", "bf16", "int8") for c in codecs):
+        raise PlanUnavailable(
+            "per-pair mixed codecs inside one client are not plannable")
+    prev_pairs = (dict(_walk_pairs(prev_tree))
+                  if prev_tree is not None else {})
+    walked = [list(_walk_pairs(t)) for t in client_trees]
+    paths = [p for p, _ in walked[0]]
+    for i, wl in enumerate(walked[1:], start=1):
+        if [p for p, _ in wl] != paths:
+            raise PlanUnavailable(
+                f"client {i}'s tree structure differs from client 0's")
+    if client_ranks is not None:
+        client_ranks = tuple(
+            int(v) for v in _concrete(client_ranks, "client_ranks").ravel())
+    inferred: list | None = [] if client_ranks is None else None
+    pairs = []
+    for pi, path in enumerate(paths):
+        metas = []
+        rks = []
+        for i in range(n):
+            pair = walked[i][pi][1]
+            A, B = pair["A"], pair["B"]
+            if (isinstance(A, jax.core.Tracer)
+                    or isinstance(B, jax.core.Tracer)):
+                raise PlanUnavailable("cohort leaves are traced")
+            metas.append((tuple(A.shape), tuple(B.shape)))
+            rks.append(_concrete(pair["rank"], f"rank leaf at {path}"))
+        if any(m != metas[0] for m in metas[1:]):
+            raise PlanUnavailable(
+                f"clients disagree on pair shapes at {path}")
+        rk = np.stack(rks)
+        if inferred is not None and pi == 0 and rk.ndim == 1:
+            inferred.extend(int(v) for v in rk)
+        a_shape = (n,) + metas[0][0]
+        b_shape = (n,) + metas[0][1]
+        # decoded dtype: wire dtypes dequantize to f32; an all-"none"
+        # pair keeps its own dtype (can't happen cohort-wide -- that
+        # cohort has codecs=None and takes the stacked path)
+        meta = dict(path=path, a_shape=a_shape, a_dtype="float32",
+                    b_shape=b_shape, b_dtype="float32",
+                    rank_shape=tuple(rk.shape),
+                    ranks=tuple(int(v) for v in rk.ravel()))
+        if prev_tree is not None:
+            if path not in prev_pairs:
+                raise PlanUnavailable(f"prev tree missing pair at {path}")
+            pp = prev_pairs[path]
+            prk = _concrete(pp["rank"], f"prev rank leaf at {path}")
+            meta.update(prev_a_shape=tuple(pp["A"].shape),
+                        prev_b_shape=tuple(pp["B"].shape),
+                        prev_rank_shape=tuple(prk.shape),
+                        prev_ranks=tuple(int(v) for v in prk.ravel()))
+        pairs.append(PairMeta(**meta))
+    if not pairs:
+        raise PlanUnavailable("no LoRA pairs in the cohort trees")
+    if client_ranks is None and inferred:
+        client_ranks = tuple(inferred)
+    return CohortSpec(n_clients=n, kind=kind, r_max=r_max,
+                      pairs=tuple(pairs), client_ranks=client_ranks,
+                      has_prev=prev_tree is not None, interpret=interpret,
+                      mesh=None, client_axis=client_axis, codecs=codecs)
 
 
 # ---------------------------------------------------------- packed layout --
@@ -498,10 +581,16 @@ def _out_rank_leaves(spec: CohortSpec, r_out_per_pair=None):
 
 # ------------------------------------------------------ packed mean plans --
 def _bucket_mean_ref(x, mask_const, wt, prev, norm_by: str,
-                     norm_restore: bool):
+                     norm_restore: bool, scales=None):
     """Fused reference math for one bucket: the packed-row form of
-    rbla/zeropad/fedavg leaf math (+ rbla_norm's per-row norm restore)."""
+    rbla/zeropad/fedavg leaf math (+ rbla_norm's per-row norm restore).
+    ``scales`` (n, rows) dequantizes int8 payloads on the fly (the scale
+    folds into the value einsum; the owner-mass denominator is
+    scale-free)."""
     m = mask_const
+    x = x.astype(jnp.float32)
+    if scales is not None:
+        x = scales[:, :, None] * x
     num = jnp.einsum("n,nr,nrd->rd", wt, m, x)
     if norm_by == "mask":
         den = jnp.einsum("n,nr->r", wt, m)[:, None]
@@ -527,15 +616,19 @@ def _shape_key(spec: CohortSpec) -> tuple:
     on: shapes, dtypes, backend, prev presence -- but NOT the rank
     multiset.  Owner masks and client ranks enter as runtime data, so
     one compiled executor serves every cohort with this layout and a new
-    rank multiset costs a new (cheap) plan, not a new XLA compile."""
+    rank multiset costs a new (cheap) plan, not a new XLA compile.  The
+    codec mix IS part of the key: wire dtypes and the group split change
+    the traced computation."""
     return (spec.kind, spec.n_clients, spec.has_prev, spec.interpret,
-            spec.mesh, spec.client_axis,
+            spec.mesh, spec.client_axis, spec.codecs,
             tuple((m.a_shape, m.a_dtype, m.b_shape, m.b_dtype)
                   for m in spec.pairs))
 
 
 def _build_mean_round(strategy, spec: CohortSpec,
                       norm_restore: bool = False) -> CompiledRound:
+    if spec.codecs is not None:
+        return _build_encoded_mean_round(strategy, spec, norm_restore)
     buckets = _make_buckets(spec, strategy.use_mask)
     retains = strategy.retains_prev and spec.has_prev
     if retains:
@@ -671,6 +764,255 @@ def _build_mean_round(strategy, spec: CohortSpec,
         prev_ab = _ab_list(prev_tree) if retains else None
         run = fn_donate if (donate and retains) else fn
         outs = run(xs, w, prev_ab, masks, cr)
+        pairs = [{"A": o["A"], "B": o["B"], "rank": rank_leaves[i]}
+                 for i, o in enumerate(outs)]
+        return rebuild[0](pairs)
+
+    return CompiledRound(strategy, spec, "packed", execute,
+                         n_kernel_launches=len(buckets))
+
+
+# ---------------------------------------------- encoded (quantized) plans --
+def _enc_ab_list(tree) -> list:
+    """Like :func:`_ab_list` but keeps the int8 codec's per-row scale
+    leaves riding with each pair."""
+    out = []
+    for _, p in _walk_pairs(tree):
+        d = {"A": p["A"], "B": p["B"]}
+        for k in ("A_scale", "B_scale"):
+            if k in p:
+                d[k] = p[k]
+        out.append(d)
+    return out
+
+
+def _pack_client_side(x, slot: Slot, wire: bool):
+    """(*lead, ...) single-client leaf -> (rows, width); ``wire=True``
+    keeps the upload's wire dtype (int8/bf16) so the packed payload never
+    stages an fp32 copy."""
+    x = pair_side_rows(x, slot.side)
+    x = x.reshape((slot.rows, slot.width))
+    return x if wire else x.astype(jnp.float32)
+
+
+def _pack_client_scale(pair, slot: Slot):
+    """Per-row dequant scales of one pair side -> (rows,) f32.  Both
+    sides carry a ``(*lead, r)`` scale leaf on the packed row convention
+    (B's packed rows are its columns), so the reshape is shared."""
+    s = pair["A_scale" if slot.side == "A" else "B_scale"]
+    return jnp.asarray(s, jnp.float32).reshape(slot.rows)
+
+
+def _build_encoded_mean_round(strategy, spec: CohortSpec,
+                              norm_restore: bool = False) -> CompiledRound:
+    """Mean/robust packed round over an *encoded* cohort (per-client wire
+    dtypes from ``spec.codecs``).
+
+    Clients group by codec (static index tuples); each bucket packs one
+    ``(n_g, rows, width)`` payload per group in the group's wire dtype
+    plus ``(n_g, rows)`` f32 scales for int8 groups.  A uniform-codec
+    cohort keeps the one-fused-launch-per-bucket property -- the scales
+    ride into ``packed_agg``/``packed_robust`` as runtime data and
+    dequantization happens inside the kernel.  A mixed mean combines
+    per-group partial sums (dequant folded into each group's value
+    einsum); mixed *robust* rounds must dequantize-and-concatenate
+    in-trace before the cross-group order statistics -- unavoidable, and
+    still one jitted computation per round."""
+    buckets = _make_buckets(spec, strategy.use_mask)
+    retains = strategy.retains_prev and spec.has_prev
+    if retains:
+        for meta in spec.pairs:       # mean plans overlay prev in place
+            if (meta.prev_a_shape != meta.a_shape[1:]
+                    or meta.prev_b_shape != meta.b_shape[1:]):
+                raise PlanUnavailable(
+                    "prev leaf shapes differ from the cohort's")
+    cr = spec.client_ranks_array()
+    norm_by = strategy.norm_by
+    rank_leaves = _out_rank_leaves(spec)
+
+    # static codec groups, first-appearance order
+    order: dict = {}
+    for i, c in enumerate(spec.codecs):
+        if c not in ("none", "bf16", "int8"):
+            raise PlanUnavailable(f"client {i} uses unknown codec {c!r}")
+        order.setdefault(c, []).append(i)
+    groups = [(c, tuple(ix)) for c, ix in order.items()]
+    # per-bucket per-group owner masks (host-sliced once per plan)
+    masks = [[jnp.asarray(b.mask[list(ix)]) for _, ix in groups]
+             for b in buckets]
+    gidx = [jnp.asarray(ix, jnp.int32) for _, ix in groups]
+
+    from repro.kernels.runtime import auto_interpret
+    use_kernel = (spec.kind == "pallas"
+                  and not auto_interpret(spec.interpret))
+    robust = getattr(strategy, "robustness", "none")
+    knobs = ((robust, float(getattr(strategy, "clip_norm", 0.0) or 0.0),
+              float(getattr(strategy, "trim_frac", 0.0) or 0.0))
+             if robust != "none" else ())
+
+    def _robust_bucket(x, m, wt_g, prev):
+        """Uniform-path robust dispatch on an already-grouped payload
+        (scales=None: pass f32; else fused dequant)."""
+        def run(fn, **kw):
+            return fn(x[0], m, wt_g, prev, mode=robust, clip_norm=knobs[1],
+                      trim_frac=knobs[2], scales=x[1],
+                      out_dtype=jnp.float32, **kw)
+        if use_kernel:
+            from repro.kernels.rbla_agg.ops import packed_robust_inline
+            return run(packed_robust_inline, interpret=spec.interpret)
+        if spec.kind == "pallas" and robust in ("trimmed", "median"):
+            from repro.kernels.rbla_agg.ref import packed_robust_xla
+            return run(packed_robust_xla)
+        from repro.kernels.rbla_agg.ref import packed_robust_ref
+        return run(packed_robust_ref)
+
+    exec_cache = strategy.__dict__.setdefault("_plan_exec_cache", {})
+    key = ("mean", norm_restore, knobs, _shape_key(spec))
+    fns = exec_cache.get(key)
+    if fns is None:
+        def pack_fn(clients):
+            """Per-client uploads -> per-(bucket, group) wire-dtype
+            payloads + int8 scale planes.  No fp32 staging: each group's
+            (n_g, rows, width) buffer keeps the upload dtype."""
+            xs, ss = [], []
+            for b in buckets:
+                bx, bs = [], []
+                for cname, ix in groups:
+                    per_client = []
+                    per_scale = []
+                    for i in ix:
+                        parts = [_pack_client_side(
+                            clients[i][s.pair_idx][s.side], s,
+                            wire=cname != "none") for s in b.slots]
+                        per_client.append(
+                            jnp.concatenate(parts, axis=0)
+                            if len(parts) > 1 else parts[0])
+                        if cname == "int8":
+                            sp = [_pack_client_scale(
+                                clients[i][s.pair_idx], s)
+                                for s in b.slots]
+                            per_scale.append(jnp.concatenate(sp)
+                                             if len(sp) > 1 else sp[0])
+                    bx.append(jnp.stack(per_client))
+                    bs.append(jnp.stack(per_scale) if per_scale else None)
+                xs.append(bx)
+                ss.append(bs)
+            return xs, ss
+
+        def combine_fn(xs, ss, wt_raw, prev_ab, ms, crv):
+            wt = strategy.transform_weights(wt_raw, crv)
+            wt_g = [wt[ix] for ix in gidx]
+            outs = []
+            for bi, b in enumerate(buckets):
+                prev = None
+                if retains:
+                    parts = [_pack_prev_side(prev_ab[s.pair_idx][s.side],
+                                             s) for s in b.slots]
+                    prev = (jnp.concatenate(parts, axis=0)
+                            if len(parts) > 1 else parts[0])
+                if len(groups) == 1:
+                    # uniform codec: one fused launch per bucket, scales
+                    # as runtime data
+                    if robust != "none":
+                        out = _robust_bucket((xs[bi][0], ss[bi][0]),
+                                             ms[bi][0], wt_g[0], prev)
+                    elif use_kernel:
+                        from repro.kernels.rbla_agg.ops import (
+                            packed_agg_inline)
+                        out = packed_agg_inline(
+                            xs[bi][0], ms[bi][0], wt_g[0], prev,
+                            norm_by=norm_by, norm_restore=norm_restore,
+                            scales=ss[bi][0], out_dtype=jnp.float32,
+                            interpret=spec.interpret)
+                    else:
+                        out = _bucket_mean_ref(xs[bi][0], ms[bi][0],
+                                               wt_g[0], prev, norm_by,
+                                               norm_restore,
+                                               scales=ss[bi][0])
+                elif robust != "none":
+                    # cross-group order statistics need every client in
+                    # one buffer: dequantize-and-concat in-trace
+                    cat = []
+                    for gi in range(len(groups)):
+                        xg = xs[bi][gi].astype(jnp.float32)
+                        if ss[bi][gi] is not None:
+                            xg = ss[bi][gi][:, :, None] * xg
+                        cat.append(xg)
+                    out = _robust_bucket(
+                        (jnp.concatenate(cat, axis=0), None),
+                        jnp.concatenate(ms[bi], axis=0),
+                        jnp.concatenate(wt_g), prev)
+                else:
+                    # mixed mean: per-group partial sums, dequant folded
+                    # into each group's value einsum (scale rides on the
+                    # (n, r) mask plane, never on the payload)
+                    rows = b.rows
+                    num = jnp.zeros((rows, xs[bi][0].shape[-1]),
+                                    jnp.float32)
+                    den = jnp.zeros((rows,), jnp.float32)
+                    tnum = jnp.zeros((rows,), jnp.float32)
+                    town = jnp.zeros((rows,), jnp.float32)
+                    for gi in range(len(groups)):
+                        xg = xs[bi][gi].astype(jnp.float32)
+                        m = ms[bi][gi]
+                        sg = ss[bi][gi]
+                        mv = m if sg is None else m * sg
+                        num = num + jnp.einsum("n,nr,nrd->rd", wt_g[gi],
+                                               mv, xg)
+                        den = den + jnp.einsum("n,nr->r", wt_g[gi], m)
+                        if norm_restore:
+                            xm = m[:, :, None] * xg
+                            qn = jnp.sqrt(
+                                jnp.einsum("nrd,nrd->nr", xm, xm))
+                            rn = qn if sg is None else sg * qn
+                            own = ((m > 0).astype(jnp.float32)
+                                   * wt_g[gi][:, None])
+                            tnum = tnum + jnp.sum(own * rn, axis=0)
+                            town = town + jnp.sum(own, axis=0)
+                    if norm_by == "mask":
+                        fb = (prev if prev is not None
+                              else jnp.zeros_like(num))
+                        out = jnp.where(den[:, None] > 0,
+                                        num / (den[:, None] + _EPS), fb)
+                    else:
+                        out = num / (jnp.sum(wt) + _EPS)
+                    if norm_restore:
+                        target = tnum / (town + _EPS)
+                        agg = jnp.sqrt(jnp.sum(out ** 2, axis=1))
+                        out = out * jnp.where(
+                            agg > _EPS, target / (agg + _EPS), 1.0)[:, None]
+                outs.append(out)
+            return [
+                {s.side: _unpack_slot(outs[bi], s, spec.pairs[s.pair_idx])
+                 for bi, b in enumerate(buckets) for s in b.slots
+                 if s.pair_idx == pi}
+                for pi in range(len(spec.pairs))]
+
+        fns = (jax.jit(pack_fn), jax.jit(combine_fn),
+               jax.jit(combine_fn, donate_argnums=(3,)))
+        exec_cache[key] = fns
+    pack, fn, fn_donate = fns
+    rebuild = [None]
+    pack_memo = BufferMemo()
+
+    def execute(client_trees, w, prev_tree, donate):
+        if rebuild[0] is None:
+            rebuild[0] = _make_rebuilder(client_trees[0])
+        clients = [_enc_ab_list(t) for t in client_trees]
+        stats = strategy.__dict__.setdefault(
+            "plan_stats", {"hits": 0, "misses": 0})
+        leaves = [v for ab in clients for d in ab for v in d.values()]
+        packed = pack_memo.lookup(leaves)
+        if packed is not None:
+            stats["pack_reuses"] = stats.get("pack_reuses", 0) + 1
+        else:
+            packed = pack(clients)
+            pack_memo.store(leaves, packed)
+            stats["pack_runs"] = stats.get("pack_runs", 0) + 1
+        xs, ss = packed
+        prev_ab = _ab_list(prev_tree) if retains else None
+        run = fn_donate if (donate and retains) else fn
+        outs = run(xs, ss, w, prev_ab, masks, cr)
         pairs = [{"A": o["A"], "B": o["B"], "rank": rank_leaves[i]}
                  for i, o in enumerate(outs)]
         return rebuild[0](pairs)
@@ -1184,12 +1526,21 @@ def build_plan(strategy, spec: CohortSpec) -> CompiledRound:
       nothing about).
     """
     mode = getattr(strategy, "plan_mode", None)
+    if spec.codecs is not None and (mode not in ("mean", "mean_norm")
+                                    or spec.kind == "distributed"):
+        # encoded cohorts lower through the packed mean family only; the
+        # caller decodes eagerly for stack/svd/jit/eager/distributed
+        raise PlanUnavailable(
+            "encoded cohorts plan only on the mean family")
     try:
         if mode == "mean":
             return _build_mean_round(strategy, spec)
         if mode == "mean_norm":
             if spec.kind == "distributed" or any(
                     len(m.a_shape) != 3 for m in spec.pairs):
+                if spec.codecs is not None:
+                    raise PlanUnavailable(
+                        "encoded mean_norm needs scalar-rank pairs")
                 return _build_eager_round(strategy, spec)
             return _build_mean_round(strategy, spec, norm_restore=True)
         if mode == "stack":
@@ -1207,6 +1558,10 @@ def build_plan(strategy, spec: CohortSpec) -> CompiledRound:
         if mode == "jit" and spec.kind == "ref":
             return _build_jit_round(strategy, spec)
     except PlanUnavailable:
+        if spec.codecs is not None:
+            # the eager round expects a stacked fp32 tree -- propagate so
+            # the caller decodes and retries on the standard path
+            raise
         return _build_eager_round(strategy, spec)
     return _build_eager_round(strategy, spec)
 
@@ -1299,6 +1654,7 @@ def build_state_spec(adapters: PyTree, *, interpret=None) -> CohortSpec:
 __all__ = [
     "CohortSpec", "PairMeta", "CompiledRound", "PlanUnavailable",
     "BufferMemo",
-    "build_cohort_spec", "build_plan", "build_fold_plan",
-    "build_state_spec", "dispatch_counter", "DispatchCounter",
+    "build_cohort_spec", "build_encoded_cohort_spec", "build_plan",
+    "build_fold_plan", "build_state_spec", "dispatch_counter",
+    "DispatchCounter",
 ]

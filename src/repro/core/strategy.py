@@ -443,6 +443,24 @@ class AggregationStrategy:
             return None
         return self.plan(None, spec)
 
+    def _plan_encoded_round(self, client_adapters, codecs, kind, *, r_max,
+                            client_ranks, prev, interpret,
+                            client_axis="clients"):
+        """Best-effort plan for an *encoded* (quantized-upload) cohort --
+        per-client trees, never stacked; ``None`` sends the caller to the
+        decode-eagerly fallback.  Shares :meth:`plan`'s cache, so a codec
+        mix change re-plans while a rank-multiset repeat under the same
+        mix hits."""
+        from .plan import PlanUnavailable, build_encoded_cohort_spec
+        try:
+            spec = build_encoded_cohort_spec(
+                client_adapters, codecs, kind=kind, r_max=r_max,
+                client_ranks=client_ranks, prev_tree=prev,
+                interpret=interpret, client_axis=client_axis)
+            return self.plan(None, spec)
+        except PlanUnavailable:
+            return None
+
     # ------------------------------------------------------ (a) leaf math --
     def leaf(self, stacked: Array, mask: Array | None, weights: Array,
              prev: Array | None = None) -> Array:
@@ -660,6 +678,31 @@ class AggregationStrategy:
         from repro.lora import adapter_masks
 
         from .plan import BufferMemo
+
+        from .codec import cohort_codecs
+        codecs = cohort_codecs(client_adapters)
+        if codecs is not None:
+            # encoded uploads (repro.core.codec): the mean family plans
+            # them directly -- per-client wire-dtype payloads, dequant
+            # fused into the packed kernels, no stacked fp32 staging
+            # buffer.  Everything else (stack/svd/jit/eager/distributed,
+            # intra-client codec mixes, unplannable cohorts) decodes
+            # eagerly and takes the standard path below.
+            kind_enc = resolve_backend(backend, self)
+            if (use_plan and "mixed" not in codecs
+                    and getattr(self, "plan_mode", None) in ("mean",
+                                                             "mean_norm")
+                    and kind_enc in ("ref", "pallas")):
+                prev_enc = prev_global if self.retains_prev else None
+                round_ = self._plan_encoded_round(
+                    client_adapters, codecs, kind_enc, r_max=r_max,
+                    client_ranks=client_ranks, prev=prev_enc,
+                    interpret=interpret, client_axis=client_axis)
+                if round_ is not None:
+                    return round_(client_adapters, weights, prev_enc,
+                                  donate=donate)
+            from .codec import decode_adapters
+            client_adapters = [decode_adapters(a) for a in client_adapters]
 
         leaves = [leaf for ad in client_adapters
                   for leaf in jax.tree.leaves(ad)]

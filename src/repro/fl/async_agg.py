@@ -53,9 +53,13 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.codec import (CODECS, codec_of_pair, decode_update,
+                              stochastic_round_tree, tree_codec,
+                              validate_encoded_adapters)
+from repro.core.codec import _iter_pairs as _iter_adapter_pairs
 from repro.core.strategy import (ClientUpdate, FoldState, ServerState,
                                  get_strategy)
-from repro.fl.comm import UpdateBuffer
+from repro.fl.comm import UpdateBuffer, tree_bytes
 
 #: schedule name -> factory(a, b) -> s(tau); all monotone non-increasing
 #: in tau with s(0) == 1 (fresh updates are never discounted)
@@ -138,6 +142,28 @@ class AsyncAggregator:
         buffering is unaffected.  Requires a fixed-rank strategy
         (``rank_contract="fixed"``): a rank-changing live rank would
         change the buffer's meaning round to round.
+    codecs
+        Upload codecs this service accepts (negotiated allow-list, a
+        subset of :data:`repro.core.codec.CODECS`); a single name is
+        promoted to a 1-tuple.  Uploads using any other wire format are
+        rejected at the ingestion front door.  Quantized uploads stay
+        encoded through the buffer -- the plan layer fuses
+        dequantization into the aggregation kernel -- and are decoded
+        only on the incremental/replay fold paths, which operate on
+        fp32 trees.
+    accum_dtype
+        ``None`` (default, fp32 accumulators, bit-exact) or
+        ``"bfloat16"``: between folds the live accumulators -- the
+        state's adapter float leaves and the server-momentum buffer --
+        are stored in bf16, written back with **stochastic rounding**
+        (:func:`repro.core.codec.stochastic_round`) so the accumulator
+        is unbiased over folds; fold arithmetic itself stays fp32.
+        ``FoldState`` masses (``mass``, ``row_mass``) stay fp32 --
+        rounding the denominators would bias every subsequent mean.
+    seed
+        PRNG seed for the stochastic-rounding noise.  Folds are
+        reproducible: a fixed seed and the same submission sequence
+        yield bit-identical accumulators.
     """
 
     STALENESS_CLOCKS = ("version", "wall")
@@ -150,7 +176,10 @@ class AsyncAggregator:
                  replay_window: int = 64,
                  on_publish: "Callable | None" = None,
                  publish_every: int = 1,
-                 server_momentum: float = 0.0):
+                 server_momentum: float = 0.0,
+                 codecs=CODECS,
+                 accum_dtype=None,
+                 seed: int = 0):
         if buffer_size < 1:
             raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
         if replay_window < 1:
@@ -166,6 +195,21 @@ class AsyncAggregator:
         if not 0.0 <= server_momentum < 1.0:
             raise ValueError(
                 f"server_momentum must be in [0, 1), got {server_momentum}")
+        if isinstance(codecs, str):
+            codecs = (codecs,)
+        codecs = tuple(codecs)
+        unknown = [c for c in codecs if c not in CODECS]
+        if unknown or not codecs:
+            raise ValueError(
+                f"unknown upload codec(s) {unknown or codecs}; options: "
+                f"{list(CODECS)}")
+        self.codecs = codecs
+        if accum_dtype is not None and jnp.dtype(accum_dtype) != jnp.bfloat16:
+            raise ValueError(
+                "accum_dtype must be None (fp32) or bfloat16, got "
+                f"{accum_dtype!r}")
+        self.accum_dtype = None if accum_dtype is None else jnp.bfloat16
+        self._prng_key = jax.random.PRNGKey(int(seed))
         self.strategy = get_strategy(strategy)
         if server_momentum > 0.0 and self.strategy.rank_contract != "fixed":
             raise ValueError(
@@ -194,6 +238,8 @@ class AsyncAggregator:
         self.n_flushes = 0
         self.n_dropped = 0          # zero-mass flushes discarded whole
         self.staleness_sum = 0.0
+        self.wire_bytes_received = 0   # post-codec upload bytes accepted
+        self._quantize_live()          # bf16 storage from the first fold on
 
     # ------------------------------------------------------------- intake --
     @property
@@ -219,6 +265,16 @@ class AsyncAggregator:
             raise ValueError(
                 "rejected client update: n_examples must be positive and "
                 f"finite, got {update.n_examples!r}")
+        used = {codec_of_pair(p)
+                for _, p in _iter_adapter_pairs(update.adapters)}
+        bad = sorted(used - set(self.codecs))
+        if bad:
+            raise ValueError(
+                f"rejected client update: upload codec {bad} not in the "
+                f"negotiated set {list(self.codecs)}")
+        # scale sanity first: a NaN scale should name the scale, not fall
+        # through to the generic non-finite message below
+        validate_encoded_adapters(update.adapters)
         for name, tree in (("adapters", update.adapters),
                            ("base_trainable", update.base_trainable)):
             for leaf in jax.tree.leaves(tree):
@@ -254,7 +310,11 @@ class AsyncAggregator:
         weight = self.staleness_weight(tau) * float(update.n_examples)
         self.n_received += 1
         self.staleness_sum += tau
-        self.buffer.add(update, weight=weight, staleness=tau, now=now)
+        wire = (tree_bytes(update.adapters)
+                + tree_bytes(update.base_trainable))
+        self.wire_bytes_received += wire
+        self.buffer.add(update, weight=weight, staleness=tau, now=now,
+                        wire_bytes=wire)
         if self.buffer.due(now):
             self.flush(now=now)
             return True
@@ -291,6 +351,8 @@ class AsyncAggregator:
         if not batch:
             return self.state
         self.n_flushes += 1
+        # fold arithmetic runs in fp32; bf16 is storage between advances
+        self._dequantize_live()
         prev_state = self.state
         if self.buffer.size == 1 and len(batch) == 1:
             self._fold_one(batch[0].update, batch[0].weight)
@@ -311,6 +373,7 @@ class AsyncAggregator:
             momentum = self._fold_state.momentum
             self._fold_state = self.strategy.init_fold(self.state)
             self._fold_state.momentum = momentum
+        self._quantize_live()
         self._maybe_publish()
         return self.state
 
@@ -349,6 +412,11 @@ class AsyncAggregator:
             self.n_published += 1
 
     def _fold_one(self, update: ClientUpdate, weight: float) -> None:
+        # the incremental fold kernels and the replay anchor operate on
+        # fp32 trees; the fused-dequant plan path only serves mini-cohort
+        # flushes, so decode here (idempotent on plain uploads)
+        if tree_codec(update.adapters) != "none":
+            update = decode_update(update)
         if self.strategy.supports_incremental:
             # strategies build fresh FoldStates (mass/row_mass are theirs);
             # the momentum buffer is service-level state riding in the same
@@ -372,6 +440,46 @@ class AsyncAggregator:
             self.state = dataclasses.replace(out,
                                              round=self.state.round + 1)
         self.n_folded += 1
+
+    # ------------------------------------------------- bf16 accumulators --
+    def _next_key(self):
+        """Fresh SR subkey; advances the service PRNG deterministically."""
+        self._prng_key, sub = jax.random.split(self._prng_key)
+        return sub
+
+    def _quantize_live(self) -> None:
+        """Store the live accumulators (state adapter float leaves + the
+        momentum buffer) in bf16 with stochastic rounding.  FoldState
+        masses stay fp32: they are denominators, and rounding them would
+        bias every later mean rather than average out."""
+        if self.accum_dtype is None:
+            return
+        if self.state.adapters is not None:
+            self.state = dataclasses.replace(
+                self.state,
+                adapters=stochastic_round_tree(
+                    self.state.adapters, self._next_key(), self.accum_dtype))
+        if self._fold_state.momentum is not None:
+            self._fold_state.momentum = stochastic_round_tree(
+                self._fold_state.momentum, self._next_key(),
+                self.accum_dtype)
+
+    def _dequantize_live(self) -> None:
+        """Promote bf16-stored accumulators back to fp32 (exact -- every
+        bf16 value is fp32-representable) before fold arithmetic."""
+        if self.accum_dtype is None:
+            return
+
+        def up(x):
+            x = jnp.asarray(x)
+            return x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x
+
+        if self.state.adapters is not None:
+            self.state = dataclasses.replace(
+                self.state, adapters=jax.tree.map(up, self.state.adapters))
+        if self._fold_state.momentum is not None:
+            self._fold_state.momentum = jax.tree.map(
+                up, self._fold_state.momentum)
 
     # ---------------------------------------------------------- reporting --
     def mean_staleness(self) -> float:

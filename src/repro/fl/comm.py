@@ -36,6 +36,7 @@ class BufferedUpdate:
     weight: float               # effective mass (staleness already applied)
     staleness: float = 0.0      # server versions behind at arrival
     arrived: float = 0.0        # service clock at arrival
+    wire_bytes: int = 0         # bytes as uploaded (post-codec, pre-decode)
 
 
 class UpdateBuffer:
@@ -61,11 +62,12 @@ class UpdateBuffer:
         return len(self._items)
 
     def add(self, update, weight: float, staleness: float = 0.0,
-            now: float = 0.0) -> None:
+            now: float = 0.0, wire_bytes: int = 0) -> None:
         self._items.append(BufferedUpdate(update=update,
                                           weight=float(weight),
                                           staleness=float(staleness),
-                                          arrived=float(now)))
+                                          arrived=float(now),
+                                          wire_bytes=int(wire_bytes)))
 
     def due(self, now: float = 0.0) -> bool:
         """Is a flush due -- K updates waiting, or the oldest past the
@@ -91,6 +93,12 @@ class UpdateBuffer:
         staleness-discounted to 0) has no convex combination and must be
         dropped, not aggregated into ``0 / 0``."""
         return float(sum(b.weight for b in self._items))
+
+    def total_wire_bytes(self) -> int:
+        """Bytes currently buffered as uploaded -- quantized payloads
+        count at their wire dtype, which is the whole point of shipping
+        them quantized."""
+        return sum(b.wire_bytes for b in self._items)
 
     def pop(self) -> list[BufferedUpdate]:
         """Drain the buffer in arrival order."""

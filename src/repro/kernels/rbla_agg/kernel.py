@@ -50,7 +50,8 @@ def _kernel(ranks_ref, weights_ref, x_ref, o_ref, *, n_clients: int,
 
 
 def _packed_kernel(weights_ref, masks_ref, x_ref, *rest, n_clients: int,
-                   norm_by: str, has_prev: bool, norm_restore: bool = False):
+                   norm_by: str, has_prev: bool, norm_restore: bool = False,
+                   has_scales: bool = False):
     """Fused whole-round aggregation over a packed bucket (plan path).
 
     ``x``: (N, R, D) packed rows from *every* pair of the cohort that
@@ -65,7 +66,14 @@ def _packed_kernel(weights_ref, masks_ref, x_ref, *rest, n_clients: int,
     same pass: each output row is rescaled so its L2 norm matches the
     owners' weighted-mean row norm (the wrapper keeps the whole row in
     one block -- the reduction runs over the full width).
+
+    ``has_scales`` adds a (N, R) per-row dequantization-scale operand
+    (after ``x``, before ``prev``): each client row is multiplied by its
+    scale on load, fusing int8 upload decoding into the same pass -- the
+    fp32 view of the payload never hits HBM.
     """
+    rest = list(rest)
+    scales_ref = rest.pop(0) if has_scales else None
     if has_prev:
         prev_ref, o_ref = rest
     else:
@@ -80,6 +88,8 @@ def _packed_kernel(weights_ref, masks_ref, x_ref, *rest, n_clients: int,
         m = masks_ref[nix][:, None]                  # (br, 1)
         w = weights_ref[nix]
         xn = x_ref[nix].astype(jnp.float32)
+        if has_scales:
+            xn = scales_ref[nix][:, None] * xn       # fused dequant
         num = num + (w * m) * xn
         den = den + w * m
         wtot = wtot + w
@@ -104,6 +114,7 @@ def _packed_kernel(weights_ref, masks_ref, x_ref, *rest, n_clients: int,
 
 def packed_agg_pallas(x, masks, weights, prev=None, *,
                       norm_by: str = "mask", norm_restore: bool = False,
+                      scales=None, out_dtype=None,
                       br=DEFAULT_BR, bd=DEFAULT_BD, interpret=True):
     """x: (N, R, D); masks: (N, R) f32; weights: (N,) f32; prev: (R, D)
     or None -> (R, D).  The plan path's fused bucket reduction: like
@@ -111,10 +122,15 @@ def packed_agg_pallas(x, masks, weights, prev=None, *,
     matrix (packed rows span many pairs, so a single rank vector cannot
     describe them) and prev-global retention fused in.  ``norm_restore``
     adds rbla_norm's per-row norm restoration (full-width blocks: the
-    row-norm reduction cannot cross column tiles)."""
+    row-norm reduction cannot cross column tiles).  ``scales``: optional
+    (N, R) f32 per-row dequantization scales fused on the load (int8
+    transport); ``out_dtype`` overrides the output dtype when ``x`` is a
+    wire dtype."""
     n, r, d = x.shape
     if masks.shape != (n, r):
         raise ValueError(f"packed_agg: masks {masks.shape} != ({n}, {r})")
+    if scales is not None and scales.shape != (n, r):
+        raise ValueError(f"packed_agg: scales {scales.shape} != ({n}, {r})")
     if prev is not None and prev.shape != (r, d):
         raise ValueError(f"packed_agg: prev {prev.shape} != ({r}, {d})")
     br, bd = min(br, r), (d if norm_restore else min(bd, d))
@@ -132,17 +148,21 @@ def packed_agg_pallas(x, masks, weights, prev=None, *,
         pl.BlockSpec((n, br, bd), lambda i, j: (0, i, j)),
     ]
     args = [weights.astype(jnp.float32), masks.astype(jnp.float32), x]
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((n, br), lambda i, j: (0, i)))
+        args.append(scales.astype(jnp.float32))
     if prev is not None:
         in_specs.append(pl.BlockSpec((br, bd), lambda i, j: (i, j)))
         args.append(prev)
     return pl.pallas_call(
         functools.partial(_packed_kernel, n_clients=n, norm_by=norm_by,
                           has_prev=prev is not None,
-                          norm_restore=norm_restore),
+                          norm_restore=norm_restore,
+                          has_scales=scales is not None),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((br, bd), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((r, d), out_dtype or x.dtype),
         interpret=interpret,
     )(*args)
 
@@ -154,7 +174,8 @@ _SENTINEL = 1e30
 
 def _packed_robust_kernel(weights_ref, masks_ref, x_ref, *rest,
                           n_clients: int, mode: str, clip_norm: float,
-                          trim_frac: float, has_prev: bool):
+                          trim_frac: float, has_prev: bool,
+                          has_scales: bool = False):
     """Byzantine-robust fused bucket reduction (plan path).
 
     Same packed layout as :func:`_packed_kernel`.  ``mode="clipped"``
@@ -167,7 +188,13 @@ def _packed_robust_kernel(weights_ref, masks_ref, x_ref, *rest,
     size, so the O(n^2) compare-exchange unroll stays small), and a
     per-row owner count selects the retained positions.  Rows nobody
     owns retain ``prev``.
+
+    ``has_scales`` fuses int8 dequantization on the load exactly as in
+    :func:`_packed_kernel` -- *before* any clip or order statistic, so
+    quantized uploads cannot widen the robustness bounds.
     """
+    rest = list(rest)
+    scales_ref = rest.pop(0) if has_scales else None
     if has_prev:
         prev_ref, o_ref = rest
     else:
@@ -182,6 +209,8 @@ def _packed_robust_kernel(weights_ref, masks_ref, x_ref, *rest,
             m = masks_ref[nix][:, None]              # (br, 1)
             w = weights_ref[nix]
             xn = x_ref[nix].astype(jnp.float32)
+            if has_scales:
+                xn = scales_ref[nix][:, None] * xn   # fused dequant
             rn = jnp.sqrt(jnp.sum(xn * xn, axis=1, keepdims=True))
             scale = jnp.minimum(1.0, clip_norm / jnp.maximum(rn, 1e-12))
             num = num + (w * m) * (scale * xn)
@@ -193,8 +222,10 @@ def _packed_robust_kernel(weights_ref, masks_ref, x_ref, *rest,
     cnt = jnp.zeros((br, 1), jnp.int32)
     for nix in range(n_clients):
         m = masks_ref[nix][:, None]                  # (br, 1)
-        vals.append(jnp.where(m > 0, x_ref[nix].astype(jnp.float32),
-                              _SENTINEL))
+        xn = x_ref[nix].astype(jnp.float32)
+        if has_scales:
+            xn = scales_ref[nix][:, None] * xn       # fused dequant
+        vals.append(jnp.where(m > 0, xn, _SENTINEL))
         cnt = cnt + (m > 0).astype(jnp.int32)
     for rnd in range(n_clients):                     # odd-even sort
         for i in range(rnd % 2, n_clients - 1, 2):
@@ -224,6 +255,7 @@ def _packed_robust_kernel(weights_ref, masks_ref, x_ref, *rest,
 
 def packed_robust_pallas(x, masks, weights, prev=None, *, mode: str,
                          clip_norm: float = 0.0, trim_frac: float = 0.0,
+                         scales=None, out_dtype=None,
                          br=DEFAULT_BR, bd=DEFAULT_BD, interpret=True):
     """x: (N, R, D); masks: (N, R) f32; weights: (N,) f32; prev: (R, D)
     or None -> (R, D).  Byzantine-robust sibling of
@@ -231,10 +263,14 @@ def packed_robust_pallas(x, masks, weights, prev=None, *, mode: str,
     per-client norm clipping (``mode="clipped"``), per-coordinate trimmed
     mean (``"trimmed"``), or coordinate-wise median (``"median"``) in
     place of the weighted mean.  Numerics match
-    ``ref.packed_robust_ref``."""
+    ``ref.packed_robust_ref``.  ``scales``/``out_dtype`` as in
+    :func:`packed_agg_pallas` (dequant applied before clip/sort)."""
     n, r, d = x.shape
     if masks.shape != (n, r):
         raise ValueError(f"packed_robust: masks {masks.shape} != ({n}, {r})")
+    if scales is not None and scales.shape != (n, r):
+        raise ValueError(f"packed_robust: scales {scales.shape} != "
+                         f"({n}, {r})")
     if prev is not None and prev.shape != (r, d):
         raise ValueError(f"packed_robust: prev {prev.shape} != ({r}, {d})")
     if mode not in ("clipped", "trimmed", "median"):
@@ -254,6 +290,9 @@ def packed_robust_pallas(x, masks, weights, prev=None, *, mode: str,
         pl.BlockSpec((n, br, bd), lambda i, j: (0, i, j)),
     ]
     args = [weights.astype(jnp.float32), masks.astype(jnp.float32), x]
+    if scales is not None:
+        in_specs.append(pl.BlockSpec((n, br), lambda i, j: (0, i)))
+        args.append(scales.astype(jnp.float32))
     if prev is not None:
         in_specs.append(pl.BlockSpec((br, bd), lambda i, j: (i, j)))
         args.append(prev)
@@ -261,11 +300,12 @@ def packed_robust_pallas(x, masks, weights, prev=None, *, mode: str,
         functools.partial(_packed_robust_kernel, n_clients=n, mode=mode,
                           clip_norm=float(clip_norm),
                           trim_frac=float(trim_frac),
-                          has_prev=prev is not None),
+                          has_prev=prev is not None,
+                          has_scales=scales is not None),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((br, bd), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((r, d), out_dtype or x.dtype),
         interpret=interpret,
     )(*args)
 

@@ -83,7 +83,7 @@ def rbla_agg(x, ranks, weights, *, method: str = "rbla", interpret=None):
 
 def packed_agg_inline(x, masks, weights, prev=None, *,
                       norm_by: str = "mask", norm_restore: bool = False,
-                      interpret=None):
+                      scales=None, out_dtype=None, interpret=None):
     """Un-jitted fused-bucket aggregation (the compiled plan's hot op).
 
     ``x``: (N, R, *dims) packed rows spanning many pairs; ``masks``:
@@ -92,6 +92,12 @@ def packed_agg_inline(x, masks, weights, prev=None, *,
     only).  ``norm_restore`` fuses rbla_norm's per-row norm restoration
     (zero padding is norm-neutral).  Trailing dims flatten into D;
     padding is stripped.
+
+    ``scales``: optional (N, R) f32 per-row dequantization scales fused
+    on the load (int8 transport); padded rows get scale 1 (they have no
+    owner either way).  ``out_dtype`` sets the output dtype -- required
+    when ``x`` is a wire dtype; ``prev`` is staged in the *output* dtype,
+    never the wire dtype.
     """
     interpret = auto_interpret(interpret)
     n, r = x.shape[:2]
@@ -103,35 +109,43 @@ def packed_agg_inline(x, masks, weights, prev=None, *,
     rp, dp = _pad_to(max(r, 1), 8), _pad_to(max(d, 1), 128)
     x2 = jnp.pad(x2, ((0, 0), (0, rp - r), (0, dp - d)))
     m2 = jnp.pad(jnp.asarray(masks, jnp.float32), ((0, 0), (0, rp - r)))
+    s2 = None
+    if scales is not None:
+        s2 = jnp.pad(jnp.asarray(scales, jnp.float32),
+                     ((0, 0), (0, rp - r)), constant_values=1.0)
     pv = None
     if prev is not None:
-        pv = jnp.pad(prev.reshape(r, d).astype(x2.dtype),
+        pv = jnp.pad(prev.reshape(r, d).astype(out_dtype or x2.dtype),
                      ((0, rp - r), (0, dp - d)))
     out = packed_agg_pallas(x2, m2, jnp.asarray(weights, jnp.float32), pv,
                             norm_by=norm_by, norm_restore=norm_restore,
+                            scales=s2, out_dtype=out_dtype,
                             interpret=interpret)
     return out[:r, :d].reshape((r,) + lead)
 
 
 @functools.partial(jax.jit, static_argnames=("norm_by", "norm_restore",
-                                             "interpret"))
-def _packed_agg_jit(x, masks, weights, prev, *, norm_by, norm_restore,
-                    interpret):
+                                             "out_dtype", "interpret"))
+def _packed_agg_jit(x, masks, weights, prev, scales, *, norm_by,
+                    norm_restore, out_dtype, interpret):
     return packed_agg_inline(x, masks, weights, prev, norm_by=norm_by,
-                             norm_restore=norm_restore, interpret=interpret)
+                             norm_restore=norm_restore, scales=scales,
+                             out_dtype=out_dtype, interpret=interpret)
 
 
 def packed_agg(x, masks, weights, prev=None, *, norm_by: str = "mask",
-               norm_restore: bool = False, interpret=None):
+               norm_restore: bool = False, scales=None, out_dtype=None,
+               interpret=None):
     """Jitted :func:`packed_agg_inline` (standalone use and tests)."""
     _count_dispatch()
-    return _packed_agg_jit(x, masks, weights, prev, norm_by=norm_by,
-                           norm_restore=norm_restore, interpret=interpret)
+    return _packed_agg_jit(x, masks, weights, prev, scales, norm_by=norm_by,
+                           norm_restore=norm_restore, out_dtype=out_dtype,
+                           interpret=interpret)
 
 
 def packed_robust_inline(x, masks, weights, prev=None, *, mode: str,
                          clip_norm: float = 0.0, trim_frac: float = 0.0,
-                         interpret=None):
+                         scales=None, out_dtype=None, interpret=None):
     """Un-jitted Byzantine-robust bucket aggregation (the compiled plan's
     hot op for the ``robustness != "none"`` strategies).
 
@@ -140,7 +154,8 @@ def packed_robust_inline(x, masks, weights, prev=None, *, mode: str,
     median (see ``kernel.packed_robust_pallas``).  Padding is harmless:
     padded rows have no owner (they retain the zero-padded prev), padded
     columns are zero for every owner and cannot shift a row norm or an
-    order statistic off the stripped region.
+    order statistic off the stripped region.  ``scales``/``out_dtype``
+    as in :func:`packed_agg_inline` (dequant applied before clip/sort).
     """
     interpret = auto_interpret(interpret)
     n, r = x.shape[:2]
@@ -152,34 +167,41 @@ def packed_robust_inline(x, masks, weights, prev=None, *, mode: str,
     rp, dp = _pad_to(max(r, 1), 8), _pad_to(max(d, 1), 128)
     x2 = jnp.pad(x2, ((0, 0), (0, rp - r), (0, dp - d)))
     m2 = jnp.pad(jnp.asarray(masks, jnp.float32), ((0, 0), (0, rp - r)))
+    s2 = None
+    if scales is not None:
+        s2 = jnp.pad(jnp.asarray(scales, jnp.float32),
+                     ((0, 0), (0, rp - r)), constant_values=1.0)
     pv = None
     if prev is not None:
-        pv = jnp.pad(prev.reshape(r, d).astype(x2.dtype),
+        pv = jnp.pad(prev.reshape(r, d).astype(out_dtype or x2.dtype),
                      ((0, rp - r), (0, dp - d)))
     out = packed_robust_pallas(x2, m2, jnp.asarray(weights, jnp.float32),
                                pv, mode=mode, clip_norm=clip_norm,
-                               trim_frac=trim_frac, interpret=interpret)
+                               trim_frac=trim_frac, scales=s2,
+                               out_dtype=out_dtype, interpret=interpret)
     return out[:r, :d].reshape((r,) + lead)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "clip_norm",
-                                             "trim_frac", "interpret"))
-def _packed_robust_jit(x, masks, weights, prev, *, mode, clip_norm,
-                       trim_frac, interpret):
+                                             "trim_frac", "out_dtype",
+                                             "interpret"))
+def _packed_robust_jit(x, masks, weights, prev, scales, *, mode, clip_norm,
+                       trim_frac, out_dtype, interpret):
     return packed_robust_inline(x, masks, weights, prev, mode=mode,
                                 clip_norm=clip_norm, trim_frac=trim_frac,
+                                scales=scales, out_dtype=out_dtype,
                                 interpret=interpret)
 
 
 def packed_robust(x, masks, weights, prev=None, *, mode: str,
                   clip_norm: float = 0.0, trim_frac: float = 0.0,
-                  interpret=None):
+                  scales=None, out_dtype=None, interpret=None):
     """Jitted :func:`packed_robust_inline` (standalone use and tests)."""
     _count_dispatch()
-    return _packed_robust_jit(x, masks, weights, prev, mode=mode,
+    return _packed_robust_jit(x, masks, weights, prev, scales, mode=mode,
                               clip_norm=float(clip_norm),
                               trim_frac=float(trim_frac),
-                              interpret=interpret)
+                              out_dtype=out_dtype, interpret=interpret)
 
 
 def packed_stack_inline(x, scales, prev=None, *, copies_x=(),
@@ -268,10 +290,21 @@ def flora_stack(x, scales, *, segs: tuple[int, ...], out_rows: int,
                             interpret=interpret)
 
 
-def axpy_fold_inline(y, x, alpha, *, interpret=None):
+def axpy_fold_inline(y, x, alpha, *, interpret=None, sr_key=None):
     """Un-jitted :func:`axpy_fold` body (for use inside compiled plans --
-    the packed per-update fold runs one of these per bucket)."""
+    the packed per-update fold runs one of these per bucket).
+
+    ``sr_key``: optional PRNG key for *quantized accumulators* -- the
+    fold runs on an fp32 view of ``y`` and the result is stochastically
+    rounded back to ``y``'s storage dtype (bf16), keeping a long stream
+    of low-precision folds unbiased (see
+    :func:`repro.core.codec.stochastic_round`).  With ``sr_key=None``
+    the fold is bit-identical to before."""
     interpret = auto_interpret(interpret)
+    out_dt = y.dtype
+    if sr_key is not None:
+        y = y.astype(jnp.float32)
+        x = x.astype(jnp.float32)
     r = y.shape[0]
     lead = y.shape[1:]
     d = 1
@@ -285,15 +318,22 @@ def axpy_fold_inline(y, x, alpha, *, interpret=None):
     x2 = jnp.pad(x2, ((0, rp - r), (0, dp - d)))
     a = jnp.pad(a, (0, rp - r))
     out = axpy_fold_pallas(y2, x2, a, interpret=interpret)
-    return out[:r, :d].reshape((r,) + lead)
+    out = out[:r, :d].reshape((r,) + lead)
+    if sr_key is not None and out.dtype != out_dt:
+        if out_dt == jnp.bfloat16:
+            from repro.core.codec import stochastic_round
+            out = stochastic_round(out, sr_key, out_dt)
+        else:
+            out = out.astype(out_dt)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def _axpy_fold_jit(y, x, alpha, *, interpret):
-    return axpy_fold_inline(y, x, alpha, interpret=interpret)
+def _axpy_fold_jit(y, x, alpha, sr_key, *, interpret):
+    return axpy_fold_inline(y, x, alpha, interpret=interpret, sr_key=sr_key)
 
 
-def axpy_fold(y, x, alpha, *, interpret=None):
+def axpy_fold(y, x, alpha, *, interpret=None, sr_key=None):
     """Fold one update into the live state: ``y + alpha * (x - y)``.
 
     y, x: (R, *dims) with the rank-row axis leading; ``alpha`` is a scalar
@@ -302,10 +342,12 @@ def axpy_fold(y, x, alpha, *, interpret=None):
     client owns).  Trailing dims are flattened into D; sublane/lane
     padding is stripped from the result.  This is the async aggregation
     service's per-update hot path: cost is O(R*D) regardless of how many
-    clients ever reported.
+    clients ever reported.  ``sr_key`` enables stochastic rounding back
+    to a bf16 ``y`` (quantized accumulators; see
+    :func:`axpy_fold_inline`).
     """
     _count_dispatch()
-    return _axpy_fold_jit(y, x, alpha, interpret=interpret)
+    return _axpy_fold_jit(y, x, alpha, sr_key, interpret=interpret)
 
 
 __all__ = ["rbla_agg", "rbla_agg_ref", "flora_stack", "flora_stack_ref",

@@ -30,15 +30,25 @@ def flora_stack_ref(x, scales, segs, out_rows: int):
 
 
 def packed_agg_ref(x, masks, weights, prev=None, norm_by: str = "mask",
-                   norm_restore: bool = False):
+                   norm_restore: bool = False, scales=None, out_dtype=None):
     """Oracle for the fused-bucket kernel: x (N, R, D), masks (N, R),
     weights (N,), prev (R, D) or None -> (R, D).  Matches the packed-row
     form of rbla_leaf (``norm_by="mask"``: per-row owner-mass mean with
     prev retention) / zeropad_leaf (``norm_by="weight"``: total-mass
     dilution).  ``norm_restore`` adds rbla_norm's per-row norm
     restoration (rescale each output row to the owners' weighted-mean
-    row norm)."""
+    row norm).
+
+    ``scales`` (N, R) fuses int8 dequantization as an epilogue on the
+    load: each client row is multiplied by its per-row scale before any
+    reduction, so quantized uploads never materialize an fp32 staging
+    buffer.  The mask-mass denominator stays scale-free (scales rescale
+    values, not ownership).  ``out_dtype`` overrides the output dtype --
+    required when ``x`` is a wire dtype (int8/bf16) but the aggregate is
+    fp32."""
     xf = x.astype(jnp.float32)
+    if scales is not None:
+        xf = scales.astype(jnp.float32)[:, :, None] * xf
     m = masks.astype(jnp.float32)
     w = weights.astype(jnp.float32)
     num = jnp.einsum("n,nr,nrd->rd", w, m, xf)
@@ -58,7 +68,7 @@ def packed_agg_ref(x, masks, weights, prev=None, norm_by: str = "mask",
         agg = jnp.sqrt(jnp.sum(out ** 2, axis=1))
         out = out * jnp.where(agg > 1e-12, target / (agg + 1e-12),
                               1.0)[:, None]
-    return out.astype(x.dtype)
+    return out.astype(out_dtype or x.dtype)
 
 
 def packed_stack_ref(x, scales, prev=None, *, copies_x=(), copies_prev=(),
@@ -91,7 +101,8 @@ _SENTINEL = 1e30
 
 
 def packed_robust_ref(x, masks, weights, prev=None, *, mode: str,
-                      clip_norm: float = 0.0, trim_frac: float = 0.0):
+                      clip_norm: float = 0.0, trim_frac: float = 0.0,
+                      scales=None, out_dtype=None):
     """Byzantine-robust oracle on the packed bucket layout: x (N, R, D),
     masks (N, R), weights (N,), prev (R, D) or None -> (R, D).
 
@@ -107,8 +118,15 @@ def packed_robust_ref(x, masks, weights, prev=None, *, mode: str,
     slots sort to the top via a large sentinel, so owners occupy sorted
     positions ``[0, c)``; trimming drops ``k = min(floor(trim_frac*c),
     (c-1)//2)`` from each end, the median averages sorted positions
-    ``(c-1)//2`` and ``c//2``.  Rows with no owner retain ``prev``."""
+    ``(c-1)//2`` and ``c//2``.  Rows with no owner retain ``prev``.
+
+    ``scales`` (N, R) dequantizes int8 uploads *before* any clip or
+    order statistic -- robustness bounds apply to decoded values, so
+    quantization cannot widen them.  ``out_dtype`` as in
+    :func:`packed_agg_ref`."""
     xf = x.astype(jnp.float32)
+    if scales is not None:
+        xf = scales.astype(jnp.float32)[:, :, None] * xf
     m = masks.astype(jnp.float32)
     w = weights.astype(jnp.float32)
     fb = (jnp.zeros(x.shape[1:], jnp.float32) if prev is None
@@ -119,7 +137,7 @@ def packed_robust_ref(x, masks, weights, prev=None, *, mode: str,
         num = jnp.einsum("n,nr,nrd->rd", w, m, scale[:, :, None] * xf)
         den = jnp.einsum("n,nr->r", w, m)[:, None]
         out = jnp.where(den > 0, num / (den + 1e-12), fb)
-        return out.astype(x.dtype)
+        return out.astype(out_dtype or x.dtype)
     if mode not in ("trimmed", "median"):
         raise ValueError(f"unknown robust mode {mode!r}; options: "
                          f"['clipped', 'median', 'trimmed']")
@@ -142,11 +160,12 @@ def packed_robust_ref(x, masks, weights, prev=None, *, mode: str,
         cnt = jnp.sum(inc, axis=0)[:, None]                  # = c - 2k
         out = jnp.einsum("nr,nrd->rd", inc, s) / jnp.maximum(cnt, 1.0)
     out = jnp.where((c > 0)[:, None], out, fb)
-    return out.astype(x.dtype)
+    return out.astype(out_dtype or x.dtype)
 
 
 def packed_robust_xla(x, masks, weights, prev=None, *, mode: str,
-                      clip_norm: float = 0.0, trim_frac: float = 0.0):
+                      clip_norm: float = 0.0, trim_frac: float = 0.0,
+                      scales=None, out_dtype=None):
     """Fused XLA lowering of :func:`packed_robust_ref` for the order
     statistics: identical contract and semantics, but the per-coordinate
     sort runs a static odd-even transposition network (the same network
@@ -159,12 +178,15 @@ def packed_robust_xla(x, masks, weights, prev=None, *, mode: str,
     independent oracle."""
     if mode == "clipped":            # einsum path is already one fusion
         return packed_robust_ref(x, masks, weights, prev, mode=mode,
-                                 clip_norm=clip_norm, trim_frac=trim_frac)
+                                 clip_norm=clip_norm, trim_frac=trim_frac,
+                                 scales=scales, out_dtype=out_dtype)
     if mode not in ("trimmed", "median"):
         raise ValueError(f"unknown robust mode {mode!r}; options: "
                          f"['clipped', 'median', 'trimmed']")
     n = x.shape[0]
     xf = x.astype(jnp.float32)
+    if scales is not None:
+        xf = scales.astype(jnp.float32)[:, :, None] * xf
     owned = masks.astype(jnp.float32) > 0                    # (N, R)
     fb = (jnp.zeros(x.shape[1:], jnp.float32) if prev is None
           else prev.astype(jnp.float32))
@@ -190,7 +212,7 @@ def packed_robust_xla(x, masks, weights, prev=None, *, mode: str,
         out = sum(((j >= k) & (j < c - k)).astype(jnp.float32) * vals[j]
                   for j in range(n)) / cnt
     out = jnp.where(c > 0, out, fb)
-    return out.astype(x.dtype)
+    return out.astype(out_dtype or x.dtype)
 
 
 def rbla_agg_ref(x, ranks, weights, method: str = "rbla"):

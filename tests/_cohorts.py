@@ -38,6 +38,26 @@ def hetero_cohort(n=5, seed=0, r_lo=1, r_hi=R_MAX, with_bases=False):
     return adapters, jnp.asarray(ranks, jnp.int32), weights
 
 
+def mixed_codec_cohort(n=5, seed=0, codecs=None, **kw):
+    """A hetero cohort with per-client upload codecs applied.
+
+    ``codecs`` is a per-client name sequence (cycled over
+    ``("int8", "bf16", "none")`` by default).  Returns ``(encoded,
+    decoded, ranks, weights, codecs)`` -- ``decoded`` is the fp32 oracle
+    cohort (``decode_adapters`` of each encoded client, so int8 oracle
+    comparisons see the same quantization error).
+    """
+    from repro.core import codec
+    adapters, ranks, weights = hetero_cohort(n=n, seed=seed, **kw)
+    if codecs is None:
+        codecs = [("int8", "bf16", "none")[i % 3] for i in range(n)]
+    codecs = tuple(codecs)
+    encoded = [codec.encode_adapters(a, c)
+               for a, c in zip(adapters, codecs)]
+    decoded = [codec.decode_adapters(a) for a in encoded]
+    return encoded, decoded, ranks, weights, codecs
+
+
 def assert_trees_close(a, b, rtol=1e-4, atol=1e-5, msg=""):
     la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
     assert len(la) == len(lb), msg

@@ -355,6 +355,155 @@ def test_zero_mass_flush_is_a_noop():
     assert np.isfinite(np.asarray(agg.state.adapters["fc1"]["A"])).all()
 
 
+# --------------------------------------------------- quantized transport ----
+def _encoded_update(codec_name, seed=43):
+    from repro.core import codec
+    return codec.encode_update(_one_update(seed=seed), codec_name)
+
+
+@pytest.mark.parametrize("poison", [float("nan"), 0.0, -1.0])
+def test_submit_rejects_bad_quantization_scales(poison):
+    """Scale sanity sits next to the NaN/inf gate: non-finite or
+    non-positive scales name the scale (not the generic tensor message)
+    and leave every service counter untouched."""
+    s = get_strategy("rbla")
+    agg = AsyncAggregator(s, make_state(s))
+    upd = _encoded_update("int8")
+    bad = {k: dict(v) for k, v in upd.adapters.items()}
+    bad["fc1"]["A_scale"] = bad["fc1"]["A_scale"].at[0].set(poison)
+    with pytest.raises(ValueError, match="scale"):
+        agg.submit(dataclasses.replace(upd, adapters=bad))
+    assert agg.n_received == 0 and len(agg.buffer) == 0
+    assert agg.wire_bytes_received == 0 and agg.version == 0
+
+
+def test_submit_rejects_overflowing_decoded_norm():
+    s = get_strategy("rbla")
+    agg = AsyncAggregator(s, make_state(s))
+    upd = _encoded_update("int8")
+    bad = {k: dict(v) for k, v in upd.adapters.items()}
+    bad["fc2"]["B_scale"] = bad["fc2"]["B_scale"].at[0].set(3.0e36)
+    with pytest.raises(ValueError, match="overflow"):
+        agg.submit(dataclasses.replace(upd, adapters=bad))
+    assert agg.n_received == 0 and len(agg.buffer) == 0
+
+
+def test_codec_negotiation_rejects_unlisted_wire_formats():
+    s = get_strategy("rbla")
+    agg = AsyncAggregator(s, make_state(s), codecs="none")
+    with pytest.raises(ValueError, match="codec"):
+        agg.submit(_encoded_update("int8"))
+    with pytest.raises(ValueError, match="codec"):
+        agg.submit(_encoded_update("bf16"))
+    assert agg.n_received == 0 and len(agg.buffer) == 0
+    agg.submit(_encoded_update("none"))             # negotiated: accepted
+    assert agg.n_received == 1
+    with pytest.raises(ValueError, match="codec"):
+        AsyncAggregator(s, make_state(s), codecs=("none", "fp4"))
+    with pytest.raises(ValueError, match="accum_dtype"):
+        AsyncAggregator(s, make_state(s), accum_dtype="float16")
+
+
+@pytest.mark.parametrize("wire", ["int8", "bf16"])
+@pytest.mark.parametrize("buffer_size", [1, 5])
+def test_quantized_uploads_track_plain_folds(wire, buffer_size):
+    """The full service path (incremental fold and buffered mini-cohort)
+    under quantized uploads stays within the codec's tolerance of the
+    fp32 run, and wire accounting reflects the compression."""
+    adapters, ranks, w, bases = hetero_cohort(5, seed=3, with_bases=True)
+    updates = [ClientUpdate(adapters=adapters[i], base_trainable=bases[i],
+                            n_examples=float(w[i]), rank=int(ranks[i]))
+               for i in range(len(ranks))]
+    from repro.core import codec
+    s = get_strategy("rbla")
+    plain = AsyncAggregator(s, make_state(s), buffer_size=buffer_size)
+    quant = AsyncAggregator(get_strategy("rbla"), make_state(s),
+                            buffer_size=buffer_size)
+    for u in updates:
+        plain.submit(u)
+        quant.submit(codec.encode_update(u, wire))
+    tol = 2e-2 if wire == "int8" else 8e-3
+    assert_trees_close(plain.state.adapters, quant.state.adapters,
+                       rtol=0.1, atol=tol, msg=f"{wire}/K={buffer_size}")
+    assert quant.wire_bytes_received < plain.wire_bytes_received
+    ratio = plain.wire_bytes_received / quant.wire_bytes_received
+    assert ratio > (2.5 if wire == "int8" else 1.5)
+
+
+def test_buffer_wire_byte_accounting():
+    from repro.core import codec
+    from repro.fl.comm import tree_bytes
+    s = get_strategy("rbla")
+    agg = AsyncAggregator(s, make_state(s), buffer_size=3)
+    upds = [_encoded_update("int8"), _encoded_update("none", seed=44)]
+    for u in upds:
+        agg.submit(u)
+    expect = sum(tree_bytes(u.adapters) + tree_bytes(u.base_trainable)
+                 for u in upds)
+    assert agg.buffer.total_wire_bytes() == expect
+    assert agg.wire_bytes_received == expect
+    agg.submit(_encoded_update("bf16", seed=45))    # 3rd arrival flushes
+    assert len(agg.buffer) == 0 and agg.buffer.total_wire_bytes() == 0
+    assert agg.wire_bytes_received > expect         # lifetime counter
+
+
+# ----------------------------------------------------- bf16 accumulators ----
+def _fold_many(accum, seed, n_folds=100, beta=0.0):
+    adapters, ranks, w, bases = hetero_cohort(10, seed=5, with_bases=True)
+    s = get_strategy("rbla")
+    agg = AsyncAggregator(s, make_state(s), accum_dtype=accum, seed=seed,
+                          server_momentum=beta)
+    for i in range(n_folds):
+        j = i % len(ranks)
+        agg.submit(ClientUpdate(adapters=adapters[j],
+                                base_trainable=bases[j],
+                                n_examples=float(w[j]), rank=int(ranks[j])))
+    return agg
+
+
+def test_bf16_accumulator_deterministic_under_fixed_seed():
+    a = _fold_many("bfloat16", seed=7, n_folds=20)
+    b = _fold_many("bfloat16", seed=7, n_folds=20)
+    for x, y in zip(jax.tree.leaves(a.state.adapters),
+                    jax.tree.leaves(b.state.adapters)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+    assert jnp.asarray(a.state.adapters["fc1"]["A"]).dtype == jnp.bfloat16
+    c = _fold_many("bfloat16", seed=8, n_folds=20)
+    diff = max(float(jnp.max(jnp.abs(
+        jnp.asarray(x, jnp.float32) - jnp.asarray(y, jnp.float32))))
+        for x, y in zip(jax.tree.leaves(a.state.adapters),
+                        jax.tree.leaves(c.state.adapters)))
+    assert diff > 0.0        # the noise really is seeded, not constant
+
+
+@pytest.mark.parametrize("beta", [0.0, 0.9])
+def test_bf16_accumulator_100_fold_drift_regression(beta):
+    """100 folds (with and without server momentum) in bf16 storage with
+    stochastic rounding must track the fp32 run: SR errors are unbiased,
+    so drift grows like a sqrt(n)-step random walk of half-ulp steps,
+    nowhere near the linear pile-up of round-to-nearest."""
+    fp32 = _fold_many(None, seed=0, n_folds=100, beta=beta)
+    bf16 = _fold_many("bfloat16", seed=0, n_folds=100, beta=beta)
+    num = den = 0.0
+    for x, y in zip(jax.tree.leaves(fp32.state.adapters),
+                    jax.tree.leaves(bf16.state.adapters)):
+        if not jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+            continue
+        d = jnp.asarray(x, jnp.float32) - jnp.asarray(y, jnp.float32)
+        num += float(jnp.sum(d * d))
+        den += float(jnp.sum(jnp.asarray(x, jnp.float32) ** 2))
+    rel = (num / max(den, 1e-30)) ** 0.5
+    # ~sqrt(100) * 2^-9 ~ 2% if every fold moved every value a half-ulp;
+    # well under 5%, vs ~100 * 2^-9 ~ 20% for a biased rounder
+    assert rel < 0.05, f"beta={beta}: bf16 accumulator drifted {rel:.3f}"
+    assert fp32.n_folded == bf16.n_folded == 100
+    # masses are denominators and must never be quantized
+    assert bf16._fold_state.row_mass is None or all(
+        jnp.asarray(v).dtype == jnp.float32
+        for v in jax.tree.leaves(bf16._fold_state.row_mass))
+
+
 # ------------------------------------------------------- server momentum ----
 def test_server_momentum_zero_is_exact_noop():
     s = get_strategy("rbla")

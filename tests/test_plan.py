@@ -642,3 +642,68 @@ def test_flora_streaming_fold_cap_crossing_reprojects():
     assert np.isfinite(np.asarray(st.adapters["fc1"]["A"])).all()
     for leaf in jax.tree.leaves(st.adapters):
         assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+# ---------------------------------------------------- codec-aware caching --
+def test_codec_mix_in_executor_cache_key():
+    """Same codec mix across rank multisets shares one jitted executor
+    (masks, ranks, payloads, and scales are all runtime data); changing
+    the mix is a different wire layout and must build a new one."""
+    from repro.core import codec
+    s = fresh("rbla")
+    for seed, (lo, hi) in enumerate([(1, 3), (4, R_MAX)]):
+        a, r, w = hetero_cohort(4, seed=seed, r_lo=lo, r_hi=hi)
+        enc = [codec.encode_adapters(x, "int8") for x in a]
+        s.aggregate_adapters(enc, w, r_max=R_MAX, client_ranks=r,
+                             backend="ref")
+    assert s.plan_stats["misses"] == 2          # two plans...
+    assert len(s.__dict__["_plan_exec_cache"]) == 1   # ...one executor
+    a, r, w = hetero_cohort(4, seed=9)
+    mix = ("int8", "bf16", "int8", "bf16")
+    enc = [codec.encode_adapters(x, c) for x, c in zip(a, mix)]
+    s.aggregate_adapters(enc, w, r_max=R_MAX, client_ranks=r,
+                         backend="ref")
+    assert s.plan_stats["misses"] == 3
+    assert len(s.__dict__["_plan_exec_cache"]) == 2
+
+
+def test_codec_change_replans_while_rank_repeat_hits():
+    """The codec mix is part of the plan key: a repeat cohort under the
+    same mix hits, the same cohort under a different mix re-plans, and
+    the LRU keeps both warm."""
+    from repro.core import codec
+    s = fresh("rbla")
+    a, r, w = hetero_cohort(4, seed=2)
+    int8 = [codec.encode_adapters(x, "int8") for x in a]
+    for _ in range(2):
+        s.aggregate_adapters(int8, w, r_max=R_MAX, client_ranks=r,
+                             backend="ref")
+    assert s.plan_stats == {
+        "hits": 1, "misses": 1, **{k: v for k, v in s.plan_stats.items()
+                                   if k not in ("hits", "misses")}}
+    mixed = [codec.encode_adapters(x, "bf16" if i == 0 else "int8")
+             for i, x in enumerate(a)]
+    s.aggregate_adapters(mixed, w, r_max=R_MAX, client_ranks=r,
+                         backend="ref")
+    assert s.plan_stats["misses"] == 2
+    s.aggregate_adapters(int8, w, r_max=R_MAX, client_ranks=r,
+                         backend="ref")
+    assert s.plan_stats["hits"] == 2 and s.plan_stats["misses"] == 2
+
+
+def test_encoded_plan_matches_decoded_oracle_with_prev():
+    """Fused-dequant plan vs eager decode, with prev-retention in play
+    (unowned rows fall back to the dequantized-path prev identically)."""
+    from repro.core import codec
+    from _cohorts import mixed_codec_cohort
+    enc, dec, ranks, w, _ = mixed_codec_cohort(n=5, seed=11, r_lo=1,
+                                               r_hi=3)
+    prev = init_adapters(jax.random.PRNGKey(77), SPECS, R_MAX, R_MAX)
+    s_enc, s_dec = fresh("rbla"), fresh("rbla")
+    got = s_enc.aggregate_adapters(enc, w, r_max=R_MAX, client_ranks=ranks,
+                                   prev_global=prev, backend="ref")
+    want = s_dec.aggregate_adapters(dec, w, r_max=R_MAX,
+                                    client_ranks=ranks, prev_global=prev,
+                                    backend="ref")
+    assert_trees_close(want, got, 1e-5, 1e-6)
+    assert s_enc.plan_stats["misses"] == 1      # planned, not eager
