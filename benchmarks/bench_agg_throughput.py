@@ -31,7 +31,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -39,8 +38,8 @@ import numpy as np
 
 from repro.core import get_strategy, list_strategies
 from repro.core.plan import dispatch_counter
-from repro.kernels.runtime import bench_env
 from repro.lora import init_adapters, set_ranks
+from repro.obs import bench_payload, time_fn
 
 BENCH_METHODS = ("rbla", "zeropad", "fedavg", "rbla_ranked", "flora",
                  "svd", "rbla_clipped", "rbla_trimmed", "rbla_median")
@@ -79,19 +78,10 @@ def build_cohort(specs, n, r_max, seed=0):
     return cohort, jnp.asarray(ranks, jnp.int32), w
 
 
-def bench(fn, iters=3):
-    # min over per-call timings (timeit-style): on a 1-vCPU CI box any
-    # co-scheduled process steals the whole core, so the mean is noise
-    # and the minimum is the real cost
-    out = fn()                                  # compile / first trace
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(max(iters, 1)):
-        t0 = time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6, out
+def bench_us(fn, iters=3):
+    # min-over-iters timing lives in repro.obs.timing now; this shim
+    # just converts to the microseconds the report rows use
+    return time_fn(fn, iters=iters, reduce="min") * 1e6
 
 
 def count_dispatches(fn):
@@ -139,8 +129,8 @@ def run_case(specs, n, r_max, iters, tol):
             legacy_disp, legacy_out = count_dispatches(legacy)
             plan_disp, plan_out = count_dispatches(plan)
             diff = max_abs_diff(legacy_out, plan_out)
-            legacy_us, _ = bench(legacy, iters)
-            plan_us, _ = bench(plan, iters)
+            legacy_us = bench_us(legacy, iters)
+            plan_us = bench_us(plan, iters)
             rounds = list(s.__dict__.get("_plan_cache", {}).values())
             rd = next(r for r in rounds if r.spec.kind == backend)
             stats = dict(s.__dict__.get("plan_stats",
@@ -214,8 +204,8 @@ def run_svd_factored_case(iters, tol):
         out_d["proj"]["A"], np.float32)
     scale = max(float(np.abs(delta_d).max()), 1e-12)
     rel_diff = float(np.abs(delta_f - delta_d).max()) / scale
-    factored_us, _ = bench(lambda: run(factored), iters)
-    dense_us, _ = bench(lambda: run(dense), iters)
+    factored_us = bench_us(lambda: run(factored), iters)
+    dense_us = bench_us(lambda: run(dense), iters)
     speedup = dense_us / max(factored_us, 1e-9)
     m, n = next(iter(SVD_GATE_SPECS.values()))
     k = SVD_GATE_CLIENTS * SVD_GATE_RANK
@@ -277,19 +267,12 @@ def main(argv=None):
     print(f"# summary: {json.dumps(summary)}")
 
     if args.json:
-        payload = {
-            "bench": "agg_throughput",
-            "backend": jax.default_backend(),
-            # environment header: makes this file comparable with
-            # BENCH_serve.json runs from other machines
-            "env": bench_env(),
-            "smoke": bool(args.smoke),
-            "case": {"n_clients": n, "r_max": r_max,
-                     "n_pairs": len(specs)},
-            "results": results,
-            "svd_factored": svd_row,
-            "summary": summary,
-        }
+        # shared payload shape (env header + obs snapshot) keeps this
+        # file comparable with BENCH_serve.json runs from other machines
+        payload = bench_payload(
+            "agg_throughput", smoke=bool(args.smoke),
+            case={"n_clients": n, "r_max": r_max, "n_pairs": len(specs)},
+            results=results, svd_factored=svd_row, summary=summary)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.json}")

@@ -25,9 +25,13 @@ Three questions, all on CPU-runnable synthetic cohorts:
 wire-cost trajectory is tracked across PRs; ``--smoke`` runs a tiny case
 and exits non-zero if (a) the quantized aggregate drifts past its
 codec's tolerance from the fp32 baseline (``none`` must be bit-exact),
-(b) int8 cuts upload bytes by less than 3.5x at 128 clients, or (c)
+(b) int8 cuts upload bytes by less than 3.5x at 128 clients, (c)
 alternating between two warm codec mixes adds plan misses or executor
-retraces -- the codec is only free if the plan cache survives it.
+retraces -- the codec is only free if the plan cache survives it -- or
+(d) running the same warm fold loop with metrics enabled adds jitted
+executors or more than ``OBS_OVERHEAD_FRAC`` wall overhead vs metrics
+disabled (the ``repro.obs`` overhead guarantee; see
+``docs/observability.md``).
 
 Run: ``PYTHONPATH=src python benchmarks/bench_async_agg.py``
 """
@@ -47,8 +51,8 @@ from repro.core.strategy import ClientUpdate, ServerState, get_strategy
 from repro.fl import AsyncAggregator
 from repro.fl.comm import tree_bytes
 from repro.fl.selection import ClientLatencyModel
-from repro.kernels.runtime import bench_env
 from repro.lora import init_adapters, set_ranks
+from repro.obs import bench_payload, set_enabled, time_fn
 
 FULL_SPECS = {f"blk{i}": (1024, 1024) for i in range(4)}
 FULL_R_MAX = 64
@@ -66,6 +70,11 @@ SEED = 0
 #: before averaging; ``none`` must be bit-exact
 CODEC_TOL = {"none": 0.0, "bf16": 1e-2, "int8": 2e-2}
 WIRE_GATE_REDUCTION = 3.5
+#: metrics-enabled wall overhead bound vs disabled, plus a small absolute
+#: slack so a 1-vCPU CI box's scheduler jitter cannot flake a
+#: milliseconds-long smoke loop
+OBS_OVERHEAD_FRAC = 0.05
+OBS_OVERHEAD_ABS_S = 2e-3
 
 
 def make_cohort(n, seed, specs, r_max):
@@ -93,16 +102,6 @@ def make_state(strategy, specs, r_max):
     return ServerState(adapters=adapters, base_trainable={}, r_max=r_max)
 
 
-def timed(fn, iters=3):
-    """fn must return a pytree of arrays (we block on every leaf)."""
-    jax.block_until_ready(jax.tree.leaves(fn()))   # warm up / compile
-    t0 = time.time()
-    for _ in range(iters):
-        out = fn()
-    jax.block_until_ready(jax.tree.leaves(out))
-    return (time.time() - t0) / iters
-
-
 def bench_method(method, updates, specs, r_max):
     s = get_strategy(method)
     if s.rank_contract == "stacked":
@@ -114,8 +113,8 @@ def bench_method(method, updates, specs, r_max):
 
     # return the adapters tree (arrays), not the ServerState dataclass --
     # block_until_ready must see array leaves to measure compute
-    t_sync = timed(lambda: s.aggregate(state0, updates, weights=weights,
-                                       backend="ref").adapters)
+    t_sync = time_fn(lambda: s.aggregate(state0, updates, weights=weights,
+                                         backend="ref").adapters)
 
     def fold_all():
         agg = AsyncAggregator(s, state0, staleness="constant",
@@ -123,7 +122,7 @@ def bench_method(method, updates, specs, r_max):
         for u in updates:
             agg.submit(u)
         return agg.state.adapters
-    t_async_total = timed(fold_all)
+    t_async_total = time_fn(fold_all)
     return t_sync, t_async_total / len(updates)
 
 
@@ -225,6 +224,40 @@ def retrace_check(updates, specs, r_max):
     }
 
 
+def obs_overhead_check(updates, specs, r_max, iters=5):
+    """The observability overhead gate: the same warm fold loop with
+    metrics enabled must add zero jitted executors and no more than
+    ``OBS_OVERHEAD_FRAC`` wall time (plus ``OBS_OVERHEAD_ABS_S`` noise
+    slack) over metrics disabled.  Min-over-iters on both sides -- same
+    1-vCPU-noise reasoning as every other timing here."""
+    s = get_strategy("rbla")
+    n = len(updates)
+
+    def run():
+        agg = AsyncAggregator(s, make_state(s, specs, r_max),
+                              buffer_size=n, backend="ref")
+        for _ in range(3):              # 3 flushes: a timeable region
+            for u in updates:
+                agg.submit(u)
+        return agg.state.adapters
+
+    prev = set_enabled(False)
+    try:
+        t_off = time_fn(run, iters=iters)
+        set_enabled(True)
+        execs0 = len(s.__dict__.get("_plan_exec_cache", {}))
+        t_on = time_fn(run, iters=iters)
+        execs1 = len(s.__dict__.get("_plan_exec_cache", {}))
+    finally:
+        set_enabled(prev)
+    return {
+        "t_disabled_ms": t_off * 1e3,
+        "t_enabled_ms": t_on * 1e3,
+        "overhead_frac": t_on / max(t_off, 1e-12) - 1.0,
+        "new_executors": execs1 - execs0,
+    }
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true",
@@ -281,23 +314,25 @@ def main(argv=None):
     print(f"# codec-mix alternation: {retrace['plan_hits']} plan hits, "
           f"{retrace['new_plan_misses']} new misses, "
           f"{retrace['new_executors']} new executors")
+    obs_row = obs_overhead_check(updates, specs, r_max)
+    print(f"# obs overhead: metrics off {obs_row['t_disabled_ms']:.1f}ms, "
+          f"on {obs_row['t_enabled_ms']:.1f}ms "
+          f"({obs_row['overhead_frac'] * 100:+.1f}%), "
+          f"{obs_row['new_executors']} new executors")
 
     if args.json:
-        payload = {
-            "bench": "async_agg",
-            "backend": jax.default_backend(),
-            "env": bench_env(),
-            "smoke": bool(args.smoke),
-            "case": {"specs": {k: list(v) for k, v in specs.items()},
-                     "r_max": r_max, "n_clients": n,
-                     "n_wire_clients": N_WIRE_CLIENTS},
-            "results": {
+        payload = bench_payload(
+            "async_agg", smoke=bool(args.smoke),
+            case={"specs": {k: list(v) for k, v in specs.items()},
+                  "r_max": r_max, "n_clients": n,
+                  "n_wire_clients": N_WIRE_CLIENTS},
+            results={
                 "methods": method_rows,
                 "codecs": codec_rows,
                 "wire_reduction_int8_at_scale": reduction,
                 "retrace": retrace,
-            },
-        }
+                "obs_overhead": obs_row,
+            })
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.json}")
@@ -319,13 +354,26 @@ def main(argv=None):
                 f"codec-mix alternation re-traced: "
                 f"{retrace['new_plan_misses']} misses, "
                 f"{retrace['new_executors']} executors")
+        if obs_row["new_executors"]:
+            failures.append(
+                f"metrics-enabled fold loop added "
+                f"{obs_row['new_executors']} jitted executors")
+        allowed = (obs_row["t_disabled_ms"] * OBS_OVERHEAD_FRAC
+                   + OBS_OVERHEAD_ABS_S * 1e3)
+        if obs_row["t_enabled_ms"] - obs_row["t_disabled_ms"] > allowed:
+            failures.append(
+                f"metrics overhead {obs_row['overhead_frac'] * 100:.1f}% "
+                f"(+{obs_row['t_enabled_ms'] - obs_row['t_disabled_ms']:.2f}"
+                f"ms) past {OBS_OVERHEAD_FRAC * 100:.0f}% "
+                f"+ {OBS_OVERHEAD_ABS_S * 1e3:.0f}ms")
         if failures:
             for msg in failures:
                 print(f"# SMOKE FAIL: {msg}")
             return 1
         print("# smoke gate OK: codec parity within tolerance, int8 wire "
               f"reduction >= {WIRE_GATE_REDUCTION}x, zero retraces on "
-              "codec-mix alternation")
+              "codec-mix alternation, metrics overhead within "
+              f"{OBS_OVERHEAD_FRAC * 100:.0f}%")
     return 0
 
 

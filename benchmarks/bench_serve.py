@@ -45,8 +45,8 @@ from repro.core import ClientUpdate, ServerState
 from repro.fl import AsyncAggregator
 from repro.kernels import lora_matmul_ref
 from repro.kernels.lora_matmul.ops import trace_counts
-from repro.kernels.runtime import bench_env
 from repro.lora import init_adapters, set_ranks
+from repro.obs import bench_payload, block
 from repro.serving import AdapterStore, ServingEngine, merged_reference
 
 PATH = "proj"
@@ -174,9 +174,8 @@ def publish_loop(engine, store, glob, r_max, rounds, serve_fn):
         t0 = time.perf_counter()
         agg.submit(ClientUpdate(adapters=upd, base_trainable={},
                                 n_examples=1.0, rank=r))
-        jax.block_until_ready(
-            [b for pair in store.snapshot().buffers.values()
-             for b in pair])
+        block([b for pair in store.snapshot().buffers.values()
+               for b in pair])
         t_pub += time.perf_counter() - t0
         n_pub += 1
         serve_fn()
@@ -289,13 +288,9 @@ def main(argv=None):
     print(f"# summary: {json.dumps(summary)}")
 
     if args.json:
-        payload = {
-            "bench": "serve",
-            "env": bench_env(),
-            "smoke": bool(args.smoke),
-            "results": row,
-            "summary": summary,
-        }
+        payload = bench_payload(
+            "serve", smoke=bool(args.smoke),
+            case=row["case"], results=row, summary=summary)
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {args.json}")

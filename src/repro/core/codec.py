@@ -183,13 +183,27 @@ def decode_update(update):
 
 
 # ---------------------------------------------------------- validation ----
+class UploadValidationError(ValueError):
+    """A rejected upload, tagged with the machine-readable ``reason``
+    the ingestion metrics count it under (``fl_updates_rejected_total``;
+    see ``docs/observability.md`` for the reason catalog).  Subclasses
+    ``ValueError`` so existing ``except ValueError`` call sites and
+    ``pytest.raises(ValueError, match=...)`` tests keep working."""
+
+    def __init__(self, message: str, reason: str):
+        super().__init__(message)
+        self.reason = reason
+
+
 def validate_encoded_adapters(adapters) -> None:
     """Ingestion sanity for encoded uploads (host-side, eager).
 
-    Raises ``ValueError`` when any quantization scale is non-finite or
-    non-positive, or when an int8 payload's decoded norm would overflow
+    Raises :class:`UploadValidationError` (a ``ValueError``) when any
+    quantization scale is non-finite or non-positive (``reason
+    "bad_scale"``), or when an int8 payload's decoded norm would overflow
     fp32 (``scale * 127 * sqrt(row_width)`` past ``finfo(f32).max`` --
-    such an upload would poison ``FoldState`` masses irrecoverably)."""
+    such an upload would poison ``FoldState`` masses irrecoverably;
+    ``reason "overflow"``)."""
     for path, pair in _iter_pairs(adapters):
         name = "/".join(str(p) for p in path) or "<root>"
         for side, key in (("A", "A_scale"), ("B", "B_scale")):
@@ -197,17 +211,18 @@ def validate_encoded_adapters(adapters) -> None:
                 continue
             s = jnp.asarray(pair[key], jnp.float32)
             if not bool(jnp.all(jnp.isfinite(s) & (s > 0))):
-                raise ValueError(
+                raise UploadValidationError(
                     f"non-finite or non-positive quantization scale in "
-                    f"{name}.{key}")
+                    f"{name}.{key}", reason="bad_scale")
             width = (pair[side].shape[-1] if side == "A"
                      else pair[side].shape[-2])
             limit = float(jnp.finfo(jnp.float32).max) / (
                 _INT8_QMAX * math.sqrt(max(width, 1)))
             if bool(jnp.any(s > limit)):
-                raise ValueError(
+                raise UploadValidationError(
                     f"quantization scale overflow in {name}.{key}: decoded "
-                    f"row norm would exceed float32 range")
+                    f"row norm would exceed float32 range",
+                    reason="overflow")
 
 
 # ---------------------------------------------- stochastic accumulators ----
@@ -254,5 +269,6 @@ __all__ = [
     "CODECS", "codec_of_pair", "tree_codec", "cohort_codecs",
     "encode_pair", "decode_pair", "encode_adapters", "decode_adapters",
     "encode_update", "decode_update", "validate_encoded_adapters",
+    "UploadValidationError",
     "stochastic_round", "stochastic_round_tree",
 ]

@@ -44,6 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import get_registry as _obs_registry
+
 from .aggregation import _EPS
 from .compat import shard_map_no_check
 from .masks import pad_to_rank
@@ -134,13 +136,25 @@ class DispatchCounter:
     """Counts host->device computation dispatches issued by the tracked
     entry points: every Pallas kernel wrapper call (``repro.kernels``)
     and every :class:`CompiledRound` execution.  The aggregation
-    benchmarks read this to report dispatches per round."""
+    benchmarks read this to report dispatches per round.
+
+    The windowed ``count`` / ``reset()`` surface is the legacy public
+    API; every ``inc`` also feeds the cumulative
+    ``plan_dispatches_total`` metric (``repro.obs``), which ``reset()``
+    deliberately does *not* touch -- windows are a caller concern,
+    process totals are the registry's.
+    """
 
     def __init__(self):
         self.count = 0
+        self._total = _obs_registry().counter(
+            "plan_dispatches_total",
+            "tracked host->device dispatches (kernel wrappers + "
+            "compiled-plan rounds), cumulative")
 
     def inc(self, n: int = 1) -> None:
         self.count += n
+        self._total.inc(n)
 
     def reset(self) -> int:
         prev, self.count = self.count, 0
@@ -148,6 +162,14 @@ class DispatchCounter:
 
 
 dispatch_counter = DispatchCounter()
+
+_PACK_RUNS = _obs_registry().counter(
+    "plan_pack_runs_total", "packed-bucket builds, by strategy",
+    labelnames=("strategy",))
+_PACK_REUSES = _obs_registry().counter(
+    "plan_pack_reuses_total",
+    "packed-bucket memo reuses (same cohort buffers), by strategy",
+    labelnames=("strategy",))
 
 
 def default_client_mesh(n_clients: int, client_axis: str):
@@ -757,10 +779,12 @@ def _build_mean_round(strategy, spec: CohortSpec,
         xs = pack_memo.lookup(leaves)
         if xs is not None:
             stats["pack_reuses"] = stats.get("pack_reuses", 0) + 1
+            _PACK_REUSES.labels(strategy=strategy.name).inc()
         else:
             xs = pack(ab)
             pack_memo.store(leaves, xs)
             stats["pack_runs"] = stats.get("pack_runs", 0) + 1
+            _PACK_RUNS.labels(strategy=strategy.name).inc()
         prev_ab = _ab_list(prev_tree) if retains else None
         run = fn_donate if (donate and retains) else fn
         outs = run(xs, w, prev_ab, masks, cr)
@@ -1005,10 +1029,12 @@ def _build_encoded_mean_round(strategy, spec: CohortSpec,
         packed = pack_memo.lookup(leaves)
         if packed is not None:
             stats["pack_reuses"] = stats.get("pack_reuses", 0) + 1
+            _PACK_REUSES.labels(strategy=strategy.name).inc()
         else:
             packed = pack(clients)
             pack_memo.store(leaves, packed)
             stats["pack_runs"] = stats.get("pack_runs", 0) + 1
+            _PACK_RUNS.labels(strategy=strategy.name).inc()
         xs, ss = packed
         prev_ab = _ab_list(prev_tree) if retains else None
         run = fn_donate if (donate and retains) else fn

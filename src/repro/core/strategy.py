@@ -45,6 +45,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.obs import get_registry as _obs_registry
+
 from .aggregation import _EPS, fedavg_leaf, rbla_leaf, zeropad_leaf
 from .compat import shard_map_no_check
 from .lowrank import product_factors, svd_project_stacked
@@ -61,6 +63,13 @@ BACKENDS = ("auto", "ref", "pallas", "distributed")
 #: service sees many multisets; the expensive XLA executables underneath
 #: are shared across multisets and are NOT evicted with the plan)
 PLAN_CACHE_SIZE = 128
+
+_PLAN_CACHE_HITS = _obs_registry().counter(
+    "plan_cache_hits_total", "plan-cache hits, by strategy",
+    labelnames=("strategy",))
+_PLAN_CACHE_MISSES = _obs_registry().counter(
+    "plan_cache_misses_total", "plan-cache misses (plan builds), by strategy",
+    labelnames=("strategy",))
 
 
 # ------------------------------------------------------------ server state --
@@ -419,9 +428,11 @@ class AggregationStrategy:
         got = cache.get(cohort_spec)
         if got is not None:
             stats["hits"] += 1
+            _PLAN_CACHE_HITS.labels(strategy=self.name).inc()
             cache.move_to_end(cohort_spec)
             return got
         stats["misses"] += 1
+        _PLAN_CACHE_MISSES.labels(strategy=self.name).inc()
         built = build_plan(self, cohort_spec)
         cache[cohort_spec] = built
         while len(cache) > PLAN_CACHE_SIZE:

@@ -53,13 +53,21 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.codec import (CODECS, codec_of_pair, decode_update,
+from repro.core.codec import (CODECS, UploadValidationError,
+                              codec_of_pair, decode_update,
                               stochastic_round_tree, tree_codec,
                               validate_encoded_adapters)
 from repro.core.codec import _iter_pairs as _iter_adapter_pairs
 from repro.core.strategy import (ClientUpdate, FoldState, ServerState,
                                  get_strategy)
 from repro.fl.comm import UpdateBuffer, tree_bytes
+from repro.obs import STALENESS_BUCKETS, get_registry, span
+
+#: the machine-readable rejection reasons ``fl_updates_rejected_total``
+#: counts (see ``docs/observability.md``); every ingestion raise and the
+#: zero-mass flush drop map to exactly one of these
+REJECT_REASONS = ("bad_mass", "codec_not_allowed", "bad_scale",
+                  "overflow", "nan_tensor", "zero_mass_flush")
 
 #: schedule name -> factory(a, b) -> s(tau); all monotone non-increasing
 #: in tau with s(0) == 1 (fresh updates are never discounted)
@@ -164,6 +172,11 @@ class AsyncAggregator:
         PRNG seed for the stochastic-rounding noise.  Folds are
         reproducible: a fixed seed and the same submission sequence
         yield bit-identical accumulators.
+    registry
+        The :class:`~repro.obs.MetricsRegistry` this service reports
+        into (exposed as :attr:`obs_registry`; ``None`` = the process
+        default).  Feed it to :class:`~repro.obs.ServiceHealth` for the
+        operator snapshot; see ``docs/observability.md``.
     """
 
     STALENESS_CLOCKS = ("version", "wall")
@@ -179,7 +192,8 @@ class AsyncAggregator:
                  server_momentum: float = 0.0,
                  codecs=CODECS,
                  accum_dtype=None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 registry=None):
         if buffer_size < 1:
             raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
         if replay_window < 1:
@@ -239,6 +253,34 @@ class AsyncAggregator:
         self.n_dropped = 0          # zero-mass flushes discarded whole
         self.staleness_sum = 0.0
         self.wire_bytes_received = 0   # post-codec upload bytes accepted
+        # observability: cache the instrument handles once (hot path is
+        # one enabled check + one add per event); pass ``registry=`` for
+        # per-service isolation, default is the process registry
+        reg = registry if registry is not None else get_registry()
+        self.obs_registry = reg
+        self._m_received = reg.counter(
+            "fl_updates_received_total", "accepted client updates")
+        self._m_rejected = reg.counter(
+            "fl_updates_rejected_total",
+            "rejected client updates, by reason", labelnames=("reason",))
+        self._m_codec = reg.counter(
+            "fl_uploads_by_codec_total",
+            "accepted uploads, by wire codec", labelnames=("codec",))
+        self._m_wire = reg.counter(
+            "fl_wire_bytes_received_total",
+            "post-codec upload bytes accepted")
+        self._m_staleness = reg.histogram(
+            "fl_staleness", "staleness of accepted updates "
+            "(server versions or wall units, per staleness_clock)",
+            buckets=STALENESS_BUCKETS)
+        self._m_flushes = reg.counter(
+            "fl_flushes_total", "buffer flushes that advanced the state")
+        self._m_folds = reg.counter(
+            "fl_folds_total", "client updates folded into the state")
+        self._m_publishes = reg.counter(
+            "fl_publishes_total", "states handed to the publish hook")
+        self._m_buffer_depth = reg.gauge(
+            "fl_buffer_depth", "updates currently buffered")
         self._quantize_live()          # bf16 storage from the first fold on
 
     # ------------------------------------------------------------- intake --
@@ -255,13 +297,23 @@ class AsyncAggregator:
                 "schedules must map into (0, 1]")
         return s
 
-    def _validate_update(self, update: ClientUpdate) -> None:
+    def _reject(self, reason: str, n: int = 1) -> None:
+        """Count one rejection under its reason (the per-reason split of
+        the legacy lone ``n_dropped``)."""
+        self._m_rejected.labels(reason=reason).inc(n)
+
+    def _validate_update(self, update: ClientUpdate) -> set:
         """Ingestion front door: reject malformed uploads before they can
         poison the buffer (the robust strategies bound what *well-formed*
         adversarial values can do; NaN/inf and zero/negative masses are
-        rejected outright -- a NaN survives any mean, trimmed or not)."""
+        rejected outright -- a NaN survives any mean, trimmed or not).
+
+        Every raise increments ``fl_updates_rejected_total`` under
+        exactly one reason.  Returns the set of wire codecs the upload
+        used (for the codec-mix counters)."""
         n = float(update.n_examples)
         if not (math.isfinite(n) and n > 0.0):
+            self._reject("bad_mass")
             raise ValueError(
                 "rejected client update: n_examples must be positive and "
                 f"finite, got {update.n_examples!r}")
@@ -269,21 +321,28 @@ class AsyncAggregator:
                 for _, p in _iter_adapter_pairs(update.adapters)}
         bad = sorted(used - set(self.codecs))
         if bad:
+            self._reject("codec_not_allowed")
             raise ValueError(
                 f"rejected client update: upload codec {bad} not in the "
                 f"negotiated set {list(self.codecs)}")
         # scale sanity first: a NaN scale should name the scale, not fall
         # through to the generic non-finite message below
-        validate_encoded_adapters(update.adapters)
+        try:
+            validate_encoded_adapters(update.adapters)
+        except UploadValidationError as e:
+            self._reject(e.reason)      # "bad_scale" | "overflow"
+            raise
         for name, tree in (("adapters", update.adapters),
                            ("base_trainable", update.base_trainable)):
             for leaf in jax.tree.leaves(tree):
                 x = jnp.asarray(leaf)
                 if (jnp.issubdtype(x.dtype, jnp.floating)
                         and not bool(jnp.all(jnp.isfinite(x)))):
+                    self._reject("nan_tensor")
                     raise ValueError(
                         "rejected client update: non-finite values in "
                         f"{name}")
+        return used
 
     def submit(self, update: ClientUpdate, model_version: int | None = None,
                now: float = 0.0, pulled_at: float | None = None) -> bool:
@@ -300,22 +359,30 @@ class AsyncAggregator:
         ``n_examples``, NaN/inf tensors) raise ``ValueError`` and leave
         the service untouched.  Returns True when the state advanced.
         """
-        self._validate_update(update)
-        if self.staleness_clock == "wall":
-            tau = (0.0 if pulled_at is None
-                   else max(0.0, float(now) - float(pulled_at)))
-        else:
-            tau = (0.0 if model_version is None
-                   else max(0.0, float(self.version - model_version)))
-        weight = self.staleness_weight(tau) * float(update.n_examples)
-        self.n_received += 1
-        self.staleness_sum += tau
-        wire = (tree_bytes(update.adapters)
-                + tree_bytes(update.base_trainable))
-        self.wire_bytes_received += wire
-        self.buffer.add(update, weight=weight, staleness=tau, now=now,
-                        wire_bytes=wire)
-        if self.buffer.due(now):
+        with span("submit", registry=self.obs_registry):
+            used = self._validate_update(update)
+            if self.staleness_clock == "wall":
+                tau = (0.0 if pulled_at is None
+                       else max(0.0, float(now) - float(pulled_at)))
+            else:
+                tau = (0.0 if model_version is None
+                       else max(0.0, float(self.version - model_version)))
+            weight = self.staleness_weight(tau) * float(update.n_examples)
+            self.n_received += 1
+            self.staleness_sum += tau
+            wire = (tree_bytes(update.adapters)
+                    + tree_bytes(update.base_trainable))
+            self.wire_bytes_received += wire
+            self._m_received.inc()
+            self._m_staleness.observe(tau)
+            self._m_wire.inc(wire)
+            for c in (used or {"none"}):
+                self._m_codec.labels(codec=c).inc()
+            self.buffer.add(update, weight=weight, staleness=tau, now=now,
+                            wire_bytes=wire)
+            self._m_buffer_depth.set(len(self.buffer))
+            due = self.buffer.due(now)
+        if due:
             self.flush(now=now)
             return True
         return False
@@ -345,35 +412,50 @@ class AsyncAggregator:
         take, and mixing by ``0 / 0`` would publish NaNs.
         """
         if len(self.buffer) and not self.buffer.total_weight() > 0.0:
-            self.n_dropped += len(self.buffer.pop())
+            dropped = len(self.buffer.pop())
+            self.n_dropped += dropped
+            self._reject("zero_mass_flush", dropped)
+            self._m_buffer_depth.set(0)
             return self.state
         batch = self.buffer.pop()
         if not batch:
             return self.state
-        self.n_flushes += 1
-        # fold arithmetic runs in fp32; bf16 is storage between advances
-        self._dequantize_live()
-        prev_state = self.state
-        if self.buffer.size == 1 and len(batch) == 1:
-            self._fold_one(batch[0].update, batch[0].weight)
-            self._apply_momentum(prev_state)
-        else:
-            # semi-async mini-cohort: one joint aggregate, staleness
-            # already folded into the weights
-            self.state = self.strategy.aggregate(
-                self.state, [b.update for b in batch],
-                weights=[b.weight for b in batch], backend=self.backend)
-            self.n_folded += len(batch)
-            self._apply_momentum(prev_state)
-            # a flush is a macro-round boundary: re-anchor the per-update
-            # machinery at the new (published) state; the momentum buffer
-            # is cross-round server state and survives the re-anchor
-            self._anchor = self.state
-            self._replay.clear()
-            momentum = self._fold_state.momentum
-            self._fold_state = self.strategy.init_fold(self.state)
-            self._fold_state.momentum = momentum
-        self._quantize_live()
+        with span("flush", registry=self.obs_registry) as sp_flush:
+            self.n_flushes += 1
+            self._m_flushes.inc()
+            # fold arithmetic runs in fp32; bf16 is storage between
+            # advances
+            self._dequantize_live()
+            prev_state = self.state
+            if self.buffer.size == 1 and len(batch) == 1:
+                with span("fold", registry=self.obs_registry) as sp:
+                    self._fold_one(batch[0].update, batch[0].weight)
+                    self._apply_momentum(prev_state)
+                    sp.block(self.state.adapters)
+            else:
+                # semi-async mini-cohort: one joint aggregate, staleness
+                # already folded into the weights
+                with span("fold", registry=self.obs_registry) as sp:
+                    self.state = self.strategy.aggregate(
+                        self.state, [b.update for b in batch],
+                        weights=[b.weight for b in batch],
+                        backend=self.backend)
+                    self.n_folded += len(batch)
+                    self._m_folds.inc(len(batch))
+                    self._apply_momentum(prev_state)
+                    sp.block(self.state.adapters)
+                # a flush is a macro-round boundary: re-anchor the
+                # per-update machinery at the new (published) state; the
+                # momentum buffer is cross-round server state and
+                # survives the re-anchor
+                self._anchor = self.state
+                self._replay.clear()
+                momentum = self._fold_state.momentum
+                self._fold_state = self.strategy.init_fold(self.state)
+                self._fold_state.momentum = momentum
+            self._quantize_live()
+            self._m_buffer_depth.set(len(self.buffer))
+            sp_flush.block(self.state.adapters)
         self._maybe_publish()
         return self.state
 
@@ -408,8 +490,10 @@ class AsyncAggregator:
         if self.on_publish is None:
             return
         if self.n_flushes % self.publish_every == 0:
-            self.on_publish(self.state)
+            with span("publish", registry=self.obs_registry):
+                self.on_publish(self.state)
             self.n_published += 1
+            self._m_publishes.inc()
 
     def _fold_one(self, update: ClientUpdate, weight: float) -> None:
         # the incremental fold kernels and the replay anchor operate on
@@ -440,6 +524,7 @@ class AsyncAggregator:
             self.state = dataclasses.replace(out,
                                              round=self.state.round + 1)
         self.n_folded += 1
+        self._m_folds.inc()
 
     # ------------------------------------------------- bf16 accumulators --
     def _next_key(self):
@@ -486,4 +571,5 @@ class AsyncAggregator:
         return self.staleness_sum / max(self.n_received, 1)
 
 
-__all__ = ["AsyncAggregator", "STALENESS_SCHEDULES", "make_staleness_fn"]
+__all__ = ["AsyncAggregator", "STALENESS_SCHEDULES", "REJECT_REASONS",
+           "make_staleness_fn"]

@@ -13,7 +13,11 @@ per round (and the server broadcast), per aggregation method:
 
 :class:`UpdateBuffer` is the buffered semi-async server's intake queue:
 uploads accumulate and flush as one mini-cohort on size K or deadline
-(see ``repro.fl.async_agg`` / ``docs/async.md``).
+(see ``repro.fl.async_agg`` / ``docs/async.md``).  The buffer itself
+stays metrics-free; its owning :class:`~repro.fl.AsyncAggregator`
+exports the live depth (``fl_buffer_depth``), per-upload staleness
+(``fl_staleness``) and wire bytes (``fl_wire_bytes_received_total``)
+through :mod:`repro.obs` -- see ``docs/observability.md``.
 """
 from __future__ import annotations
 

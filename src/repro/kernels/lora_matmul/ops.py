@@ -23,7 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..runtime import auto_interpret
+from ..runtime import (auto_interpret, count_dispatch, note_trace,
+                       trace_counts as runtime_trace_counts)
 from .kernel import batched_lora_matmul_pallas, lora_matmul_pallas
 from .ref import (batched_lora_matmul_ref, batched_lora_matmul_segments,
                   lora_matmul_ref)
@@ -31,16 +32,9 @@ from .ref import (batched_lora_matmul_ref, batched_lora_matmul_segments,
 #: public-entry trace counts: name -> times jax retraced it.  A retrace
 #: means a new executable (new shapes/dtypes/static args); serving across
 #: changing tenant mixes must not move these (tests/test_serving.py).
-trace_counts: dict[str, int] = {}
-
-
-def _note_trace(name: str) -> None:
-    trace_counts[name] = trace_counts.get(name, 0) + 1
-
-
-def _count_dispatch(n: int = 1) -> None:
-    from repro.core.plan import dispatch_counter
-    dispatch_counter.inc(n)
+#: Now a live dict view over the shared ``kernel_traces_total`` metric
+#: (see :mod:`repro.kernels.runtime`); ``[]`` / ``.get`` keep working.
+trace_counts = runtime_trace_counts
 
 
 def _pad_to(v: int, mult: int) -> int:
@@ -75,7 +69,7 @@ def lora_matmul_inline(x, w, a, b, scale, *, interpret=None, bm=256,
 
 @functools.partial(jax.jit, static_argnames=("interpret", "bm", "bn", "bk"))
 def _lora_matmul_jit(x, w, a, b, scale, *, interpret, bm, bn, bk):
-    _note_trace("lora_matmul")
+    note_trace("lora_matmul")
     return lora_matmul_inline(x, w, a, b, scale, interpret=interpret,
                               bm=bm, bn=bn, bk=bk)
 
@@ -84,7 +78,7 @@ def lora_matmul(x, w, a, b, scale, *, interpret=None, bm=256, bn=256,
                 bk=512):
     """x (..., K) @ w (K, N) + scale * (x @ a^T) @ b^T  via the Pallas
     kernel.  a: (r, K), b: (N, r), scale scalar."""
-    _count_dispatch()
+    count_dispatch(kernel="lora_matmul")
     return _lora_matmul_jit(x, w, a, b, scale, interpret=interpret,
                             bm=bm, bn=bn, bk=bk)
 
@@ -153,7 +147,7 @@ def batched_lora_matmul_inline(x, w, a_rows, b_rows, adapter_ids, seg_off,
 def _batched_lora_matmul_jit(x, w, a_rows, b_rows, adapter_ids, seg_off,
                              seg_rank, seg_scale, *, impl, interpret, bm,
                              bn, bk):
-    _note_trace("batched_lora_matmul")
+    note_trace("batched_lora_matmul")
     return batched_lora_matmul_inline(
         x, w, a_rows, b_rows, adapter_ids, seg_off, seg_rank, seg_scale,
         impl=impl, interpret=interpret, bm=bm, bn=bn, bk=bk)
@@ -177,7 +171,7 @@ def batched_lora_matmul(x, w, a_rows, b_rows, adapter_ids, seg_off,
     multiset, and table content.  A tenant with ``seg_rank[t] == 0``
     (unregistered / evicted) gets the pure base matmul.
     """
-    _count_dispatch()
+    count_dispatch(kernel="batched_lora_matmul")
     return _batched_lora_matmul_jit(
         x, w, a_rows, b_rows, adapter_ids, seg_off, seg_rank, seg_scale,
         impl=impl, interpret=interpret, bm=bm, bn=bn, bk=bk)

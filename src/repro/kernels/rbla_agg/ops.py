@@ -17,7 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..runtime import auto_interpret
+from ..runtime import auto_interpret, count_dispatch, note_trace
 from .kernel import (axpy_fold_pallas, flora_stack_pallas,
                      packed_agg_pallas, packed_robust_pallas,
                      packed_stack_pallas, rbla_agg_pallas)
@@ -27,11 +27,6 @@ from .ref import (axpy_fold_ref, flora_stack_ref, packed_agg_ref,
 
 def _pad_to(v: int, mult: int) -> int:
     return (v + mult - 1) // mult * mult
-
-
-def _count_dispatch(n: int = 1) -> None:
-    from repro.core.plan import dispatch_counter
-    dispatch_counter.inc(n)
 
 
 #: legacy method names -> the kernel's two normalization modes.  FedAvg at
@@ -64,6 +59,7 @@ def rbla_agg_inline(x, ranks, weights, *, method: str = "rbla",
 
 @functools.partial(jax.jit, static_argnames=("method", "interpret"))
 def _rbla_agg_jit(x, ranks, weights, *, method, interpret):
+    note_trace("rbla_agg")
     return rbla_agg_inline(x, ranks, weights, method=method,
                            interpret=interpret)
 
@@ -76,7 +72,7 @@ def rbla_agg(x, ranks, weights, *, method: str = "rbla", interpret=None):
     ``interpret=None`` auto-detects: compiled on TPU/GPU, interpreter on
     CPU.
     """
-    _count_dispatch()
+    count_dispatch(kernel="rbla_agg")
     return _rbla_agg_jit(x, ranks, weights, method=method,
                          interpret=interpret)
 
@@ -128,6 +124,7 @@ def packed_agg_inline(x, masks, weights, prev=None, *,
                                              "out_dtype", "interpret"))
 def _packed_agg_jit(x, masks, weights, prev, scales, *, norm_by,
                     norm_restore, out_dtype, interpret):
+    note_trace("packed_agg")
     return packed_agg_inline(x, masks, weights, prev, norm_by=norm_by,
                              norm_restore=norm_restore, scales=scales,
                              out_dtype=out_dtype, interpret=interpret)
@@ -137,7 +134,7 @@ def packed_agg(x, masks, weights, prev=None, *, norm_by: str = "mask",
                norm_restore: bool = False, scales=None, out_dtype=None,
                interpret=None):
     """Jitted :func:`packed_agg_inline` (standalone use and tests)."""
-    _count_dispatch()
+    count_dispatch(kernel="packed_agg")
     return _packed_agg_jit(x, masks, weights, prev, scales, norm_by=norm_by,
                            norm_restore=norm_restore, out_dtype=out_dtype,
                            interpret=interpret)
@@ -187,6 +184,7 @@ def packed_robust_inline(x, masks, weights, prev=None, *, mode: str,
                                              "interpret"))
 def _packed_robust_jit(x, masks, weights, prev, scales, *, mode, clip_norm,
                        trim_frac, out_dtype, interpret):
+    note_trace("packed_robust")
     return packed_robust_inline(x, masks, weights, prev, mode=mode,
                                 clip_norm=clip_norm, trim_frac=trim_frac,
                                 scales=scales, out_dtype=out_dtype,
@@ -197,7 +195,7 @@ def packed_robust(x, masks, weights, prev=None, *, mode: str,
                   clip_norm: float = 0.0, trim_frac: float = 0.0,
                   scales=None, out_dtype=None, interpret=None):
     """Jitted :func:`packed_robust_inline` (standalone use and tests)."""
-    _count_dispatch()
+    count_dispatch(kernel="packed_robust")
     return _packed_robust_jit(x, masks, weights, prev, scales, mode=mode,
                               clip_norm=float(clip_norm),
                               trim_frac=float(trim_frac),
@@ -234,6 +232,7 @@ def packed_stack_inline(x, scales, prev=None, *, copies_x=(),
                                              "out_rows", "interpret"))
 def _packed_stack_jit(x, scales, prev, *, copies_x, copies_prev, out_rows,
                       interpret):
+    note_trace("packed_stack")
     return packed_stack_inline(x, scales, prev, copies_x=copies_x,
                                copies_prev=copies_prev, out_rows=out_rows,
                                interpret=interpret)
@@ -242,7 +241,7 @@ def _packed_stack_jit(x, scales, prev, *, copies_x, copies_prev, out_rows,
 def packed_stack(x, scales, prev=None, *, copies_x=(), copies_prev=(),
                  out_rows: int, interpret=None):
     """Jitted :func:`packed_stack_inline` (standalone use and tests)."""
-    _count_dispatch()
+    count_dispatch(kernel="packed_stack")
     return _packed_stack_jit(x, scales, prev, copies_x=tuple(copies_x),
                              copies_prev=tuple(copies_prev),
                              out_rows=out_rows, interpret=interpret)
@@ -269,6 +268,7 @@ def flora_stack_inline(x, scales, *, segs: tuple[int, ...], out_rows: int,
 @functools.partial(jax.jit, static_argnames=("segs", "out_rows",
                                              "interpret"))
 def _flora_stack_jit(x, scales, *, segs, out_rows, interpret):
+    note_trace("flora_stack")
     return flora_stack_inline(x, scales, segs=segs, out_rows=out_rows,
                               interpret=interpret)
 
@@ -285,7 +285,7 @@ def flora_stack(x, scales, *, segs: tuple[int, ...], out_rows: int,
     must be static (the output layout depends on them); recompiles per
     distinct cohort rank multiset.
     """
-    _count_dispatch()
+    count_dispatch(kernel="flora_stack")
     return _flora_stack_jit(x, scales, segs=segs, out_rows=out_rows,
                             interpret=interpret)
 
@@ -330,6 +330,7 @@ def axpy_fold_inline(y, x, alpha, *, interpret=None, sr_key=None):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _axpy_fold_jit(y, x, alpha, sr_key, *, interpret):
+    note_trace("axpy_fold")
     return axpy_fold_inline(y, x, alpha, interpret=interpret, sr_key=sr_key)
 
 
@@ -346,7 +347,7 @@ def axpy_fold(y, x, alpha, *, interpret=None, sr_key=None):
     to a bf16 ``y`` (quantized accumulators; see
     :func:`axpy_fold_inline`).
     """
-    _count_dispatch()
+    count_dispatch(kernel="axpy_fold")
     return _axpy_fold_jit(y, x, alpha, sr_key, interpret=interpret)
 
 

@@ -1,0 +1,75 @@
+"""Shared benchmark timing utilities (JAX-aware, registry-integrated).
+
+Every benchmark used to hand-roll the same three things: a
+``block_until_ready``-on-leaves helper, a warm-up-then-time loop, and a
+``--json`` payload with the :func:`repro.kernels.runtime.bench_env`
+header.  They live here now, next to the metrics they feed:
+
+* :func:`block` -- block on a pytree's array leaves (the only correct
+  way to time lazy JAX dispatch);
+* :func:`time_fn` -- warm up (compile) once, then time ``iters`` calls
+  and reduce with ``min`` (default; on a 1-vCPU CI box a co-scheduled
+  process steals the whole core, so the minimum is the real cost -- the
+  PR 7 lesson) or ``mean``;
+* :func:`bench_payload` -- the standard machine-readable payload
+  (``BENCH_*.json``): bench name, backend, environment header, and a
+  full metrics-registry :func:`~repro.obs.MetricsRegistry.snapshot`, so
+  every committed benchmark run carries its own observability record.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+
+from .metrics import MetricsRegistry, get_registry
+
+
+def block(tree: Any) -> Any:
+    """``jax.block_until_ready`` on every array leaf; returns ``tree``."""
+    jax.block_until_ready(
+        [x for x in jax.tree.leaves(tree)
+         if hasattr(x, "block_until_ready")])
+    return tree
+
+
+def time_fn(fn: Callable[[], Any], iters: int = 3,
+            reduce: str = "min") -> float:
+    """Seconds per call of ``fn`` (which must return a pytree of arrays
+    -- we block on every leaf).  The first call warms up / compiles and
+    is not timed.  ``reduce="min"`` (timeit-style, default) or
+    ``"mean"``.
+    """
+    if reduce not in ("min", "mean"):
+        raise ValueError(f"reduce must be min|mean, got {reduce!r}")
+    block(fn())                               # warm up / compile
+    times = []
+    for _ in range(max(int(iters), 1)):
+        t0 = time.perf_counter()
+        block(fn())
+        times.append(time.perf_counter() - t0)
+    return min(times) if reduce == "min" else sum(times) / len(times)
+
+
+def bench_payload(bench: str, *, smoke: bool, case: dict, results: Any,
+                  registry: MetricsRegistry | None = None,
+                  **extra) -> dict:
+    """The standard ``--json`` payload every benchmark writes: the
+    shared environment header plus a metrics snapshot under ``"obs"``."""
+    from repro.kernels.runtime import bench_env     # deferred: no cycle
+    reg = registry or get_registry()
+    payload = {
+        "bench": bench,
+        "backend": jax.default_backend(),
+        "env": bench_env(),
+        "smoke": bool(smoke),
+        "case": case,
+        "results": results,
+        "obs": reg.snapshot(),
+    }
+    payload.update(extra)
+    return payload
+
+
+__all__ = ["block", "time_fn", "bench_payload"]

@@ -21,7 +21,14 @@ from typing import Any, Callable, Mapping, Sequence
 import jax.numpy as jnp
 
 from repro.kernels import batched_lora_matmul
+from repro.obs import get_registry as _obs_registry
+from repro.obs import span
 from .store import AdapterStore, StoreSnapshot
+
+_SERVE_REQUESTS = _obs_registry().counter(
+    "serving_requests_total", "request rows served (per adapted layer)")
+_SERVE_BATCHES = _obs_registry().counter(
+    "serving_batches_total", "batched kernel launches (one per layer)")
 
 PyTree = Any
 
@@ -71,10 +78,16 @@ class ServingEngine:
         snap = self.snapshot() if snapshot is None else snapshot
         a_rows, b_rows = snap.pair_buffers(path)
         tbl = snap.table(path)
-        return batched_lora_matmul(
+        y = batched_lora_matmul(
             x, self.weights[path], a_rows, b_rows, adapter_ids,
             tbl.off, tbl.rank, tbl.scale, impl=self.impl,
             interpret=self.interpret)
+        n_rows = 1
+        for d in x.shape[:-1]:
+            n_rows *= int(d)
+        _SERVE_REQUESTS.inc(n_rows)
+        _SERVE_BATCHES.inc()
+        return y
 
     def forward(self, x, adapter_ids, *,
                 paths: Sequence[str] | None = None,
@@ -83,8 +96,12 @@ class ServingEngine:
         fan_in) under ONE pinned snapshot -- the whole batch sees exactly
         one store version even if a publish lands mid-flight."""
         snap = self.snapshot() if snapshot is None else snapshot
-        for path in (list(self.weights) if paths is None else paths):
-            x = self.apply(path, x, adapter_ids, snapshot=snap)
+        # one serve span per batch, blocking once at the boundary --
+        # never between layers (that would serialize the chain)
+        with span("serve") as sp:
+            for path in (list(self.weights) if paths is None else paths):
+                x = self.apply(path, x, adapter_ids, snapshot=snap)
+            sp.block(x)
         return x
 
     # ------------------------------------------------------------ write --

@@ -53,6 +53,20 @@ import numpy as np
 
 from repro.core.plan import pair_side_rows
 from repro.lora.lora import DEFAULT_ALPHA, is_pair
+from repro.obs import get_registry as _obs_registry
+
+_STORE_VERSION = _obs_registry().gauge(
+    "serving_store_version", "current adapter-store version")
+_STORE_PAGES = _obs_registry().gauge(
+    "serving_store_pages", "bucket page capacity", labelnames=("bucket",))
+_STORE_PAGES_USED = _obs_registry().gauge(
+    "serving_store_pages_used", "bucket pages allocated to tenants",
+    labelnames=("bucket",))
+_STORE_PINNED = _obs_registry().gauge(
+    "serving_pinned_snapshots",
+    "handed-out store snapshots still alive (pinning their buffers)")
+_STORE_PUBLISHES = _obs_registry().counter(
+    "serving_publishes_total", "global hot-swaps installed into the store")
 
 PyTree = Any
 
@@ -202,6 +216,31 @@ class AdapterStore:
     def n_tenants(self) -> int:
         return len(self._slot_of)
 
+    @property
+    def pinned_snapshots(self) -> int:
+        """Handed-out :class:`StoreSnapshot` objects still alive.  While
+        any exist, writes to their buffers copy instead of donating."""
+        return len(self._live)
+
+    def occupancy(self) -> dict:
+        """Per-bucket page occupancy: ``{bucket label: {"pages",
+        "pages_used", "page_rows"}}`` -- the point-in-time view
+        :class:`~repro.obs.ServiceHealth` reports (the same numbers feed
+        the ``serving_store_pages*`` gauges on every version bump)."""
+        out = {}
+        for key, b in self._buckets.items():
+            out[self._bucket_label(key)] = {
+                "pages": b.n_pages,
+                "pages_used": b.n_pages - len(b.free),
+                "page_rows": b.page_rows,
+            }
+        return out
+
+    @staticmethod
+    def _bucket_label(key) -> str:
+        fo, fi, dtype = key
+        return f"{fo}x{fi}:{dtype}"
+
     def tenants(self):
         return list(self._slot_of)
 
@@ -218,6 +257,7 @@ class AdapterStore:
         snapshot of the current version is still alive."""
         snap = dataclasses.replace(self._snapshot)
         self._live.add(snap)
+        _STORE_PINNED.set(len(self._live))
         return snap
 
     def _rebuild_snapshot(self) -> None:
@@ -234,6 +274,13 @@ class AdapterStore:
     def _bump(self) -> None:
         self._version += 1
         self._rebuild_snapshot()
+        _STORE_VERSION.set(self._version)
+        _STORE_PINNED.set(len(self._live))
+        for key, b in self._buckets.items():
+            label = self._bucket_label(key)
+            _STORE_PAGES.labels(bucket=label).set(b.n_pages)
+            _STORE_PAGES_USED.labels(bucket=label).set(
+                b.n_pages - len(b.free))
 
     def _pinned_ids(self) -> set:
         """Identities of every buffer some live handed-out snapshot still
@@ -427,6 +474,7 @@ class AdapterStore:
                     sides[side][0].append(rows[:cnt])
                     sides[side][1].append((off, cnt))
         self._write(self._assemble(writes))
+        _STORE_PUBLISHES.inc()
         return self._version
 
     # ------------------------------------------------------------ readback --

@@ -430,6 +430,62 @@ def test_quantized_uploads_track_plain_folds(wire, buffer_size):
     assert ratio > (2.5 if wire == "int8" else 1.5)
 
 
+def _rejection_counts(agg):
+    metric = agg.obs_registry.get("fl_updates_rejected_total")
+    if metric is None:
+        return {}
+    return {key.partition("=")[2]: int(v)
+            for key, v in metric.samples().items() if v}
+
+
+@pytest.mark.parametrize("reason", ["bad_mass", "nan_tensor", "bad_scale",
+                                    "overflow", "codec_not_allowed",
+                                    "zero_mass_flush"])
+def test_each_rejection_path_increments_exactly_its_own_counter(reason):
+    """Satellite regression for the per-reason rejection split: every
+    ingestion/flush rejection path bumps ``fl_updates_rejected_total``
+    under its own reason label and nothing else (catalog in
+    ``docs/observability.md``)."""
+    from repro.obs import MetricsRegistry
+    s = get_strategy("rbla")
+    codecs = "none" if reason == "codec_not_allowed" else ("none", "int8")
+    agg = AsyncAggregator(s, make_state(s), codecs=codecs,
+                          buffer_size=2, deadline=1.0,
+                          registry=MetricsRegistry())
+    if reason == "zero_mass_flush":
+        upd = _one_update()
+        agg.buffer.add(upd, weight=0.0, now=0.0)
+        agg.buffer.add(upd, weight=0.0, now=0.0)
+        agg.flush(now=10.0)
+        assert _rejection_counts(agg) == {"zero_mass_flush": 2}
+        assert agg.n_dropped == 2
+        return
+    if reason == "bad_mass":
+        bad = dataclasses.replace(_one_update(), n_examples=0.0)
+    elif reason == "nan_tensor":
+        upd = _one_update()
+        adapters = jax.tree.map(lambda x: x, upd.adapters)
+        adapters["fc1"]["A"] = adapters["fc1"]["A"].at[0, 0].set(
+            float("nan"))
+        bad = dataclasses.replace(upd, adapters=adapters)
+    else:
+        bad = _encoded_update("int8")
+        if reason == "bad_scale":
+            adapters = {k: dict(v) for k, v in bad.adapters.items()}
+            adapters["fc1"]["A_scale"] = \
+                adapters["fc1"]["A_scale"].at[0].set(float("nan"))
+            bad = dataclasses.replace(bad, adapters=adapters)
+        elif reason == "overflow":
+            adapters = {k: dict(v) for k, v in bad.adapters.items()}
+            adapters["fc2"]["B_scale"] = \
+                adapters["fc2"]["B_scale"].at[0].set(3.0e36)
+            bad = dataclasses.replace(bad, adapters=adapters)
+    with pytest.raises(ValueError):
+        agg.submit(bad)
+    assert _rejection_counts(agg) == {reason: 1}
+    assert agg.n_received == 0 and len(agg.buffer) == 0
+
+
 def test_buffer_wire_byte_accounting():
     from repro.core import codec
     from repro.fl.comm import tree_bytes
