@@ -21,17 +21,24 @@ Three questions, all on CPU-runnable synthetic cohorts:
    parity of the fused-dequant aggregate against the fp32 baseline, and
    whether alternating codec mixes re-traces warm plans.
 
+Plus a fourth, the **durability leg** (``docs/durability.md``): the WAL
+overhead per fold, a checkpoint's write cost, and a crash recovery's
+restore+replay cost, with every upload redelivered and the server killed
+mid-stream along the way.
+
 ``--json PATH`` writes the machine-readable ``BENCH_async.json`` so the
 wire-cost trajectory is tracked across PRs; ``--smoke`` runs a tiny case
 and exits non-zero if (a) the quantized aggregate drifts past its
 codec's tolerance from the fp32 baseline (``none`` must be bit-exact),
 (b) int8 cuts upload bytes by less than 3.5x at 128 clients, (c)
 alternating between two warm codec mixes adds plan misses or executor
-retraces -- the codec is only free if the plan cache survives it -- or
-(d) running the same warm fold loop with metrics enabled adds jitted
+retraces -- the codec is only free if the plan cache survives it -- (d)
+running the same warm fold loop with metrics enabled adds jitted
 executors or more than ``OBS_OVERHEAD_FRAC`` wall overhead vs metrics
 disabled (the ``repro.obs`` overhead guarantee; see
-``docs/observability.md``).
+``docs/observability.md``) -- or the **chaos gate** trips: a redelivered
+upload double-folds, crash recovery is not bit-exact, recovery re-traces
+a warm fold executor, or a failed publish tears the serving snapshot.
 
 Run: ``PYTHONPATH=src python benchmarks/bench_async_agg.py``
 """
@@ -40,6 +47,7 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import tempfile
 import time
 
 import jax
@@ -48,7 +56,7 @@ import numpy as np
 
 from repro.core import codec
 from repro.core.strategy import ClientUpdate, ServerState, get_strategy
-from repro.fl import AsyncAggregator
+from repro.fl import AsyncAggregator, DurableAggregator
 from repro.fl.comm import tree_bytes
 from repro.fl.selection import ClientLatencyModel
 from repro.lora import init_adapters, set_ranks
@@ -258,6 +266,131 @@ def obs_overhead_check(updates, specs, r_max, iters=5):
     }
 
 
+# --------------------------------------------------------- crash recovery --
+def recovery_check(updates, specs, r_max):
+    """Durability leg: what the WAL + checkpoint layer costs per upload,
+    what one snapshot and one crash recovery cost, and the chaos
+    invariants the ``--smoke`` gate enforces -- redeliver every upload
+    (zero double-folds), crash mid-stream and recover (bit-exact state),
+    and recovery must reuse the warm fold executors (zero retraces: the
+    registry strategy singleton keeps its plan cache across service
+    incarnations)."""
+    s = get_strategy("rbla")
+    n = len(updates)
+    ids = [f"u{i}" for i in range(n)]
+
+    oracle = AsyncAggregator(s, make_state(s, specs, r_max), backend="ref")
+    t0 = time.time()
+    for u, uid in zip(updates, ids):
+        oracle.submit(u, update_id=uid)
+    jax.block_until_ready(jax.tree.leaves(oracle.state.adapters))
+    plain_ms = (time.time() - t0) * 1e3 / n
+
+    with tempfile.TemporaryDirectory() as d:
+        agg = DurableAggregator(s, make_state(s, specs, r_max), dir=d,
+                                checkpoint_every=0, wal_fsync=False,
+                                backend="ref")
+        cut = n // 2
+        double_folds = 0
+        t0 = time.time()
+        for u, uid in zip(updates[:cut], ids[:cut]):
+            v0 = agg.version
+            agg.submit(u, update_id=uid)
+            v1 = agg.version
+            # at-least-once transport: redeliver every upload -- the
+            # dedup window must fold it exactly once
+            agg.submit(u, update_id=uid)
+            double_folds += int(agg.version != v1 or v1 != v0 + 1)
+        durable_ms = (time.time() - t0) * 1e3 / cut
+        t0 = time.time()
+        agg.checkpoint()
+        checkpoint_ms = (time.time() - t0) * 1e3
+        for u, uid in zip(updates[cut:], ids[cut:]):       # the WAL tail
+            agg.submit(u, update_id=uid)
+            agg.submit(u, update_id=uid)
+        wal_bytes = agg.wal.bytes_written
+        execs0 = len(s.__dict__.get("_plan_exec_cache", {}))
+        agg.close()                                        # crash
+
+        t0 = time.time()
+        recovered = DurableAggregator(s, make_state(s, specs, r_max),
+                                      dir=d, checkpoint_every=0,
+                                      wal_fsync=False, backend="ref")
+        restore_ms = (time.time() - t0) * 1e3
+        execs1 = len(s.__dict__.get("_plan_exec_cache", {}))
+
+    bit_exact = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(recovered.state.adapters),
+                        jax.tree.leaves(oracle.state.adapters)))
+    double_folds += int(recovered.version != oracle.version)
+    return {
+        "plain_fold_ms_per_update": plain_ms,
+        "durable_fold_ms_per_update": durable_ms,
+        "wal_overhead_frac": durable_ms / max(plain_ms, 1e-9) - 1.0,
+        "checkpoint_ms": checkpoint_ms,
+        "restore_ms": restore_ms,
+        "n_replayed": recovered.n_replayed,
+        "wal_bytes": wal_bytes,
+        "bit_exact_recovery": bit_exact,
+        "double_folds": double_folds,
+        "new_executors": execs1 - execs0,
+    }
+
+
+def serving_chaos_check(specs, r_max):
+    """No torn serving snapshots under publish failures: hot-swaps that
+    raise must leave readers on the last committed snapshot (outputs
+    bit-identical before/after the failed attempt), and the retried
+    publish must land the newest pending tree."""
+    from repro.serving import AdapterStore, ServingEngine
+
+    rng = np.random.default_rng(SEED)
+    store = AdapterStore(specs, r_max=r_max)
+    weights = {p: jnp.asarray(rng.normal(size=(fi, fo)) * 0.1, jnp.float32)
+               for p, (fo, fi) in specs.items()}
+    eng = ServingEngine(weights, store, interpret=True)
+
+    def tree(seed):
+        ad = init_adapters(jax.random.PRNGKey(seed), specs, r_max, r_max)
+        return jax.tree.map(
+            lambda x: x + jnp.asarray(
+                rng.normal(size=x.shape), x.dtype)
+            if x.dtype == jnp.float32 else x, ad)
+
+    eng.publish(tree(0))
+    path = next(iter(specs))
+    x = jnp.asarray(rng.normal(size=(4, specs[path][1])), jnp.float32)
+    tid = jnp.zeros((4,), jnp.int32)
+    y_before = eng.apply(path, x, tid)
+
+    orig, broken = store.publish, {"on": True}
+
+    def flaky_publish(t):
+        if broken["on"]:
+            raise RuntimeError("injected publish fault")
+        return orig(t)
+
+    store.publish = flaky_publish
+    pub = eng.publisher(max_backoff=2)
+
+    class _S:
+        def __init__(self, adapters):
+            self.adapters = adapters
+
+    pub(_S(tree(1)))                       # fails -> quarantined
+    y_during = eng.apply(path, x, tid)     # readers: last committed snap
+    torn = not np.array_equal(np.asarray(y_before), np.asarray(y_during))
+    failures = eng.n_publish_failures
+    broken["on"] = False
+    pub(_S(tree(2)))                       # backoff skip
+    pub(_S(tree(3)))                       # retry lands the newest tree
+    recovered = store.version == 2
+    store.publish = orig
+    return {"publish_failures": failures, "torn_snapshot": torn,
+            "recovered_publish": recovered}
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--smoke", action="store_true",
@@ -319,6 +452,18 @@ def main(argv=None):
           f"on {obs_row['t_enabled_ms']:.1f}ms "
           f"({obs_row['overhead_frac'] * 100:+.1f}%), "
           f"{obs_row['new_executors']} new executors")
+    rec = recovery_check(updates, specs, r_max)
+    print(f"# durability: fold {rec['plain_fold_ms_per_update']:.1f}ms -> "
+          f"{rec['durable_fold_ms_per_update']:.1f}ms/update with WAL "
+          f"({rec['wal_overhead_frac'] * 100:+.0f}%), checkpoint "
+          f"{rec['checkpoint_ms']:.1f}ms, recover {rec['restore_ms']:.1f}ms "
+          f"({rec['n_replayed']} replayed), bit_exact="
+          f"{rec['bit_exact_recovery']}, double_folds={rec['double_folds']},"
+          f" new_executors={rec['new_executors']}")
+    serve_chaos = serving_chaos_check(specs, r_max)
+    print(f"# publish chaos: {serve_chaos['publish_failures']} injected "
+          f"failures, torn_snapshot={serve_chaos['torn_snapshot']}, "
+          f"recovered_publish={serve_chaos['recovered_publish']}")
 
     if args.json:
         payload = bench_payload(
@@ -332,6 +477,8 @@ def main(argv=None):
                 "wire_reduction_int8_at_scale": reduction,
                 "retrace": retrace,
                 "obs_overhead": obs_row,
+                "recovery": rec,
+                "serving_chaos": serve_chaos,
             })
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)
@@ -366,6 +513,27 @@ def main(argv=None):
                 f"(+{obs_row['t_enabled_ms'] - obs_row['t_disabled_ms']:.2f}"
                 f"ms) past {OBS_OVERHEAD_FRAC * 100:.0f}% "
                 f"+ {OBS_OVERHEAD_ABS_S * 1e3:.0f}ms")
+        # chaos gate (docs/durability.md): exactly-once, bit-exact,
+        # no torn serving, no recovery retraces
+        if rec["double_folds"]:
+            failures.append(
+                f"{rec['double_folds']} redelivered uploads double-folded "
+                "past the dedup window")
+        if not rec["bit_exact_recovery"]:
+            failures.append(
+                "crash recovery diverged from the uninterrupted run "
+                "(must be bit-exact for incremental strategies)")
+        if rec["new_executors"]:
+            failures.append(
+                f"crash recovery re-traced {rec['new_executors']} fold "
+                "executors (registry singleton must keep plans warm)")
+        if serve_chaos["torn_snapshot"]:
+            failures.append(
+                "a failed publish tore the serving snapshot (readers must "
+                "stay on the last committed version)")
+        if not serve_chaos["recovered_publish"]:
+            failures.append(
+                "publish retry never landed after the fault cleared")
         if failures:
             for msg in failures:
                 print(f"# SMOKE FAIL: {msg}")
@@ -373,7 +541,9 @@ def main(argv=None):
         print("# smoke gate OK: codec parity within tolerance, int8 wire "
               f"reduction >= {WIRE_GATE_REDUCTION}x, zero retraces on "
               "codec-mix alternation, metrics overhead within "
-              f"{OBS_OVERHEAD_FRAC * 100:.0f}%")
+              f"{OBS_OVERHEAD_FRAC * 100:.0f}%, chaos gate clean "
+              "(exactly-once, bit-exact recovery, no torn serving "
+              "snapshots, zero recovery retraces)")
     return 0
 
 

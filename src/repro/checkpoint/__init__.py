@@ -1,3 +1,5 @@
-from .io import restore, save
+from .io import (CheckpointError, atomic_write_bytes, load_blob, pack_obj,
+                 restore, save, save_blob, unpack_obj)
 
-__all__ = ["restore", "save"]
+__all__ = ["restore", "save", "CheckpointError", "pack_obj", "unpack_obj",
+           "save_blob", "load_blob", "atomic_write_bytes"]

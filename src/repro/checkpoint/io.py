@@ -1,14 +1,44 @@
 """Pytree checkpointing: msgpack index + raw .npy payloads.
 
-No orbax in the container; this is a compact, dependency-light format that
-round-trips nested dicts/tuples/lists of jax/numpy arrays and python
-scalars, with optional sharding-aware restore (arrays are placed with
-``jax.device_put`` against a provided sharding tree).
+No orbax in the container; this is a compact, dependency-light format
+that round-trips nested dicts/tuples/lists of jax/numpy arrays and
+python scalars, with optional sharding-aware restore (arrays are placed
+with ``jax.device_put`` against a provided sharding tree).
+
+Durability contract (the async service's crash-recovery layer,
+``repro.fl.durability``, checkpoints through this module -- see
+``docs/durability.md``):
+
+* :func:`save` is **atomic**: payloads go to a uniquely named data file,
+  everything is fsynced, and the index -- the commit point -- is
+  installed with an atomic rename.  A crash at any instant leaves either
+  the previous checkpoint or the new one, never a torn,
+  loadable-looking hybrid.
+* :func:`restore` **validates** before it trusts: every leaf's recorded
+  shape, dtype, kind, and payload checksum must match; a missing path, a
+  size mismatch, or a corrupt payload raises :class:`CheckpointError`
+  naming the leaf instead of silently misreading offsets.
+* The leaf codec round-trips what the service actually holds: bfloat16
+  arrays (numpy's ``.npy`` cannot carry them raw -- stored as a uint16
+  view plus a dtype tag), python ``int`` / ``float`` / ``bool`` scalars
+  (the ``_KIND_SCALAR`` path -- they come back as scalars, not 0-d
+  arrays), and JAX PRNG keys (typed keys via
+  ``jax.random.key_data`` + impl tag; legacy ``uint32`` keys are plain
+  arrays already).
+
+:func:`pack_obj` / :func:`unpack_obj` serialize *self-describing*
+objects (no ``like`` tree needed) -- nested dict / list / tuple /
+scalars / strings / arrays -- which is what the write-ahead log and the
+service snapshots use for variable-structure state (replay windows,
+buffered uploads, flora's segment ledger).  :func:`atomic_write_bytes`
+is the shared rename-commit primitive.
 """
 from __future__ import annotations
 
 import io
 import os
+import uuid
+import zlib
 from typing import Any
 
 import jax
@@ -20,8 +50,119 @@ PyTree = Any
 
 _KIND_ARRAY = 0
 _KIND_SCALAR = 1
+_KIND_KEY = 2
+
+_INDEX = "index.msgpack"
+_FORMAT = 2
 
 
+class CheckpointError(ValueError):
+    """A checkpoint that cannot be trusted: missing/extra leaves, shape or
+    dtype mismatches against the restore target, checksum failures, torn
+    or unparseable files.  Subclasses ``ValueError`` so existing
+    ``except ValueError`` call sites keep working."""
+
+
+# ------------------------------------------------------------ atomic I/O --
+def _fsync_dir(dirname: str) -> None:
+    """Flush directory metadata so a rename survives a crash (no-op on
+    platforms whose dirs cannot be opened)."""
+    try:
+        fd = os.open(dirname, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def atomic_write_bytes(path: str, data: bytes, fsync: bool = True) -> None:
+    """Write ``data`` to ``path`` atomically: temp file in the same
+    directory, flush + fsync, then rename-commit.  Readers see the old
+    contents or the new contents, never a prefix."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    tmp = os.path.join(d, f".tmp-{uuid.uuid4().hex}")
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+    if fsync:
+        _fsync_dir(d)
+
+
+# ------------------------------------------------------------ leaf codec --
+def _is_typed_key(x) -> bool:
+    """New-style jax PRNG key (extended dtype)?"""
+    try:
+        return jnp.issubdtype(jnp.asarray(x).dtype, jax.dtypes.prng_key)
+    except (AttributeError, TypeError):
+        return False
+
+
+def _encode_leaf(leaf) -> tuple[dict, bytes]:
+    """One leaf -> (index entry sans offset, payload bytes)."""
+    if isinstance(leaf, (bool, int, float, str)) and not isinstance(
+            leaf, np.generic):
+        # the _KIND_SCALAR path: python scalars round-trip as python
+        # scalars (state.round, FoldState.mass, service counters), not as
+        # 0-d arrays that would poison ``round + 1`` style arithmetic
+        # with device transfers
+        return {"kind": _KIND_SCALAR, "value": leaf,
+                "pykind": type(leaf).__name__}, b""
+    if _is_typed_key(leaf):
+        impl = str(jax.random.key_impl(leaf))
+        data = np.asarray(jax.random.key_data(leaf))
+        buf = io.BytesIO()
+        np.save(buf, data, allow_pickle=False)
+        raw = buf.getvalue()
+        return {"kind": _KIND_KEY, "impl": impl,
+                "crc": zlib.crc32(raw)}, raw
+    arr = np.asarray(jax.device_get(leaf))
+    logical = str(arr.dtype)
+    if logical == "bfloat16":
+        # np.save writes the dtype descr by name; np.load in a process
+        # that has not registered ml_dtypes would then fail (or worse,
+        # guess).  Store the raw bits as uint16 plus a tag instead.
+        arr = arr.view(np.uint16)
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    raw = buf.getvalue()
+    return {"kind": _KIND_ARRAY, "dtype": logical,
+            "shape": list(arr.shape), "crc": zlib.crc32(raw)}, raw
+
+
+def _decode_leaf(entry: dict, raw: bytes, where: str):
+    """Inverse of :func:`_encode_leaf`; validates the checksum."""
+    kind = entry["kind"]
+    if kind == _KIND_SCALAR:
+        value = entry["value"]
+        py = {"bool": bool, "int": int, "float": float,
+              "str": str}.get(entry.get("pykind", ""), None)
+        return py(value) if py is not None else value
+    crc = entry.get("crc")
+    if crc is not None and zlib.crc32(raw) != crc:
+        raise CheckpointError(
+            f"{where}: payload checksum mismatch (corrupt or torn "
+            "checkpoint data)")
+    try:
+        arr = np.load(io.BytesIO(raw), allow_pickle=False)
+    except Exception as e:
+        raise CheckpointError(f"{where}: unreadable payload ({e})") from e
+    if kind == _KIND_KEY:
+        key = jax.random.wrap_key_data(jnp.asarray(arr))
+        if str(jax.random.key_impl(key)) != entry["impl"]:
+            key = jax.random.wrap_key_data(jnp.asarray(arr),
+                                           impl=entry["impl"])
+        return key
+    if entry.get("dtype") == "bfloat16":
+        return jax.lax.bitcast_convert_type(jnp.asarray(arr), jnp.bfloat16)
+    return jnp.asarray(arr)
+
+
+# ------------------------------------------------------- path-index save --
 def _flatten_with_paths(tree: PyTree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
@@ -31,42 +172,198 @@ def _flatten_with_paths(tree: PyTree):
 
 
 def save(path: str, tree: PyTree) -> None:
+    """Atomically checkpoint ``tree`` under directory ``path``.
+
+    Payloads land in a fresh ``data-<token>.bin``; the index rename is
+    the commit point, after which stale data files are pruned.  A crash
+    anywhere in between leaves the previous checkpoint fully loadable.
+    """
     os.makedirs(path, exist_ok=True)
     paths, leaves, _ = _flatten_with_paths(tree)
+    token = uuid.uuid4().hex[:12]
+    data_name = f"data-{token}.bin"
     index = []
-    with open(os.path.join(path, "data.bin"), "wb") as f:
+    with open(os.path.join(path, data_name), "wb") as f:
         for p, leaf in zip(paths, leaves):
-            arr = np.asarray(leaf)
-            buf = io.BytesIO()
-            np.save(buf, arr, allow_pickle=False)
-            raw = buf.getvalue()
-            index.append({"path": p, "offset": f.tell(), "size": len(raw),
-                          "kind": _KIND_ARRAY})
+            entry, raw = _encode_leaf(leaf)
+            entry.update(path=p, offset=f.tell(), size=len(raw))
+            index.append(entry)
             f.write(raw)
-    with open(os.path.join(path, "index.msgpack"), "wb") as f:
-        f.write(msgpack.packb({"leaves": index}))
+        f.flush()
+        os.fsync(f.fileno())
+    atomic_write_bytes(
+        os.path.join(path, _INDEX),
+        msgpack.packb({"format": _FORMAT, "data": data_name,
+                       "leaves": index}))
+    for name in os.listdir(path):          # prune superseded data files
+        if name.startswith("data-") and name != data_name:
+            try:
+                os.remove(os.path.join(path, name))
+            except OSError:
+                pass
+
+
+def _load_index(path: str) -> dict:
+    index_path = os.path.join(path, _INDEX)
+    if not os.path.exists(index_path):
+        raise CheckpointError(f"no checkpoint index at {index_path}")
+    try:
+        with open(index_path, "rb") as f:
+            index = msgpack.unpackb(f.read())
+    except Exception as e:
+        raise CheckpointError(
+            f"unreadable checkpoint index {index_path} ({e})") from e
+    if not isinstance(index, dict) or "leaves" not in index:
+        raise CheckpointError(f"malformed checkpoint index {index_path}")
+    return index
 
 
 def restore(path: str, like: PyTree, shardings: PyTree | None = None
             ) -> PyTree:
-    """Restore into the structure of ``like`` (shape/dtype checked)."""
-    with open(os.path.join(path, "index.msgpack"), "rb") as f:
-        index = msgpack.unpackb(f.read())["leaves"]
-    by_path = {e["path"]: e for e in index}
+    """Restore into the structure of ``like``.
+
+    Every leaf is validated before it is trusted: the stored entry must
+    exist for each of ``like``'s paths, array shapes and dtypes must
+    match exactly (no silent cast), python scalars come back through the
+    ``_KIND_SCALAR`` path as scalars, and payload checksums must verify.
+    Any mismatch raises :class:`CheckpointError` naming the leaf.
+    """
+    index = _load_index(path)
+    by_path = {e["path"]: e for e in index["leaves"]}
+    data_name = index.get("data", "data.bin")
     paths, leaves, treedef = _flatten_with_paths(like)
+    missing = [p for p in paths if p not in by_path]
+    if missing:
+        raise CheckpointError(
+            f"checkpoint {path} is missing leaves {missing[:5]}"
+            f"{'...' if len(missing) > 5 else ''} (have "
+            f"{len(by_path)}, want {len(paths)})")
     shard_leaves = (jax.tree_util.tree_leaves(shardings)
                     if shardings is not None else [None] * len(leaves))
+    data_path = os.path.join(path, data_name)
+    if not os.path.exists(data_path):
+        raise CheckpointError(
+            f"checkpoint {path}: index references missing payload file "
+            f"{data_name}")
     out = []
-    with open(os.path.join(path, "data.bin"), "rb") as f:
+    with open(data_path, "rb") as f:
+        size = os.fstat(f.fileno()).st_size
         for p, leaf, shard in zip(paths, leaves, shard_leaves):
             e = by_path[p]
+            if e["offset"] + e["size"] > size:
+                raise CheckpointError(
+                    f"{p}: payload extends past end of {data_name} "
+                    "(truncated checkpoint)")
             f.seek(e["offset"])
-            arr = np.load(io.BytesIO(f.read(e["size"])),
-                          allow_pickle=False)
-            want = np.asarray(leaf)
-            if arr.shape != want.shape:
-                raise ValueError(f"{p}: shape {arr.shape} != {want.shape}")
-            arr = arr.astype(want.dtype)
-            out.append(jax.device_put(arr, shard) if shard is not None
-                       else jnp.asarray(arr))
+            raw = f.read(e["size"])
+            value = _decode_leaf(e, raw, where=p)
+            want = leaf
+            if e["kind"] == _KIND_ARRAY:
+                if isinstance(want, (bool, int, float)) and not isinstance(
+                        want, np.generic):
+                    raise CheckpointError(
+                        f"{p}: stored an array but restore target is a "
+                        f"python {type(want).__name__}")
+                want_arr = np.asarray(want)
+                got_shape = tuple(value.shape)
+                if got_shape != want_arr.shape:
+                    raise CheckpointError(
+                        f"{p}: shape {got_shape} != {want_arr.shape}")
+                if str(e.get("dtype")) != str(want_arr.dtype):
+                    raise CheckpointError(
+                        f"{p}: dtype {e.get('dtype')} != "
+                        f"{want_arr.dtype} (restore never casts "
+                        "silently)")
+            out.append(jax.device_put(value, shard)
+                       if shard is not None else value)
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------- self-describing blob codec --
+_T_NONE, _T_PY, _T_STR, _T_BYTES = "n", "p", "s", "y"
+_T_DICT, _T_LIST, _T_TUPLE, _T_ARR = "d", "l", "t", "a"
+
+
+def _enc(obj):
+    if obj is None:
+        return (_T_NONE,)
+    if isinstance(obj, (bool, int, float)) and not isinstance(
+            obj, np.generic):
+        return (_T_PY, obj, type(obj).__name__)
+    if isinstance(obj, str):
+        return (_T_STR, obj)
+    if isinstance(obj, bytes):
+        return (_T_BYTES, obj)
+    if isinstance(obj, dict):
+        return (_T_DICT, [[k, _enc(v)] for k, v in obj.items()])
+    if isinstance(obj, tuple):
+        return (_T_TUPLE, [_enc(v) for v in obj])
+    if isinstance(obj, list):
+        return (_T_LIST, [_enc(v) for v in obj])
+    entry, raw = _encode_leaf(obj)          # arrays, np scalars, PRNG keys
+    return (_T_ARR, entry, raw)
+
+
+def _dec(node):
+    tag = node[0]
+    if tag == _T_NONE:
+        return None
+    if tag == _T_PY:
+        py = {"bool": bool, "int": int, "float": float}[node[2]]
+        return py(node[1])
+    if tag in (_T_STR, _T_BYTES):
+        return node[1]
+    if tag == _T_DICT:
+        return {k: _dec(v) for k, v in node[1]}
+    if tag == _T_TUPLE:
+        return tuple(_dec(v) for v in node[1])
+    if tag == _T_LIST:
+        return [_dec(v) for v in node[1]]
+    if tag == _T_ARR:
+        return _decode_leaf(node[1], node[2], where="<blob>")
+    raise CheckpointError(f"unknown blob node tag {tag!r}")
+
+
+def pack_obj(obj) -> bytes:
+    """Serialize a self-describing object graph (dict / list / tuple /
+    None / bool / int / float / str / bytes / arrays incl. bfloat16 and
+    PRNG keys) to bytes.  Deterministic for a given object (dict
+    insertion order is preserved)."""
+    return msgpack.packb(_enc(obj), use_bin_type=True)
+
+
+def unpack_obj(data: bytes):
+    """Inverse of :func:`pack_obj` (checksum-validated array payloads)."""
+    try:
+        node = msgpack.unpackb(data, use_list=True, strict_map_key=False)
+    except Exception as e:
+        raise CheckpointError(f"unreadable blob ({e})") from e
+    return _dec(node)
+
+
+def save_blob(path: str, obj, fsync: bool = True) -> int:
+    """Atomically write one :func:`pack_obj` blob with a crc32 trailer;
+    returns the byte size written.  The rename is the commit point."""
+    payload = pack_obj(obj)
+    framed = (len(payload).to_bytes(8, "little")
+              + zlib.crc32(payload).to_bytes(4, "little") + payload)
+    atomic_write_bytes(path, framed, fsync=fsync)
+    return len(framed)
+
+
+def load_blob(path: str):
+    """Read back a :func:`save_blob` file; raises
+    :class:`CheckpointError` on truncation or checksum mismatch."""
+    with open(path, "rb") as f:
+        head = f.read(12)
+        if len(head) < 12:
+            raise CheckpointError(f"{path}: truncated blob header")
+        size = int.from_bytes(head[:8], "little")
+        crc = int.from_bytes(head[8:12], "little")
+        payload = f.read(size)
+    if len(payload) != size:
+        raise CheckpointError(f"{path}: truncated blob payload "
+                              f"({len(payload)} of {size} bytes)")
+    if zlib.crc32(payload) != crc:
+        raise CheckpointError(f"{path}: blob checksum mismatch")
+    return unpack_obj(payload)

@@ -1,9 +1,11 @@
 from repro.core.strategy import ClientUpdate, ServerState, get_strategy
 from .async_agg import (AsyncAggregator, STALENESS_SCHEDULES,
                         make_staleness_fn)
+from .chaos import FaultPlan
 from .client import (LocalFitResult, make_local_fit, merge_base_params,
                      softmax_xent, split_base_params)
-from .comm import BufferedUpdate, UpdateBuffer
+from .comm import BufferedUpdate, DedupWindow, RetryPolicy, UpdateBuffer
+from .durability import DurableAggregator, WriteAheadLog
 from .selection import ClientLatencyModel, select_clients
 from .server import aggregate_adapters, aggregate_base, stack_trees
 from .simulator import (AsyncFLConfig, FLConfig, FLHistory,
@@ -16,4 +18,5 @@ __all__ = ["LocalFitResult", "make_local_fit", "merge_base_params",
            "ServerState", "get_strategy", "AsyncAggregator",
            "STALENESS_SCHEDULES", "make_staleness_fn", "AsyncFLConfig",
            "run_async_simulation", "ClientLatencyModel", "UpdateBuffer",
-           "BufferedUpdate"]
+           "BufferedUpdate", "DedupWindow", "RetryPolicy",
+           "DurableAggregator", "WriteAheadLog", "FaultPlan"]

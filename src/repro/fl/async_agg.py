@@ -60,14 +60,16 @@ from repro.core.codec import (CODECS, UploadValidationError,
 from repro.core.codec import _iter_pairs as _iter_adapter_pairs
 from repro.core.strategy import (ClientUpdate, FoldState, ServerState,
                                  get_strategy)
-from repro.fl.comm import UpdateBuffer, tree_bytes
+from repro.fl.comm import (BufferedUpdate, DedupWindow, UpdateBuffer,
+                           tree_bytes)
 from repro.obs import STALENESS_BUCKETS, get_registry, span
 
 #: the machine-readable rejection reasons ``fl_updates_rejected_total``
-#: counts (see ``docs/observability.md``); every ingestion raise and the
-#: zero-mass flush drop map to exactly one of these
+#: counts (see ``docs/observability.md``); every ingestion raise, the
+#: zero-mass flush drop, and the idempotency dedup map to exactly one
 REJECT_REASONS = ("bad_mass", "codec_not_allowed", "bad_scale",
-                  "overflow", "nan_tensor", "zero_mass_flush")
+                  "overflow", "nan_tensor", "malformed",
+                  "zero_mass_flush", "duplicate")
 
 #: schedule name -> factory(a, b) -> s(tau); all monotone non-increasing
 #: in tau with s(0) == 1 (fresh updates are never discounted)
@@ -172,6 +174,14 @@ class AsyncAggregator:
         PRNG seed for the stochastic-rounding noise.  Folds are
         reproducible: a fixed seed and the same submission sequence
         yield bit-identical accumulators.
+    dedup_window
+        How many recently accepted client ``update_id`` strings the
+        service remembers (:class:`~repro.fl.comm.DedupWindow`).  With
+        at-least-once delivery (client retries, WAL replay) the same
+        logical upload can arrive twice; a ``submit(...,
+        update_id=...)`` whose id is inside the window is dropped as a
+        ``"duplicate"`` instead of double-folding its mass.  Uploads
+        without an id are never deduplicated.
     registry
         The :class:`~repro.obs.MetricsRegistry` this service reports
         into (exposed as :attr:`obs_registry`; ``None`` = the process
@@ -193,6 +203,7 @@ class AsyncAggregator:
                  codecs=CODECS,
                  accum_dtype=None,
                  seed: int = 0,
+                 dedup_window: int = 1024,
                  registry=None):
         if buffer_size < 1:
             raise ValueError(f"buffer_size must be >= 1, got {buffer_size}")
@@ -239,6 +250,7 @@ class AsyncAggregator:
         self.staleness_fn = make_staleness_fn(
             staleness, a=staleness_a, b=staleness_b)
         self.buffer = UpdateBuffer(size=buffer_size, deadline=deadline)
+        self.dedup = DedupWindow(dedup_window)
         self.replay_window = int(replay_window)
         self.on_publish = on_publish
         self.publish_every = int(publish_every)
@@ -317,8 +329,21 @@ class AsyncAggregator:
             raise ValueError(
                 "rejected client update: n_examples must be positive and "
                 f"finite, got {update.n_examples!r}")
-        used = {codec_of_pair(p)
-                for _, p in _iter_adapter_pairs(update.adapters)}
+        used = set()
+        for path, p in _iter_adapter_pairs(update.adapters):
+            used.add(codec_of_pair(p))
+            # structural integrity: a truncated/garbled upload (lost
+            # frames, a proxy cutting the payload short) must be rejected
+            # here, not crash a fused kernel three layers down
+            a, b = jnp.asarray(p["A"]), jnp.asarray(p["B"])
+            if (a.ndim < 2 or b.ndim < 2
+                    or a.shape[-2] != b.shape[-1]):
+                self._reject("malformed")
+                name = "/".join(str(s) for s in path) or "<root>"
+                raise ValueError(
+                    f"rejected client update: truncated or malformed "
+                    f"pair {name}: A {tuple(a.shape)} / B "
+                    f"{tuple(b.shape)} do not share a rank axis")
         bad = sorted(used - set(self.codecs))
         if bad:
             self._reject("codec_not_allowed")
@@ -345,7 +370,8 @@ class AsyncAggregator:
         return used
 
     def submit(self, update: ClientUpdate, model_version: int | None = None,
-               now: float = 0.0, pulled_at: float | None = None) -> bool:
+               now: float = 0.0, pulled_at: float | None = None,
+               update_id: str | None = None) -> bool:
         """Receive one client update; fold or buffer it.
 
         Staleness follows :attr:`staleness_clock`: on ``"version"`` it is
@@ -356,11 +382,25 @@ class AsyncAggregator:
         clock -- clamps to 0 rather than *inflating* the weight).  ``now``
         is the service clock (any monotone unit), also used for deadline
         flushes.  Malformed updates (non-positive / non-finite
-        ``n_examples``, NaN/inf tensors) raise ``ValueError`` and leave
-        the service untouched.  Returns True when the state advanced.
+        ``n_examples``, NaN/inf tensors, truncated pairs) raise
+        ``ValueError`` and leave the service untouched.
+
+        ``update_id`` makes ingestion **idempotent** under at-least-once
+        delivery: a client-supplied id already inside the
+        :class:`~repro.fl.comm.DedupWindow` is dropped (counted under
+        rejection reason ``"duplicate"``, returns False) so a network
+        retry or a WAL replay can never fold the same upload twice.  Ids
+        are remembered only for *accepted* uploads -- a retry of a
+        previously rejected payload gets a fresh chance.  Returns True
+        when the state advanced.
         """
+        if update_id is not None and update_id in self.dedup:
+            self._reject("duplicate")
+            return False
         with span("submit", registry=self.obs_registry):
             used = self._validate_update(update)
+            if update_id is not None:
+                self.dedup.add(update_id)
             if self.staleness_clock == "wall":
                 tau = (0.0 if pulled_at is None
                        else max(0.0, float(now) - float(pulled_at)))
@@ -565,6 +605,88 @@ class AsyncAggregator:
         if self._fold_state.momentum is not None:
             self._fold_state.momentum = jax.tree.map(
                 up, self._fold_state.momentum)
+
+    # ------------------------------------------------ durable state (WAL) --
+    #: service counters captured in (and restored from) a snapshot
+    _COUNTERS = ("n_received", "n_folded", "n_flushes", "n_dropped",
+                 "n_published", "staleness_sum", "wire_bytes_received")
+
+    def state_dict(self) -> dict:
+        """Everything a crash-recovery snapshot must carry to resume
+        **bit-identically**: the live :class:`ServerState`, the fold
+        accumulator (masses, flora's segment ledger, the momentum
+        buffer), the replay anchor and window, buffered uploads, the
+        stochastic-rounding PRNG key, the idempotency dedup window, and
+        the service counters.  Plain dict/list/array structure, ready for
+        :func:`repro.checkpoint.pack_obj`; see
+        :mod:`repro.fl.durability`."""
+
+        def st(s: ServerState) -> dict:
+            return {"adapters": s.adapters,
+                    "base_trainable": s.base_trainable,
+                    "round": int(s.round), "r_max": s.r_max,
+                    "client_ranks": s.client_ranks,
+                    "current_rank": s.current_rank}
+
+        def upd(u: ClientUpdate) -> dict:
+            return {"adapters": u.adapters,
+                    "base_trainable": u.base_trainable,
+                    "n_examples": float(u.n_examples), "rank": u.rank}
+
+        fs = self._fold_state
+        return {
+            "format": 1,
+            "state": st(self.state),
+            "anchor": st(self._anchor),
+            "fold": {"mass": float(fs.mass), "row_mass": fs.row_mass,
+                     "n_folds": int(fs.n_folds), "extra": fs.extra,
+                     "momentum": fs.momentum},
+            "replay": [[upd(u), float(w)] for u, w in self._replay],
+            "buffer": [{"update": upd(b.update), "weight": b.weight,
+                        "staleness": b.staleness, "arrived": b.arrived,
+                        "wire_bytes": b.wire_bytes}
+                       for b in self.buffer._items],
+            "prng_key": self._prng_key,
+            "dedup": self.dedup.state_dict(),
+            "counters": {k: getattr(self, k) for k in self._COUNTERS},
+        }
+
+    def load_state_dict(self, sd: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot into this service (same
+        strategy/config as the service that wrote it)."""
+
+        def st(d: dict) -> ServerState:
+            return ServerState(adapters=d["adapters"],
+                               base_trainable=d["base_trainable"],
+                               round=d["round"], r_max=d["r_max"],
+                               client_ranks=d["client_ranks"],
+                               current_rank=d["current_rank"])
+
+        def upd(d: dict) -> ClientUpdate:
+            return ClientUpdate(adapters=d["adapters"],
+                                base_trainable=d["base_trainable"],
+                                n_examples=d["n_examples"],
+                                rank=d["rank"])
+
+        self.state = st(sd["state"])
+        self._anchor = st(sd["anchor"])
+        f = sd["fold"]
+        self._fold_state = FoldState(mass=f["mass"],
+                                     row_mass=f["row_mass"],
+                                     n_folds=f["n_folds"],
+                                     extra=f["extra"],
+                                     momentum=f["momentum"])
+        self._replay = [(upd(u), w) for u, w in sd["replay"]]
+        self.buffer._items = [
+            BufferedUpdate(update=upd(b["update"]), weight=b["weight"],
+                           staleness=b["staleness"], arrived=b["arrived"],
+                           wire_bytes=b["wire_bytes"])
+            for b in sd["buffer"]]
+        self._prng_key = jnp.asarray(sd["prng_key"])
+        self.dedup.load_state_dict(sd["dedup"])
+        for k in self._COUNTERS:
+            setattr(self, k, sd["counters"][k])
+        self._m_buffer_depth.set(len(self.buffer))
 
     # ---------------------------------------------------------- reporting --
     def mean_staleness(self) -> float:

@@ -22,7 +22,8 @@ through :mod:`repro.obs` -- see ``docs/observability.md``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping
+from collections import OrderedDict
+from typing import Any, Iterable, Mapping
 
 import jax
 import numpy as np
@@ -30,6 +31,97 @@ import numpy as np
 from repro.lora import is_pair, tree_map_pairs
 
 PyTree = Any
+
+
+# ------------------------------------------------- idempotent ingestion --
+class DedupWindow:
+    """Sliding window of recently seen client ``update_id`` strings.
+
+    At-least-once delivery (client retries, WAL replay after a crash)
+    means the server can receive the same logical upload twice; folding
+    it twice double-counts its mass.  The window remembers the last
+    ``size`` *accepted* ids so a redelivery inside the window is
+    recognized and folded exactly once.  A duplicate arriving after its
+    id has been evicted is indistinguishable from a new upload -- size
+    the window to cover the longest plausible retry horizon (ids are
+    small strings; 10k ids is a few hundred KB).
+
+    The window is part of the durable service snapshot
+    (:mod:`repro.fl.durability`): recovery restores it so WAL records
+    replayed over a checkpoint that already contains them cannot
+    double-fold.
+    """
+
+    def __init__(self, size: int = 1024):
+        if size < 1:
+            raise ValueError(f"dedup window size must be >= 1, got {size}")
+        self.size = int(size)
+        self._seen: OrderedDict[str, None] = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._seen)
+
+    def __contains__(self, update_id: str) -> bool:
+        return str(update_id) in self._seen
+
+    def add(self, update_id: str) -> None:
+        """Mark one id seen (moves it to most-recent on re-add)."""
+        uid = str(update_id)
+        self._seen.pop(uid, None)
+        self._seen[uid] = None
+        while len(self._seen) > self.size:
+            self._seen.popitem(last=False)
+
+    def state_dict(self) -> list:
+        """Oldest-first id list for the durable snapshot."""
+        return list(self._seen)
+
+    def load_state_dict(self, ids: Iterable[str]) -> None:
+        self._seen.clear()
+        for uid in ids:
+            self.add(uid)
+
+
+class RetryPolicy:
+    """Jittered exponential backoff for client re-uploads.
+
+    ``delay(attempt)`` is the wait before retry ``attempt`` (0-based):
+    ``base * factor**attempt``, capped at ``max_delay``, times a uniform
+    jitter in ``[1 - jitter, 1 + jitter]`` -- the jitter decorrelates a
+    thundering herd of clients retrying a flaky server in lockstep.
+    Deterministic: the jitter stream is seeded, and ``attempt`` indexes
+    it, so a simulator replays identical schedules.  ``give_up(attempt)``
+    is True once ``max_retries`` is exhausted.
+    """
+
+    def __init__(self, base: float = 1.0, factor: float = 2.0,
+                 max_delay: float = 60.0, max_retries: int = 5,
+                 jitter: float = 0.1, seed: int = 0):
+        if base <= 0 or factor < 1.0 or max_delay <= 0:
+            raise ValueError(
+                f"need base > 0, factor >= 1, max_delay > 0; got "
+                f"base={base}, factor={factor}, max_delay={max_delay}")
+        if not 0.0 <= jitter < 1.0:
+            raise ValueError(f"jitter must be in [0, 1), got {jitter}")
+        self.base = float(base)
+        self.factor = float(factor)
+        self.max_delay = float(max_delay)
+        self.max_retries = int(max_retries)
+        self.jitter = float(jitter)
+        self.seed = int(seed)
+
+    def give_up(self, attempt: int) -> bool:
+        return attempt >= self.max_retries
+
+    def delay(self, attempt: int, salt: int = 0) -> float:
+        """Backoff before 0-based retry ``attempt`` (``salt`` decorrelates
+        independent clients sharing one policy)."""
+        d = min(self.base * self.factor ** max(attempt, 0), self.max_delay)
+        if self.jitter:
+            rng = np.random.default_rng(
+                (self.seed, int(salt), int(attempt)))
+            d *= 1.0 + self.jitter * float(rng.uniform(-1.0, 1.0))
+        return d
 
 
 # ---------------------------------------------------- semi-async buffering --

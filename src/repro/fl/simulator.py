@@ -38,8 +38,11 @@ import numpy as np
 from repro.core.strategy import ClientUpdate, ServerState, get_strategy
 from repro.data import make_dataset, staircase_partition
 from repro.fl.async_agg import AsyncAggregator
+from repro.fl.chaos import FaultPlan
 from repro.fl.client import (make_local_fit, merge_base_params,
                              split_base_params)
+from repro.fl.comm import RetryPolicy
+from repro.fl.durability import DurableAggregator
 from repro.fl.selection import ClientLatencyModel, select_clients
 from repro.lora import init_adapters, set_ranks
 from repro.models.paper_nets import PAPER_MODELS
@@ -100,6 +103,15 @@ class AsyncFLConfig(FLConfig):
                                        # (None -> rounds * n_clients)
     eval_every: int | None = None      # eval cadence in uploads
                                        # (None -> n_clients)
+    # -- durability (docs/durability.md): a wal_dir makes the server a
+    # DurableAggregator (journal + periodic checkpoints); crash-restart
+    # faults require it.  fsync is off in simulation: the fault model is
+    # process crashes, and the event loop is hot.
+    wal_dir: str | None = None
+    checkpoint_every: int = 64         # accepted uploads per snapshot
+    dedup_window: int = 1024           # update_id memory (idempotency)
+    retry_base_s: float = 0.5          # client re-upload backoff (see
+    retry_max: int = 4                 # repro.fl.comm.RetryPolicy)
 
 
 @dataclass
@@ -243,8 +255,8 @@ def run_simulation(cfg: FLConfig, verbose: bool = False) -> FLHistory:
     return hist
 
 
-def run_async_simulation(cfg: AsyncFLConfig,
-                         verbose: bool = False) -> FLHistory:
+def run_async_simulation(cfg: AsyncFLConfig, verbose: bool = False,
+                         fault_plan: FaultPlan | None = None) -> FLHistory:
     """Event-driven FLaaS loop: clients report on their own clocks.
 
     Each client perpetually (pull global -> local fit -> upload); the
@@ -253,15 +265,41 @@ def run_async_simulation(cfg: AsyncFLConfig,
     staleness discount.  Stops after ``total_updates`` uploads; evaluates
     every ``eval_every`` uploads, logging the simulated clock and the
     interval's mean staleness alongside accuracy.
+
+    With ``cfg.wal_dir`` set the server is a :class:`DurableAggregator`
+    (journal + periodic checkpoints); every upload carries a client
+    ``update_id``, so redeliveries fold exactly once.  ``fault_plan``
+    injects the :mod:`repro.fl.chaos` fault set: dropped uploads are
+    retried under the config's :class:`~repro.fl.comm.RetryPolicy` with
+    the same id, duplicates/corruption/truncation bounce off the dedup
+    window and the ingestion front door, stale pulls train on obsolete
+    globals, and ``crash_at`` points tear the server down mid-stream and
+    recover it from the WAL -- the run completes either way.
     """
     rig = _build_sim(cfg)
     clients = rig.clients
-    agg = AsyncAggregator(
-        rig.strategy, rig.state, staleness=cfg.staleness,
-        staleness_a=cfg.staleness_a, staleness_b=cfg.staleness_b,
-        staleness_clock=cfg.staleness_clock,
+    agg_kw = dict(
+        staleness=cfg.staleness, staleness_a=cfg.staleness_a,
+        staleness_b=cfg.staleness_b, staleness_clock=cfg.staleness_clock,
         buffer_size=cfg.buffer_size, deadline=cfg.buffer_deadline_s,
-        backend=cfg.agg_backend)
+        backend=cfg.agg_backend, dedup_window=cfg.dedup_window)
+
+    def make_agg():
+        if cfg.wal_dir is not None:
+            return DurableAggregator(
+                rig.strategy, rig.state, dir=cfg.wal_dir,
+                checkpoint_every=cfg.checkpoint_every, wal_fsync=False,
+                **agg_kw)
+        return AsyncAggregator(rig.strategy, rig.state, **agg_kw)
+
+    plan = fault_plan
+    if plan is not None and plan.crash_at and cfg.wal_dir is None:
+        raise ValueError(
+            "FaultPlan.crash_at needs cfg.wal_dir: crash-restart recovery "
+            "only exists for a DurableAggregator")
+    agg = make_agg()
+    retry = RetryPolicy(base=cfg.retry_base_s, max_retries=cfg.retry_max,
+                        seed=cfg.seed)
     latency = ClientLatencyModel(
         cfg.n_clients, median_s=cfg.latency_median_s,
         sigma=cfg.latency_sigma, straggler_sigma=cfg.straggler_sigma,
@@ -270,24 +308,51 @@ def run_async_simulation(cfg: AsyncFLConfig,
     total = cfg.total_updates or cfg.rounds * cfg.n_clients
     eval_every = cfg.eval_every or cfg.n_clients
     rng = np.random.default_rng(cfg.seed)
-    # (done_time, tiebreak, client, version, pull_time, snapshot)
+    # (done_time, tiebreak, client, version, pull_time, payload, uid,
+    #  attempt) -- payload is the pulled snapshot on attempt 0 and the
+    # already-trained ClientUpdate on retries (the client retransmits the
+    # same upload, it does not retrain)
     heap: list = []
     seq = 0
+    n_uploads = 0                  # upload ids handed out (-> update_id)
+    past: list = []                # recent pulls for stale_pull faults
+    crashed: set[int] = set()
 
     def dispatch(ci: int, now: float) -> None:
-        nonlocal seq
+        nonlocal seq, n_uploads
         # the client trains on the global it pulls NOW; by the time its
         # update lands the server may have moved on -- that gap is the
         # staleness the aggregator discounts (in versions or sim-seconds,
         # per cfg.staleness_clock)
+        uid = n_uploads
+        n_uploads += 1
+        version = agg.version
+        adapters, base = agg.state.adapters, agg.state.base_trainable
+        if plan is not None:
+            past.append((version, adapters, base))
+            del past[:-8]
+            if plan.stale_pull(uid):
+                version, adapters, base = past[0]   # oldest retained pull
         local_ad = None
         if rig.mode == "lora":
-            local_ad = set_ranks(agg.state.adapters, clients[ci].rank,
+            local_ad = set_ranks(adapters, clients[ci].rank,
                                  r_storage=cfg.r_max)
-        snapshot = (local_ad, agg.state.base_trainable)
-        heapq.heappush(heap, (now + latency.sample(ci), seq, ci,
-                              agg.version, now, snapshot))
+        delay = latency.sample(ci)
+        if plan is not None and plan.reorder(uid):
+            delay += plan.reorder_delay_s
+        heapq.heappush(heap, (now + delay, seq, ci, version, now,
+                              (local_ad, base), uid, 0))
         seq += 1
+
+    def deliver(upd, version, now, pulled_at, uid) -> None:
+        """One delivery attempt through the ingestion front door; a
+        rejection (poisoned tensors, truncated pairs, duplicate id) is
+        counted by the aggregator and otherwise final."""
+        try:
+            agg.submit(upd, model_version=version, now=now,
+                       pulled_at=pulled_at, update_id=f"u{uid}")
+        except ValueError:
+            pass
 
     for ci in range(cfg.n_clients):
         dispatch(ci, 0.0)
@@ -299,26 +364,60 @@ def run_async_simulation(cfg: AsyncFLConfig,
     received = 0
     t_wall = time.time()
     while received < total:
-        (now, _, ci, version, pulled_at,
-         (local_ad, base_snap)) = heapq.heappop(heap)
+        (now, _, ci, version, pulled_at, payload, uid,
+         attempt) = heapq.heappop(heap)
         # a buffered deadline may fall before this arrival: honor it at
         # its own simulated time, not piggy-backed on the next upload
         due_t = agg.next_deadline()
         if due_t is not None and due_t < now:
             agg.maybe_flush(now=due_t)
-        c = clients[ci]
-        fit_key = jax.random.PRNGKey(int(rng.integers(0, 2 ** 31)))
-        res = rig.local_fit(rig.frozen_base, base_snap, local_ad,
-                            rig.client_x[ci], rig.client_y[ci],
-                            jnp.asarray(c.n, jnp.int32), fit_key)
-        agg.submit(ClientUpdate(
-            adapters=res.adapters if rig.mode == "lora" else None,
-            base_trainable=res.base_trainable,
-            n_examples=float(max(c.n, 1)), rank=c.rank),
-            model_version=version, now=now, pulled_at=pulled_at)
-        losses.append(float(res.loss))
+        if attempt == 0:
+            local_ad, base_snap = payload
+            c = clients[ci]
+            fit_key = jax.random.PRNGKey(int(rng.integers(0, 2 ** 31)))
+            res = rig.local_fit(rig.frozen_base, base_snap, local_ad,
+                                rig.client_x[ci], rig.client_y[ci],
+                                jnp.asarray(c.n, jnp.int32), fit_key)
+            losses.append(float(res.loss))
+            upd = ClientUpdate(
+                adapters=res.adapters if rig.mode == "lora" else None,
+                base_trainable=res.base_trainable,
+                n_examples=float(max(c.n, 1)), rank=c.rank)
+            if plan is not None:
+                if plan.corrupt(uid):
+                    upd = plan.corrupt_update(upd)
+                elif plan.truncate(uid):
+                    upd = plan.truncate_update(upd)
+        else:
+            upd = payload           # retransmission of the same upload
+        if plan is not None and plan.drop(uid, attempt):
+            if not retry.give_up(attempt):
+                # lost in transit: the client re-uploads the SAME update
+                # (same id) after a jittered backoff
+                heapq.heappush(heap, (now + retry.delay(attempt, salt=uid),
+                                      seq, ci, version, pulled_at, upd,
+                                      uid, attempt + 1))
+                seq += 1
+                continue            # nothing reached the server yet
+            # retries exhausted: the upload is lost for good; the client
+            # moves on to its next round (counts toward total so chaos
+            # runs still terminate)
+        else:
+            deliver(upd, version, now, pulled_at, uid)
+            if plan is not None and plan.duplicate(uid):
+                # transport redelivery: the dedup window must fold it
+                # exactly once (rejected as "duplicate")
+                deliver(upd, version, now, pulled_at, uid)
         received += 1
         dispatch(ci, now)
+        if (plan is not None and cfg.wal_dir is not None
+                and plan.crash_now(received) and received not in crashed):
+            # server crash-restart: drop the in-memory aggregator on the
+            # floor and recover from checkpoint + WAL.  In-flight client
+            # uploads (the heap) survive -- clients are other machines.
+            crashed.add(received)
+            agg.close()
+            agg = make_agg()
 
         if received % eval_every == 0 or received == total:
             if received == total:

@@ -29,6 +29,12 @@ _SERVE_REQUESTS = _obs_registry().counter(
     "serving_requests_total", "request rows served (per adapted layer)")
 _SERVE_BATCHES = _obs_registry().counter(
     "serving_batches_total", "batched kernel launches (one per layer)")
+_PUBLISH_FAILURES = _obs_registry().counter(
+    "serving_publish_failures_total",
+    "hot-swap publishes that raised (readers kept the last snapshot)")
+_PUBLISH_QUARANTINED = _obs_registry().gauge(
+    "serving_publish_quarantined",
+    "1 while the publish path is backing off after failures")
 
 PyTree = Any
 
@@ -65,6 +71,14 @@ class ServingEngine:
         self.store = store
         self.impl = impl
         self.interpret = interpret
+        # publish-failure quarantine state (see :meth:`publisher`):
+        # the newest adapter tree a failed hot-swap left unpublished,
+        # how many consecutive attempts have failed, and how many more
+        # publish opportunities to skip before the next retry
+        self._publish_pending: PyTree | None = None
+        self._publish_fail_streak = 0
+        self._publish_skip = 0
+        self.n_publish_failures = 0
 
     # ------------------------------------------------------------- read --
     def snapshot(self) -> StoreSnapshot:
@@ -110,13 +124,52 @@ class ServingEngine:
         store (see :meth:`AdapterStore.publish`); returns the version."""
         return self.store.publish(tree)
 
-    def publisher(self) -> Callable:
+    def publisher(self, max_backoff: int = 8) -> Callable:
         """An ``on_publish`` hook for :class:`~repro.fl.AsyncAggregator`:
         called with each advanced :class:`~repro.core.ServerState`, swaps
-        its adapters into the live store."""
+        its adapters into the live store.
+
+        **Degrades gracefully** when the store rejects a swap (a flaky
+        backing volume, an injected :class:`~repro.fl.chaos.FaultPlan`
+        fault): the failed tree is quarantined -- readers keep serving
+        the last *committed* :class:`StoreSnapshot`, which a failed
+        ``AdapterStore.publish`` never tears -- and the hook retries on a
+        later publish opportunity with exponential backoff (skip 1, 2,
+        4, ... up to ``max_backoff`` opportunities).  Each retry carries
+        the **newest** pending state, not the one that failed: serving an
+        old global after several folds would re-widen the very staleness
+        gap aggregation just closed.  Failures count under
+        ``serving_publish_failures_total``;
+        ``serving_publish_quarantined`` is 1 while backing off.
+        """
+        if max_backoff < 1:
+            raise ValueError(
+                f"max_backoff must be >= 1, got {max_backoff}")
+
         def _publish(state) -> None:
             if state.adapters is not None:
-                self.publish(state.adapters)
+                # latest-wins: a newer aggregate supersedes whatever a
+                # failed attempt left in quarantine
+                self._publish_pending = state.adapters
+            if self._publish_pending is None:
+                return
+            if self._publish_skip > 0:
+                self._publish_skip -= 1
+                return
+            try:
+                self.publish(self._publish_pending)
+            except Exception:
+                self.n_publish_failures += 1
+                self._publish_fail_streak += 1
+                self._publish_skip = min(
+                    2 ** (self._publish_fail_streak - 1), max_backoff)
+                _PUBLISH_FAILURES.inc()
+                _PUBLISH_QUARANTINED.set(1)
+                return              # readers stay on the last snapshot
+            self._publish_pending = None
+            self._publish_fail_streak = 0
+            self._publish_skip = 0
+            _PUBLISH_QUARANTINED.set(0)
         return _publish
 
 
